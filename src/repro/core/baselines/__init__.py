@@ -1,0 +1,2 @@
+from repro.core.baselines.backprop import make_backprop_round_step
+from repro.core.baselines.zeroorder import make_zeroorder_round_step

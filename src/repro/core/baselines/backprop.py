@@ -1,0 +1,88 @@
+"""Backpropagation-based FL baselines: FedAvg / FedYogi / FedSGD, plus the
+paper's FedAvgSplit ablation (layer splitting applied to backprop).
+
+Same skeleton as core/spry.py, but clients compute exact gradients with
+jax.grad (reverse-mode -> full activation stack, which is precisely the
+memory cost the paper's Fig. 2 measures against).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.assignment import (
+    assignment_matrix,
+    build_mask_tree,
+    client_counts,
+    enumerate_units,
+)
+from repro.fl.server import server_init, server_update
+from repro.models.registry import get_loss_fn
+from repro.optim import adamw, sgd
+from repro.optim.optimizers import apply_updates
+from repro.utils.pytree import tree_cast
+
+from repro.core.spry import SpryState, init_state  # shared state container
+
+
+def make_backprop_round_step(cfg, spry_cfg, task: str = "cls",
+                             method: str = "fedavg", split: bool = False):
+    """method: fedavg | fedyogi | fedsgd. split=True -> FedAvgSplit ablation."""
+    loss_fn_kind = get_loss_fn(task)
+    M = spry_cfg.n_clients_per_round
+    server_kind = {"fedavg": "fedavg", "fedsgd": "fedsgd",
+                   "fedyogi": "fedyogi"}[method]
+    if spry_cfg.client_opt == "adamw":
+        client_opt = adamw(spry_cfg.local_lr)
+    else:
+        client_opt = sgd(spry_cfg.local_lr)
+
+    def round_step(state: SpryState, batch):
+        base, peft = state.base, state.peft
+        index = enumerate_units(peft)
+        if split:
+            mask_matrix = assignment_matrix(index.n_units, M,
+                                            state.round_idx % M)
+        else:
+            mask_matrix = jnp.ones((M, index.n_units), jnp.float32)
+        counts = client_counts(mask_matrix)
+
+        def client_update(mask_row, client_batch):
+            mask_tree = build_mask_tree(peft, index, mask_row)
+
+            def loss_of(p):
+                return loss_fn_kind(cfg, base, p, client_batch,
+                                    lora_scale=spry_cfg.lora_alpha)
+
+            def local_iter(carry, _):
+                peft_c, opt_state = carry
+                loss, g = jax.value_and_grad(loss_of)(peft_c)
+                g = jax.tree.map(lambda gi, m: gi * m, g, mask_tree)
+                updates, opt_state = client_opt.update(g, opt_state, peft_c)
+                peft_c = apply_updates(peft_c, updates)
+                return (peft_c, opt_state), loss
+
+            (peft_c, _), losses = jax.lax.scan(
+                local_iter, (peft, client_opt.init(peft)),
+                None, length=spry_cfg.local_iters)
+            delta = jax.tree.map(lambda a, b: a - b, peft_c, peft)
+            return delta, losses.mean()
+
+        deltas, losses = jax.vmap(client_update)(mask_matrix, batch)
+
+        count_tree = build_mask_tree(peft, index, counts)
+        count_tree = {
+            g: (jax.tree.map(lambda x: jnp.full_like(x, M), count_tree[g])
+                if g == "head" else count_tree[g])
+            for g in count_tree
+        }
+        delta = jax.tree.map(lambda dm, c: dm.sum(0) / c, deltas, count_tree)
+        lr = 1.0 if server_kind in ("fedavg", "fedsgd") else spry_cfg.server_lr
+        new_peft, server = server_update(server_kind, peft, delta,
+                                         state.server, lr=lr)
+        metrics = {"loss": losses.mean()}
+        return SpryState(base, new_peft, server, state.round_idx + 1), metrics
+
+    return round_step

@@ -1,0 +1,224 @@
+"""SPRY round step (paper Alg. 1) as a single jittable function.
+
+One call = one FL round:
+  1. cyclic unit->client assignment masks (assignment.py)
+  2. per-client seeded perturbations + forward-gradient local training,
+     vmapped over the M simulated clients (client m sees only its own
+     minibatch slice and perturbs only its assigned units)
+  3. weighted-union aggregation of the per-unit deltas (clients that share a
+     unit are averaged, FedAvg-style)
+  4. adaptive server update (FedYogi default) on the effective gradient
+
+The same function lowers for the production mesh: the client axis (M) and
+per-client batch are sharded over ('pod','data'); base weights are
+tensor/2D-sharded over ('model' [, 'data']). See launch/.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.assignment import (
+    assignment_matrix,
+    build_mask_tree,
+    client_counts,
+    enumerate_units,
+)
+from repro.core.forward_grad import forward_gradient
+from repro.fl.server import ServerState, server_init, server_update
+from repro.models.registry import get_loss_fn
+from repro.utils.pytree import tree_cast
+
+
+class SpryState(NamedTuple):
+    base: Any
+    peft: Any
+    server: ServerState
+    round_idx: jnp.ndarray
+
+
+def init_state(base, peft) -> SpryState:
+    peft32 = tree_cast(peft, jnp.float32)
+    return SpryState(base, peft32, server_init(peft32), jnp.zeros([], jnp.int32))
+
+
+def make_round_step(cfg, spry_cfg, task: str = "cls", split: bool = True):
+    """Build the jittable round_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (M, B, S), ...} — leading axis = simulated clients.
+    split=False disables the paper's weight splitting (the FedFGD ablation:
+    every client perturbs ALL trainable units).
+    """
+    loss_fn_kind = get_loss_fn(task)
+    M = spry_cfg.n_clients_per_round
+    K = spry_cfg.k_perturbations
+    lr_l = spry_cfg.local_lr
+
+    def round_step(state: SpryState, batch):
+        base, peft = state.base, state.peft
+        index = enumerate_units(peft)
+        if split:
+            mask_matrix = assignment_matrix(index.n_units, M,
+                                            state.round_idx % M)
+        else:
+            mask_matrix = jnp.ones((M, index.n_units), jnp.float32)
+        counts = client_counts(mask_matrix)                      # (U,)
+        round_key = jax.random.fold_in(
+            jax.random.PRNGKey(spry_cfg.seed), state.round_idx)
+
+        def client_update(client_id, mask_row, client_batch):
+            mask_tree = build_mask_tree(peft, index, mask_row)
+            ckey = jax.random.fold_in(round_key, client_id)
+            mb = spry_cfg.microbatch_size
+
+            def grad_of(peft_c, ikey):
+                if mb is None or mb >= client_batch["tokens"].shape[0]:
+                    def loss_of(p):
+                        return loss_fn_kind(cfg, base, p, client_batch,
+                                            lora_scale=spry_cfg.lora_alpha)
+                    return forward_gradient(loss_of, peft_c, ikey,
+                                            k_perturbations=K,
+                                            mask_tree=mask_tree,
+                                            jvp_clip=spry_cfg.jvp_clip)
+                # gradient accumulation: scan over microbatches, fresh
+                # perturbation per microbatch (each estimate is unbiased for
+                # its microbatch gradient; the average is unbiased for the
+                # full-batch gradient), bounded activation memory
+                B = client_batch["tokens"].shape[0]
+                n_mb = B // mb
+                mb_batch = jax.tree.map(
+                    lambda x: x[: n_mb * mb].reshape((n_mb, mb) + x.shape[1:]),
+                    client_batch)
+
+                def mb_step(acc, xs):
+                    i, one = xs
+                    def loss_of(p):
+                        return loss_fn_kind(cfg, base, p, one,
+                                            lora_scale=spry_cfg.lora_alpha)
+                    loss, g, jvps = forward_gradient(
+                        loss_of, peft_c, jax.random.fold_in(ikey, i),
+                        k_perturbations=K, mask_tree=mask_tree,
+                        jvp_clip=spry_cfg.jvp_clip)
+                    g_acc, loss_acc = acc
+                    g_acc = jax.tree.map(lambda a, b: a + b / n_mb, g_acc, g)
+                    return (g_acc, loss_acc + loss / n_mb), jvps
+
+                g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                  peft_c)
+                (g, loss), jvps = jax.lax.scan(
+                    mb_step, (g0, jnp.float32(0.0)),
+                    (jnp.arange(n_mb), mb_batch))
+                return loss, g, jvps.reshape(-1)[:K]
+
+            def local_iter(carry, it):
+                peft_c = carry
+                ikey = jax.random.fold_in(ckey, it)
+                loss, g, jvps = grad_of(peft_c, ikey)
+                # local SGD on assigned units only (mask already zeroes g
+                # outside the assignment, incl. the always-on head)
+                peft_c = jax.tree.map(lambda p, gi: p - lr_l * gi, peft_c, g)
+                return peft_c, (loss, jvps)
+
+            peft_c, (losses, jvps) = jax.lax.scan(
+                local_iter, peft, jnp.arange(spry_cfg.local_iters))
+            delta = jax.tree.map(lambda a, b: a - b, peft_c, peft)
+            return delta, losses.mean(), jvps
+
+        deltas, losses, jvps = jax.vmap(client_update)(
+            jnp.arange(M), mask_matrix, batch)
+
+        # --- weighted union over clients (paper: FedAvg-style average over
+        # the clients assigned to each unit) ---
+        def agg(leaf_deltas, mask_leaf_count):
+            # leaf_deltas: (M, ...); sum over clients / count per unit
+            return leaf_deltas.sum(0) / mask_leaf_count
+
+        count_tree = build_mask_tree(peft, index, counts)
+        # head is trained by all M clients
+        count_tree = {
+            g: (jax.tree.map(lambda x: jnp.full_like(x, M), count_tree[g])
+                if g == "head" else count_tree[g])
+            for g in count_tree
+        }
+        delta = jax.tree.map(agg, deltas, count_tree)
+
+        new_peft, server = server_update(
+            spry_cfg.server_opt, peft, delta, state.server,
+            lr=spry_cfg.server_lr)
+        metrics = {
+            "loss": losses.mean(),
+            "jvp_abs_mean": jnp.abs(jvps).mean(),
+            "delta_norm": jnp.sqrt(sum(jnp.sum(d * d) for d in jax.tree.leaves(delta))),
+        }
+        return SpryState(base, new_peft, server, state.round_idx + 1), metrics
+
+    return round_step
+
+
+# ---------------------------------------------------------------------------
+# Per-iteration communication mode (paper §3.2): clients send back only the
+# jvp scalar; the server regenerates the perturbations from the shared seed
+# and applies the global update directly.
+# ---------------------------------------------------------------------------
+
+def make_round_step_per_iteration(cfg, spry_cfg, task: str = "cls"):
+    loss_fn_kind = get_loss_fn(task)
+    M = spry_cfg.n_clients_per_round
+    K = spry_cfg.k_perturbations
+
+    def round_step(state: SpryState, batch):
+        base, peft = state.base, state.peft
+        index = enumerate_units(peft)
+        mask_matrix = assignment_matrix(index.n_units, M, state.round_idx % M)
+        counts = client_counts(mask_matrix)
+        round_key = jax.random.fold_in(
+            jax.random.PRNGKey(spry_cfg.seed), state.round_idx)
+
+        # --- client side: one forward-jvp, transmit K scalars ---
+        def client_jvp(client_id, mask_row, client_batch):
+            mask_tree = build_mask_tree(peft, index, mask_row)
+            ckey = jax.random.fold_in(round_key, client_id)
+            ikey = jax.random.fold_in(ckey, 0)
+
+            def loss_of(p):
+                return loss_fn_kind(cfg, base, p, client_batch,
+                                    lora_scale=spry_cfg.lora_alpha)
+
+            loss, _, jvps = forward_gradient(loss_of, peft, ikey,
+                                             k_perturbations=K,
+                                             mask_tree=mask_tree,
+                                             jvp_clip=spry_cfg.jvp_clip)
+            return loss, jvps
+
+        losses, jvps = jax.vmap(client_jvp)(
+            jnp.arange(M), mask_matrix, batch)        # (M,), (M,K)
+
+        # --- server side: regenerate v from the seed, rebuild gradients ---
+        from repro.core.forward_grad import reconstruct_gradient
+
+        def rebuild(client_id, mask_row, jvps_m):
+            mask_tree = build_mask_tree(peft, index, mask_row)
+            ckey = jax.random.fold_in(round_key, client_id)
+            ikey = jax.random.fold_in(ckey, 0)
+            return reconstruct_gradient(peft, ikey, jvps_m, mask_tree)
+
+        grads = jax.vmap(rebuild)(jnp.arange(M), mask_matrix, jvps)
+        count_tree = build_mask_tree(peft, index, counts)
+        count_tree = {
+            g: (jax.tree.map(lambda x: jnp.full_like(x, M), count_tree[g])
+                if g == "head" else count_tree[g])
+            for g in count_tree
+        }
+        grad = jax.tree.map(lambda gm, c: gm.sum(0) / c, grads, count_tree)
+        # server applies the *gradient direction* with its adaptive optimizer
+        delta = jax.tree.map(lambda g: -spry_cfg.local_lr * g, grad)
+        new_peft, server = server_update(
+            spry_cfg.server_opt, peft, delta, state.server,
+            lr=spry_cfg.server_lr)
+        metrics = {"loss": losses.mean(), "jvp_abs_mean": jnp.abs(jvps).mean()}
+        return SpryState(base, new_peft, server, state.round_idx + 1), metrics
+
+    return round_step

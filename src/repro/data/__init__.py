@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticTask, make_task, TASKS
+from repro.data.loader import ClientDataset, batch_iterator

@@ -1,0 +1,4 @@
+from repro.fl.partition import dirichlet_partition, heterogeneity_coefficients
+from repro.fl.server import ServerState, server_init, server_update
+from repro.fl.comm import comm_cost, compute_cost, CommCost, ComputeCost
+from repro.fl.sampling import sample_clients

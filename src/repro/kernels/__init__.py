@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots of SPRY finetuning.
+
+lora_dual/     fused LoRA primal+tangent matmul — the forward-mode AD
+               hot-spot (paper §5.3 jvp overhead, removed on TPU by fusing
+               tangent propagation into the same VMEM-resident pass)
+swa_attention/ sliding-window flash attention (gemma3 / h2o-danube / zamba2)
+wkv6_scan/     RWKV6 data-dependent-decay recurrence, block-parallel over
+               (batch, heads)
+
+Each kernel ships ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp
+oracle). Tests sweep shapes/dtypes in interpret mode (CPU) and assert
+allclose against the oracle; real-TPU deployment flips interpret=False.
+"""

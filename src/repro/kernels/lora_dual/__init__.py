@@ -1,0 +1,2 @@
+from repro.kernels.lora_dual.ops import lora_dual
+from repro.kernels.lora_dual.ref import lora_dual_ref

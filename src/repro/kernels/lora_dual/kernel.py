@@ -1,0 +1,102 @@
+"""Fused LoRA primal+tangent matmul — Pallas TPU kernel.
+
+This is the TPU answer to the paper's §5.3 observation that PyTorch
+Forward-mode AD pays a "column-by-column jvp" overhead: here the tangent
+GEMM shares the VMEM residency of the primal GEMM. One pass over HBM for
+x/xdot/W computes BOTH y and ydot; the rank-r LoRA factors live entirely in
+VMEM scratch across the K-reduction.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" = sequential reduction).
+VMEM blocks are MXU-aligned (multiples of 128 on the matmul dims).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, xd_ref, w_ref, a_ref, ad_ref, b_ref, bd_ref,
+            y_ref, yd_ref,
+            acc_y, acc_yd, acc_u, acc_ud,
+            *, scale: float, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_y[...] = jnp.zeros_like(acc_y)
+        acc_yd[...] = jnp.zeros_like(acc_yd)
+        acc_u[...] = jnp.zeros_like(acc_u)
+        acc_ud[...] = jnp.zeros_like(acc_ud)
+
+    x = x_ref[...]
+    xd = xd_ref[...]
+    w = w_ref[...]
+    acc_y[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc_yd[...] += jnp.dot(xd, w, preferred_element_type=jnp.float32)
+    a = a_ref[...]
+    ad = ad_ref[...]
+    acc_u[...] += jnp.dot(x, a, preferred_element_type=jnp.float32)
+    acc_ud[...] += (jnp.dot(xd, a, preferred_element_type=jnp.float32)
+                    + jnp.dot(x, ad, preferred_element_type=jnp.float32))
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        b = b_ref[...].astype(jnp.float32)
+        bd = bd_ref[...].astype(jnp.float32)
+        u = acc_u[...]
+        ud = acc_ud[...]
+        y = acc_y[...] + scale * jnp.dot(u, b, preferred_element_type=jnp.float32)
+        yd = acc_yd[...] + scale * (
+            jnp.dot(ud, b, preferred_element_type=jnp.float32)
+            + jnp.dot(u, bd, preferred_element_type=jnp.float32))
+        y_ref[...] = y.astype(y_ref.dtype)
+        yd_ref[...] = yd.astype(yd_ref.dtype)
+
+
+def lora_dual_kernel(x, xdot, w, a, adot, b, bdot, *, scale: float,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128, interpret: bool = True):
+    """x/xdot: (M,K); w: (K,N); a/adot: (K,r); b/bdot: (r,N) -> (y, ydot)."""
+    M, K = x.shape
+    N = w.shape[1]
+    r = a.shape[1]
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "caller (ops.py) must pad to block multiples")
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+
+    kernel = functools.partial(_kernel, scale=scale, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),   # xdot
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),   # w
+            pl.BlockSpec((block_k, r), lambda i, j, k: (k, 0)),         # a
+            pl.BlockSpec((block_k, r), lambda i, j, k: (k, 0)),         # adot
+            pl.BlockSpec((r, block_n), lambda i, j, k: (0, j)),         # b
+            pl.BlockSpec((r, block_n), lambda i, j, k: (0, j)),         # bdot
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), x.dtype),
+            jax.ShapeDtypeStruct((M, N), x.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, r), jnp.float32),
+            pltpu.VMEM((block_m, r), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, xdot, w, a, adot, b, bdot)

@@ -1,0 +1,48 @@
+"""jit'd dispatch wrapper: flattens batch dims, pads to block multiples,
+calls the Pallas kernel, unpads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lora_dual.kernel import lora_dual_kernel
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def lora_dual(x, xdot, w, a, adot, b, bdot, scale: float = 1.0,
+              block_m: int = 128, block_n: int = 128, block_k: int = 128,
+              interpret: bool = True):
+    """Fused y = x@W + s(x@A)@B and its jvp. x may have leading batch dims."""
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    xd2 = xdot.reshape(-1, K)
+    M = x2.shape[0]
+
+    x2 = _pad_to(_pad_to(x2, block_m, 0), block_k, 1)
+    xd2 = _pad_to(_pad_to(xd2, block_m, 0), block_k, 1)
+    wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+    ap = _pad_to(a, block_k, 0)
+    adp = _pad_to(adot, block_k, 0)
+    bp = _pad_to(b, block_n, 1)
+    bdp = _pad_to(bdot, block_n, 1)
+
+    y, yd = lora_dual_kernel(x2, xd2, wp, ap, adp, bp, bdp, scale=scale,
+                             block_m=block_m, block_n=block_n,
+                             block_k=block_k, interpret=interpret)
+    y = y[:M, :N].reshape(batch_shape + (N,))
+    yd = yd[:M, :N].reshape(batch_shape + (N,))
+    return y, yd

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused LoRA dual-number (primal+tangent) matmul.
+
+Semantics (exactly what jax.jvp produces for y = x@W + s*(x@A)@B with
+tangents on x, A, B and frozen W):
+
+    y    = x@W + s*(x@A)@B
+    ydot = xdot@W + s*((xdot@A + x@adot)@B + (x@A)@bdot)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_dual_ref(x, xdot, w, a, adot, b, bdot, scale: float):
+    xw = x @ w
+    u = x @ a
+    y = xw + scale * (u @ b)
+    udot = xdot @ a + x @ adot
+    ydot = xdot @ w + scale * (udot @ b + u @ bdot)
+    return y, ydot

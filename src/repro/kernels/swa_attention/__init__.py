@@ -1,0 +1,2 @@
+from repro.kernels.swa_attention.ops import swa_attention
+from repro.kernels.swa_attention.ref import swa_attention_ref

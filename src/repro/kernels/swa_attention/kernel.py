@@ -1,0 +1,135 @@
+"""Sliding-window flash attention — Pallas TPU kernel.
+
+Online-softmax over key blocks restricted to the causal band
+(q-window, q]. Only ceil((window+block_q)/block_k)+ key blocks are visited
+per query block, so HBM traffic and FLOPs are linear in S for SWA layers
+(gemma3 local layers, h2o-danube, zamba2's shared attention block).
+
+Grid: (B*H, S/block_q, n_kv_blocks) — kv innermost sequential; the running
+max/denominator/accumulator live in VMEM scratch across kv steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kv_block_index(qi, kv_step, *, block_q, block_k, window, n_k_total,
+                    banded):
+    """Index of the kv block visited at (query block qi, step kv_step).
+
+    Banded mode: the first visited block covers position qs - window + 1
+    (clamped to 0); out-of-band loads are clamped and masked away in-kernel.
+    Non-banded mode (full causal, or window so wide the band covers all
+    blocks): sweep blocks 0..n_k_total-1.
+    """
+    if not banded:
+        return kv_step
+    q_start = qi * block_q
+    first = (q_start - (window - 1)) // block_k
+    idx = first + kv_step
+    return jnp.clip(idx, 0, n_k_total - 1)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, block_q, block_k, window, n_kv_steps, n_k_total, scale,
+            banded):
+    qi = pl.program_id(1)
+    step = pl.program_id(2)
+
+    @pl.when(step == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                       # (block_q, hd)
+    k = k_ref[0]                                       # (block_k, hd)
+    v = v_ref[0]
+
+    # recompute which absolute kv block we loaded (same formula as index_map)
+    kv_idx = _kv_block_index(qi, step, block_q=block_q, block_k=block_k,
+                             window=window, n_k_total=n_k_total, banded=banded)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kv_idx * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    keep = k_pos <= q_pos
+    if window is not None:
+        keep = keep & (k_pos > q_pos - window)
+    if banded:
+        # out-of-range steps are clamped by the index_map and would re-visit
+        # an edge block — mask those visits out entirely
+        q_start = qi * block_q
+        raw_idx = (q_start - (window - 1)) // block_k + step
+        keep = keep & (raw_idx >= 0) & (raw_idx < n_k_total)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_scr[...]                                # (block_q, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit keep-gating: exp(NEG_INF - NEG_INF) would be 1, not 0
+    p = jnp.where(keep, jnp.exp(s - m_new), 0.0)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(step == n_kv_steps - 1)
+    def _finish():
+        out = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        o_ref[...] = out[None]
+
+
+def swa_attention_kernel(q, k, v, *, window, block_q=128, block_k=128,
+                         interpret=True, scale=None):
+    """q,k,v: (BH, S, hd) -> out (BH, S, hd). Causal; window may be None.
+    ``scale`` overrides 1/sqrt(hd) (needed when hd was zero-padded)."""
+    BH, S, hd = q.shape
+    assert S % block_q == 0 and S % block_k == 0
+    n_k_total = S // block_k
+    if window is not None:
+        # band spans floor((qs-W+1)/bk) .. floor((qs+bq-1)/bk) inclusive;
+        # worst-case count over alignments:
+        n_kv_steps = (window - 1 + block_q - 1) // block_k + 2
+    else:
+        n_kv_steps = n_k_total
+    banded = window is not None and n_kv_steps < n_k_total
+    if not banded:
+        n_kv_steps = n_k_total
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+
+    grid = (BH, S // block_q, n_kv_steps)
+    kv_map = functools.partial(_kv_block_index, block_q=block_q,
+                               block_k=block_k, window=window,
+                               n_k_total=n_k_total, banded=banded)
+    kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                               window=window, n_kv_steps=n_kv_steps,
+                               n_k_total=n_k_total, scale=scale,
+                               banded=banded)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, s: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, s: (b, kv_map(i, s), 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, s: (b, kv_map(i, s), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, s: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""jit'd wrapper: (B,H,S,hd) <-> (BH,S,hd) reshape, GQA head repeat, padding
+of hd to the lane width."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention.kernel import swa_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def swa_attention(q, k, v, window=None, block_q=128, block_k=128,
+                  interpret=True):
+    """q: (B,H,S,hd); k,v: (B,KV,S,hd) with H % KV == 0. Causal SWA."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    # pad head_dim to a multiple of 128 lanes if needed (zeros don't affect
+    # scores since both q and k are padded)
+    pad_hd = (-hd) % 128 if not interpret else 0
+    if pad_hd:
+        padw = ((0, 0),) * 3 + ((0, pad_hd),)
+        q, k, v = (jnp.pad(t, padw) for t in (q, k, v))
+    out = swa_attention_kernel(
+        q.reshape(B * H, S, hd + pad_hd),
+        k.reshape(B * H, S, hd + pad_hd),
+        v.reshape(B * H, S, hd + pad_hd),
+        window=window, block_q=bq, block_k=bk, interpret=interpret,
+        scale=1.0 / float(hd) ** 0.5)
+    out = out.reshape(B, H, S, hd + pad_hd)
+    return out[..., :hd]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: causal sliding-window attention.
+
+Token q attends to keys k with  q-window < k <= q  (window=None -> full
+causal). Matches repro.models.attention semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q, k, v, window=None):
+    """q,k,v: (B, H, S, hd) -> (B, H, S, hd)."""
+    S, hd = q.shape[-2], q.shape[-1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    keep = kpos <= qpos
+    if window is not None:
+        keep = keep & (kpos > qpos - window)
+    scores = jnp.where(keep, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)

@@ -1,0 +1,2 @@
+from repro.kernels.wkv6_scan.ops import wkv6_scan
+from repro.kernels.wkv6_scan.ref import wkv6_scan_ref

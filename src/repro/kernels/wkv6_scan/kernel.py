@@ -1,0 +1,70 @@
+"""RWKV6 WKV recurrence — Pallas TPU kernel.
+
+Grid: (B*H, S/block_s). The (hd, hd) state matrix lives in VMEM scratch and
+persists across the sequential S dimension; each grid step streams one
+(block_s, hd) tile of r/k/v/w through VMEM and walks it with a fori_loop.
+Within a step the per-token update is rank-1 (outer product) + elementwise
+decay — VPU work with an MXU-friendly (hd x hd) layout.
+
+Compared to the pure-jnp lax.scan reference this removes the per-token HBM
+round-trip of the state (the dominant cost on TPU for hd=64: 2*hd*hd*4 bytes
+per token vs ~6*hd*hd FLOPs — arithmetic intensity < 1 without the kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_scr,
+            *, block_s: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    u = u_ref[0]                                    # (1, hd) -> (hd,) via [0]
+
+    def step(t, _):
+        rt = r_ref[0, t, :]                         # (hd,)
+        kt = k_ref[0, t, :]
+        vt = v_ref[0, t, :]
+        wt = w_ref[0, t, :]
+        s = state_scr[...]                          # (hd, hd)
+        kv = kt[:, None] * vt[None, :]              # rank-1 outer product
+        yt = ((s + u[:, None] * kv) * rt[:, None]).sum(axis=0)
+        state_scr[...] = wt[:, None] * s + kv
+        y_ref[0, t, :] = yt.astype(y_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, block_s, step, ())
+
+
+def wkv6_scan_kernel(r, k, v, w, u, *, block_s: int = 64, interpret=True):
+    """r,k,v,w: (BH, S, hd) fp32; u: (BH, hd). Returns y (BH, S, hd)."""
+    BH, S, hd = r.shape
+    assert S % block_s == 0
+    grid = (BH, S // block_s)
+    kernel = functools.partial(_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, hd), lambda b, s: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,38 @@
+"""jit'd wrapper: (B,S,H,hd) <-> (B*H, S, hd) layout + padding of S."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6_scan.kernel import wkv6_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def wkv6_scan(r, k, v, w, u, block_s: int = 64, interpret: bool = True):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd). Returns y (B,S,H,hd) fp32.
+
+    Fresh state per call (training semantics); the decode path keeps its
+    state outside and uses the jnp reference for single steps.
+    """
+    B, S, H, hd = r.shape
+    bs = min(block_s, S)
+    pad = (-S) % bs
+
+    def to_bh(t):
+        t = t.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        return t
+
+    # pad w with ones (decay) so padded steps keep state intact — irrelevant
+    # anyway since padded y rows are dropped
+    rb, kb, vb = to_bh(r), to_bh(k), to_bh(v)
+    wb = to_bh(w)
+    if pad:
+        wb = wb.at[:, S:, :].set(1.0)
+    ub = jnp.broadcast_to(u.astype(jnp.float32)[None], (B, H, hd)).reshape(B * H, hd)
+    y = wkv6_scan_kernel(rb, kb, vb, wb, ub, block_s=bs, interpret=interpret)
+    y = y[:, :S].reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence (matches
+repro.models.ssm.wkv6_recurrence semantics):
+
+    y_t = r_t^T (S_{t-1} + (u*k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_scan_ref(r, k, v, w, u, state=None):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) or None.
+    Returns (y (B,S,H,hd), final_state)."""
+    B, S, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        yt = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, yt
+
+    xs = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+for the production meshes, and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+The XLA_FLAGS line above MUST run before any other jax-touching import:
+jax locks the device count on first backend init. 512 host devices cover
+both the 256-chip single-pod mesh and the 2x256 multi-pod mesh.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    get_config,
+    get_shape,
+    shape_applicable,
+)
+from repro.core.spry import make_round_step
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as specs_lib
+from repro.models.registry import get_model
+from repro.models.partitioning import sharding_hints
+from repro.launch.mesh import make_production_mesh
+from jax.sharding import PartitionSpec as P
+
+# v5e hardware constants for the roofline report
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Parse an HLO shape like 'bf16[16,128,4096]{...}' -> byte count."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    sizes = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+             "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+             "f64": 8, "c64": 8}
+    unit = sizes.get(dtype, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * unit if dims else unit
+
+
+def decode_hints(cfg, shape, mesh, cache):
+    """PartitionSpecs pinning the decode attention data flow: tiny per-step
+    tensors (q / attn out) replicated over 'model', the big KV cache
+    sequence-sharded. Axes are pruned when a dim is not divisible."""
+    d = mesh_lib.data_axes(mesh)
+    d = d[0] if len(d) == 1 else d
+    B = shape.global_batch
+    b_axis = d if B % mesh_lib.axis_size(mesh, d) == 0 else None
+    hints = {"decode_q": P(b_axis, None, None, None)}
+    k = cache.get("k") if isinstance(cache, dict) else None
+    if k is not None:
+        Sc = k.shape[2]
+        s_axis = "model" if Sc % mesh_lib.axis_size(mesh, "model") == 0 else None
+        hints["decode_cache"] = P(b_axis, s_axis, None, None)
+    return hints
+
+
+def prefill_hints(cfg, shape, mesh):
+    """Prefill sharding hints (EXPERIMENTS §Perf-3 / §Perf-1-family).
+
+    1. Residual h pinned batch-sharded over the data axes: without this,
+       GSPMD drops the batch sharding inside the layer scan of FSDP'd
+       models (to avoid gathering D-sharded weights) and computes the whole
+       batch REDUNDANTLY on every data slice — 16x wasted FLOPs and 12.9GB
+       f32 score buffers at 32k (found via buffer-assignment dump).
+    2. Context-parallel attention for archs whose head count does not
+       divide the model axis (llama4 H=40, whisper H=6) — see
+       attn_block_prefill. NOTE: sequence-sharding the residual was REFUTED
+       (it moves the conflict into the MoE einsums); batch-sharding
+       composes fine.
+    """
+    d = mesh_lib.data_axes(mesh)
+    d = d[0] if len(d) == 1 else d
+    B = shape.global_batch
+    b_axis = d if B % mesh_lib.axis_size(mesh, d) == 0 else None
+    hints = {"prefill_h": P(b_axis, None, None)}
+    msize = mesh_lib.axis_size(mesh, "model")
+    if cfg.n_heads % msize != 0:
+        # q/out: (B, S, H, hd) — shard S over model; k/v gathered
+        hints["prefill_q"] = P(b_axis, "model", None, None)
+        hints["prefill_kv"] = P(b_axis, None, None, None)
+    return hints
+
+
+def lower_case(arch: str, shape_name: str, multi_pod: bool,
+               kv_int8: bool = False):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_data = mesh_lib.axis_size(mesh, mesh_lib.data_axes(mesh))
+
+    if shape.kind == "train":
+        n_clients = n_data                      # one simulated cohort per data slice
+        spry_cfg = specs_lib.spry_config_for(cfg, shape, n_clients)
+        state = specs_lib.eval_state(cfg, spry_cfg)
+        batch = specs_lib.train_batch_specs(cfg, shape, n_clients)
+        step = make_round_step(cfg, spry_cfg, task="lm")
+        in_shardings = (
+            type(state)(
+                base=mesh_lib.base_shardings(cfg, mesh, state.base),
+                peft=mesh_lib.replicated(mesh, state.peft),
+                server=mesh_lib.replicated(mesh, state.server),
+                round_idx=mesh_lib.replicated(mesh, state.round_idx),
+            ),
+            mesh_lib.train_batch_shardings(mesh, batch),
+        )
+        args = (state, batch)
+        fn = step
+        donate = (0,)   # SpryState is threaded round-to-round
+    elif shape.kind == "prefill":
+        spry_cfg = specs_lib.spry_config_for(cfg, shape, n_data)
+        state = specs_lib.eval_state(cfg, spry_cfg)
+        batch = specs_lib.prefill_batch_specs(cfg, shape)
+        model = get_model(cfg)
+        hints = prefill_hints(cfg, shape, mesh)
+
+        def fn(base, peft, batch):
+            # serving runs the adapters in bf16 (f32 LoRA intermediates at
+            # 32k tokens cost 3.2GB each on the big archs; §Perf notes)
+            from repro.utils.pytree import tree_cast
+            peft = tree_cast(peft, cfg.dtype)
+            with sharding_hints(hints):
+                h, _ = model.forward(cfg, base, peft, batch)
+                return (h[:, -1, :] @ model.unembed(cfg, base)).astype(jnp.float32)
+
+        in_shardings = (
+            mesh_lib.base_shardings(cfg, mesh, state.base),
+            mesh_lib.replicated(mesh, state.peft),
+            mesh_lib.serve_batch_shardings(mesh, batch),
+        )
+        args = (state.base, state.peft, batch)
+        donate = ()
+    else:  # decode
+        spry_cfg = specs_lib.spry_config_for(cfg, shape, n_data)
+        state = specs_lib.eval_state(cfg, spry_cfg)
+        cache, token, pos = specs_lib.decode_specs(cfg, shape, kv_int8=kv_int8)
+        model = get_model(cfg)
+        hints = decode_hints(cfg, shape, mesh, cache)
+
+        def fn(base, peft, cache, token, pos):
+            with sharding_hints(hints):
+                return model.decode_step(cfg, base, peft, cache, token, pos)
+
+        in_shardings = (
+            mesh_lib.base_shardings(cfg, mesh, state.base),
+            mesh_lib.replicated(mesh, state.peft),
+            mesh_lib.cache_shardings(cfg, mesh, cache),
+            mesh_lib.serve_batch_shardings(mesh, {"t": token})["t"],
+            mesh_lib.replicated(mesh, pos),
+        )
+        args = (state.base, state.peft, cache, token, pos)
+        donate = (2,)   # the KV/state cache is updated in place
+
+    with mesh:
+        t0 = time.time()
+        lowered = jax.jit(fn, in_shardings=in_shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return cfg, shape, mesh, lowered, compiled, t_lower, t_compile
+
+
+def analyse(cfg, shape, mesh, lowered, compiled, multi_pod: bool):
+    from repro.launch.hlo_analysis import analyse_hlo, bf16_upcast_bytes
+
+    n_chips = 512 if multi_pod else 256
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    # XLA's cost_analysis counts while bodies ONCE; the loop-aware static
+    # analyser multiplies by known_trip_count (layers, q-chunks, MoE chunks).
+    totals = analyse_hlo(hlo)
+    upcast = bf16_upcast_bytes(hlo)
+    flops = totals.flops
+    xla_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    xla_bytes = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    coll = {k: float(v) for k, v in totals.collective_bytes.items()}
+    coll_counts = {k: float(v) for k, v in totals.collective_counts.items()}
+    coll_total = float(sum(coll.values()))
+    # TPU adjustment: f32 collectives on a bf16 model are a CPU-backend
+    # promotion (verified by the f32-vs-bf16 param A/B in §Perf-1); native
+    # bf16 halves those bytes on the target hardware
+    if cfg.dtype == jnp.bfloat16:
+        coll_tpu = coll_total - 0.5 * float(totals.collective_f32_bytes)
+    else:
+        coll_tpu = coll_total
+    # memory-traffic proxy: loop-aware dot operand/output bytes (weights are
+    # read once per trip via per-layer slices) vs XLA's body-once number
+    bytes_acc = max(xla_bytes, totals.dot_bytes)
+
+    # all numbers are per-device: the module is SPMD-partitioned
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_collective = coll_tpu / ICI_BW
+
+    n_dense = cfg.n_param_estimate()
+    n_active = cfg.n_active_param_estimate()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        # forward + jvp-tangent pass (no backward): ~2x forward = 4*N*D
+        model_flops = 4.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch * 1
+        model_flops = 2.0 * n_active * tokens
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    return {
+        "arch": cfg.arch_id,
+        "shape": shape.name,
+        "mesh": list(mesh.devices.shape),
+        "n_chips": n_chips,
+        "per_device": {
+            "flops": flops,
+            "bytes_accessed": bytes_acc,
+            "collective_bytes": coll,
+            "collective_counts": coll_counts,
+            "collective_bytes_total": coll_total,
+            "collective_bytes_tpu_adj": coll_tpu,
+            "collective_f32_bytes": float(totals.collective_f32_bytes),
+            "xla_body_once_flops": xla_flops,
+            "xla_body_once_bytes": xla_bytes,
+            "dot_bytes": totals.dot_bytes,
+        },
+        "memory_analysis": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+            # the CPU backend materialises f32 copies of bf16 params/caches
+            # (native on TPU): subtracted to obtain the deployable peak
+            "cpu_bf16_upcast_bytes": upcast,
+            "tpu_adjusted_peak": max(
+                0.0,
+                (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                + (getattr(mem, "argument_size_in_bytes", 0) or 0) - upcast),
+        },
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_global": model_flops,
+            "model_flops_per_chip": model_flops / n_chips,
+            "useful_flop_ratio": (model_flops / n_chips) / flops if flops else None,
+        },
+    }
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
+             kv_int8: bool = False):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not shape_applicable(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": [2, 16, 16] if multi_pod else [16, 16],
+               "skipped": True,
+               "reason": "full-attention arch excluded from long_500k "
+                         "(DESIGN.md §5)"}
+        print(json.dumps(rec))
+        return rec
+    cfg, shape, mesh, lowered, compiled, t_lower, t_compile = lower_case(
+        arch, shape_name, multi_pod, kv_int8=kv_int8)
+    rec = analyse(cfg, shape, mesh, lowered, compiled, multi_pod)
+    rec["t_lower_s"] = round(t_lower, 2)
+    rec["t_compile_s"] = round(t_compile, 2)
+    mem = rec["memory_analysis"]
+    print(f"[dryrun] {arch} x {shape_name} mesh={rec['mesh']} "
+          f"flops/dev={rec['per_device']['flops']:.3e} "
+          f"coll/dev={rec['per_device']['collective_bytes_total']:.3e}B "
+          f"peak={mem['peak_bytes']/1e9 if mem['peak_bytes'] else 0:.2f}GB "
+          f"(tpu-adj {mem['tpu_adjusted_peak']/1e9:.2f}GB) "
+          f"dominant={rec['roofline']['dominant']} "
+          f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = "pod2" if multi_pod else "pod1"
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8-quantized KV cache for decode shapes (beyond-paper)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    run_case(a, s, mp, args.out, kv_int8=args.kv_int8)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append((a, s, mp, repr(e)))
+                    print(f"[dryrun] FAIL {a} x {s} multi_pod={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all requested combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,292 @@
+"""Static analysis of compiled HLO text with LOOP-AWARE accounting.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, which undercounts
+layer-scanned models by ~n_layers x (and chunk-scanned attention by the chunk
+count). This module walks the call graph — while bodies multiplied by their
+``known_trip_count``, fusion/call computations attributed per call site,
+conditionals taken at max over branches — and produces:
+
+    flops             2 * prod(dot output dims) * prod(contracting dims)
+    dot_bytes         operand + output bytes of every dot (activation-traffic
+                      proxy for the roofline memory term)
+    collective_bytes  per collective kind (all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute)
+
+All numbers are per-device: the module is the SPMD-partitioned program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "u4": 1, "s4": 1, "f8e4m3": 1,
+                "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_dims(shape_str):
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return None, []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(shape_str):
+    dtype, dims = _shape_dims(shape_str)
+    if dtype is None:
+        return 0
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    shape: str
+    opcode: str
+    raw: str
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+)\s*\{")
+_OP_RE = re.compile(r"^(?:ROOT )?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+
+
+def parse_computations(hlo_text):
+    comps = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HEADER.match(s)
+            if m and (s.endswith("{")):
+                cur = m.group(1)
+                comps[cur] = {"ops": [], "params": {}}
+                if line.startswith("ENTRY") or s.startswith("ENTRY"):
+                    entry = cur
+                # header params give shapes: "name: f32[8,16], ..."
+                for p in m.group(2).split(","):
+                    p = p.strip()
+                    if ":" in p:
+                        pname, pshape = p.split(":", 1)
+                        comps[cur]["params"][pname.strip()] = pshape.strip()
+                continue
+            m2 = re.match(r"^ENTRY", s)
+            continue
+        if s == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(s)
+        if m:
+            comps[cur]["ops"].append(OpLine(m.group(1), m.group(2),
+                                            m.group(3), s))
+    return comps, entry
+
+
+def _symbol_table(comp):
+    """name -> shape string for every op + parameter in a computation."""
+    table = dict(comp["params"])
+    for op in comp["ops"]:
+        table[op.name] = op.shape
+    return table
+
+
+def _operands(raw):
+    """names of operands inside the top-level parens of `opcode(...)`."""
+    i = raw.index("(")
+    depth = 0
+    args, buf = [], ""
+    for ch in raw[i:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                if buf.strip():
+                    args.append(buf.strip())
+                break
+        if depth >= 1:
+            if ch == "," and depth == 1:
+                args.append(buf.strip())
+                buf = ""
+            else:
+                buf += ch
+    names = []
+    for a in args:
+        m = re.search(r"%([\w\.\-]+)\s*$", a)
+        names.append(m.group(1) if m else None)
+    return names
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    # f32 collective bytes — on a bf16 model these are a CPU-backend
+    # promotion artifact (verified: f32-param and bf16-param lowers produce
+    # IDENTICAL collective bytes); a TPU runs them in native bf16 at half
+    # the bytes. See EXPERIMENTS §Perf-1.
+    collective_f32_bytes: float = 0.0
+
+    def add(self, other, mult=1.0):
+        self.flops += other.flops * mult
+        self.dot_bytes += other.dot_bytes * mult
+        self.collective_f32_bytes += other.collective_f32_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += v * mult
+
+
+def _trip_count(raw):
+    m = re.search(r'known_trip_count.{0,6}n.{0,4}?"(\d+)"', raw)
+    if m:
+        return int(m.group(1))
+    return 1
+
+
+def _called_comps(raw, key):
+    m = re.search(key + r"=\{?([^,}]+(?:,\s*%[\w\.\-]+)*)\}?", raw)
+    if not m:
+        return []
+    return [c.strip().lstrip("%") for c in m.group(1).split(",")]
+
+
+def analyse_computation(name, comps, cache):
+    if name in cache:
+        return cache[name]
+    comp = comps.get(name)
+    t = Totals()
+    if comp is None:
+        cache[name] = t
+        return t
+    table = _symbol_table(comp)
+    for op in comp["ops"]:
+        if op.opcode == "dot":
+            out_dtype, out_dims = _shape_dims(op.shape)
+            contract = 1
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.raw)
+            lhs_name = _operands(op.raw)[0]
+            lhs_shape = table.get(lhs_name, "")
+            _, lhs_dims = _shape_dims(lhs_shape or "")
+            if m and lhs_dims:
+                for d in m.group(1).split(","):
+                    if d:
+                        contract *= lhs_dims[int(d)]
+            out_n = 1
+            for d in out_dims:
+                out_n *= d
+            t.flops += 2.0 * out_n * contract
+            t.dot_bytes += _shape_bytes(op.shape)
+            for opr in _operands(op.raw):
+                if opr and opr in table:
+                    t.dot_bytes += _shape_bytes(table[opr])
+        elif op.opcode == "while":
+            body = _called_comps(op.raw, "body")
+            trips = _trip_count(op.raw)
+            for b in body:
+                t.add(analyse_computation(b, comps, cache), trips)
+            for c in _called_comps(op.raw, "condition"):
+                t.add(analyse_computation(c, comps, cache), trips)
+        elif op.opcode == "conditional":
+            branches = _called_comps(op.raw, "branch_computations")
+            if not branches:
+                branches = (_called_comps(op.raw, "true_computation")
+                            + _called_comps(op.raw, "false_computation"))
+            if branches:
+                subs = [analyse_computation(b, comps, cache) for b in branches]
+                best = max(subs, key=lambda s: s.flops)
+                t.add(best)
+        elif op.opcode in ("fusion", "call", "async-start"):
+            key = "calls" if op.opcode == "fusion" else "to_apply"
+            for c in _called_comps(op.raw, key):
+                t.add(analyse_computation(c, comps, cache))
+        kind = None
+        for c in COLLECTIVES:
+            if op.opcode == c or op.opcode.startswith(c + "-"):
+                kind = c
+                break
+        if kind:
+            if op.shape.startswith("("):
+                total = sum(_shape_bytes(s.strip())
+                            for s in op.shape[1:-1].split(",") if "[" in s)
+                is_f32 = "f32[" in op.shape
+            else:
+                total = _shape_bytes(op.shape)
+                is_f32 = op.shape.startswith("f32[")
+            t.collective_bytes[kind] += total
+            t.collective_counts[kind] += 1
+            if is_f32:
+                t.collective_f32_bytes += total
+    # NOTE: cache only pure computations (no context-dependent multipliers
+    # inside) — safe because multipliers are applied by the caller.
+    cache[name] = t
+    return t
+
+
+def bf16_upcast_bytes(hlo_text, min_bytes=50_000_000) -> float:
+    """Bytes of large f32 copies produced by bf16->f32 ``convert`` ops.
+
+    The XLA *CPU* backend emulates bf16 by materialising f32 copies of bf16
+    parameters (weights, KV caches) — on gemma3-27b decode_32k these account
+    for 23.1GB of the 24.0GB "temp" allocation (see EXPERIMENTS §Perf-2).
+    A TPU backend computes in native bf16 and allocates none of them, so the
+    dry-run report subtracts this to obtain the TPU-adjusted peak.
+    """
+    comps, entry = parse_computations(hlo_text)
+    total = 0.0
+    # only ENTRY-level convert fusions allocate standalone buffers; converts
+    # nested inside other fused computations are fused into their consumers
+    # (verified against the CPU buffer-assignment dump, §Perf-2)
+    for cname, comp in comps.items():
+        if cname != entry:
+            continue
+        table = _symbol_table(comp)
+        for op in comp["ops"]:
+            looks_convert = (op.opcode == "convert"
+                             or op.name.startswith("wrapped_convert"))
+            if not looks_convert:
+                continue
+            dtype, dims = _shape_dims(op.shape)
+            if dtype != "f32":
+                continue
+            b = _shape_bytes(op.shape)
+            if b < min_bytes:
+                continue
+            # operand must be a same-dims bf16 tensor
+            ok = False
+            for opr in _operands(op.raw):
+                if opr and opr in table:
+                    od, odims = _shape_dims(table[opr])
+                    if od == "bf16" and odims == dims:
+                        ok = True
+            if ok:
+                total += b
+    return total
+
+
+def analyse_hlo(hlo_text) -> Totals:
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c]["ops"])) if comps else None
+    cache = {}
+    if entry is None:
+        return Totals()
+    return analyse_computation(entry, comps, cache)

@@ -1,0 +1,114 @@
+"""ShapeDtypeStruct input specs for every (architecture x input-shape) pair.
+
+Nothing here allocates: model/optimizer state comes from jax.eval_shape over
+the real init functions, so the dry-run lowers the exact same pytree
+structures the runtime uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SpryConfig, get_config, get_shape, shape_applicable
+from repro.core.spry import init_state
+from repro.models.registry import get_model
+from repro.peft import init_peft
+
+
+def spry_config_for(cfg, shape, n_clients: int) -> SpryConfig:
+    mb = None
+    if shape.kind == "train":
+        # bound per-device live activations: mb_B * S * d * (bf16+jvp+slack)
+        per_client_b = shape.global_batch // n_clients
+        target = 4e9
+        mb = max(1, int(target / (shape.seq_len * cfg.d_model * 40)))
+        mb = None if mb >= per_client_b else mb
+    return SpryConfig(n_clients_per_round=n_clients, local_iters=1,
+                      k_perturbations=1, microbatch_size=mb)
+
+
+def eval_state(cfg, spry_cfg):
+    """SpryState as ShapeDtypeStructs (no allocation)."""
+    model = get_model(cfg)
+
+    def build():
+        key = jax.random.PRNGKey(0)
+        base = model.init_base(cfg, key)
+        peft = init_peft(cfg, key, spry_cfg)
+        return init_state(base, peft)
+
+    return jax.eval_shape(build)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg, shape, n_clients: int):
+    """{'tokens': (M, B/M, S), ...} for the SPRY round step (task='lm')."""
+    B, S = shape.global_batch, shape.seq_len
+    assert B % n_clients == 0
+    b = B // n_clients
+    text = S
+    batch = {}
+    if cfg.frontend == "vision" and cfg.n_frontend_tokens:
+        text = S - cfg.n_frontend_tokens
+        batch["patch_embeds"] = _sds((n_clients, b, cfg.n_frontend_tokens,
+                                      cfg.d_model), cfg.dtype)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((n_clients, b, cfg.encoder_seq, cfg.d_model),
+                               cfg.dtype)
+    batch["tokens"] = _sds((n_clients, b, text), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg, shape):
+    B, S = shape.global_batch, shape.seq_len
+    text = S
+    batch = {}
+    if cfg.frontend == "vision" and cfg.n_frontend_tokens:
+        text = S - cfg.n_frontend_tokens
+        batch["patch_embeds"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                     cfg.dtype)
+    if cfg.family == "audio":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    batch["tokens"] = _sds((B, text), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg, shape, kv_int8: bool = False):
+    """(cache, token, pos) ShapeDtypeStructs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+    if kv_int8 and cfg.family in ("dense", "moe", "vlm"):
+        cache = jax.eval_shape(
+            lambda: model.init_cache(cfg, B, S, kv_int8=True))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(cfg, B, S))
+    token = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return cache, token, pos
+
+
+@dataclasses.dataclass(frozen=True)
+class DryrunCase:
+    arch: str
+    shape_name: str
+    applicable: bool
+    skip_reason: str = ""
+
+
+def all_cases(arch_ids, shape_names):
+    cases = []
+    for a in arch_ids:
+        cfg = get_config(a)
+        for s in shape_names:
+            shp = get_shape(s)
+            ok = shape_applicable(cfg, shp)
+            reason = "" if ok else (
+                "pure full-attention arch: 500k-token decode is excluded by "
+                "the shape contract (see DESIGN.md §5)")
+            cases.append(DryrunCase(a, s, ok, reason))
+    return cases

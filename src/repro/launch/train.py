@@ -1,0 +1,209 @@
+"""FL-simulation training driver (CPU-runnable; the multi-device path is
+exercised by dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch roberta-large-lora \
+        --task sst2 --method spry --rounds 200 --clients 8
+
+Runs the full paper pipeline: synthetic task -> Dirichlet partition ->
+client sampling -> jitted round step (SPRY or a baseline) -> server update,
+with periodic generalized/personalized evaluation.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SpryConfig, get_config, reduce_config
+from repro.core import init_state, make_round_step, make_round_step_per_iteration
+from repro.core.baselines import make_backprop_round_step, make_zeroorder_round_step
+from repro.core.baselines.zeroorder import ZOState, init_zo_state
+from repro.data import make_task
+from repro.data.loader import ClientDataset, stack_client_batches
+from repro.fl import dirichlet_partition, sample_clients
+from repro.models import cls_logits, get_model
+from repro.models.common import accuracy_from_logits
+from repro.peft import init_peft
+
+
+METHODS = ("spry", "spry_periter", "fedavg", "fedyogi", "fedsgd",
+           "fedavgsplit", "fedfgd", "fedmezo", "baffle", "fwdllm")
+
+
+def personalized_accuracy(cfg, state, clients, x, y, rng, steps=5,
+                          lr=5e-2, batch_size=8, max_clients=8):
+    """Paper's Acc_p: each client finetunes the trainable head on its own
+    shard (the personalisation layers SPRY assigns to every client, §3.1)
+    and is evaluated on its own held-out samples."""
+    from repro.core.forward_grad import forward_gradient
+    from repro.models.registry import cls_loss
+
+    accs = []
+    for c in clients[:max_clients]:
+        idx = c.indices
+        if len(idx) < 4:
+            continue
+        cut = max(2, int(0.8 * len(idx)))
+        tr, te = idx[:cut], idx[cut:]
+        peft = state.peft
+        for s in range(steps):
+            take = rng.choice(tr, size=min(batch_size, len(tr)), replace=False)
+            batch = {"tokens": jnp.asarray(x[take]),
+                     "labels": jnp.asarray(y[take])}
+            # head-only forward-gradient step (stays in the paper's paradigm)
+            head_mask = {g: jax.tree.map(
+                lambda leaf: jnp.float32(1.0 if g == "head" else 0.0), t)
+                for g, t in peft.items()}
+            _, g, _ = forward_gradient(
+                lambda p: cls_loss(cfg, state.base, p, batch),
+                peft, jax.random.PRNGKey(int(take[0]) + s),
+                mask_tree=head_mask)
+            peft = jax.tree.map(lambda p_, g_: p_ - lr * g_, peft, g)
+        logits = cls_logits(cfg, state.base, peft,
+                            {"tokens": jnp.asarray(x[te])})
+        accs.append(float(accuracy_from_logits(logits, jnp.asarray(y[te]))))
+    return float(np.mean(accs)) if accs else float("nan")
+
+
+def build_round_step(cfg, sc: SpryConfig, method: str, task="cls"):
+    if method == "spry":
+        return make_round_step(cfg, sc, task), "spry"
+    if method == "spry_periter":
+        return make_round_step_per_iteration(cfg, sc, task), "spry"
+    if method == "fedfgd":
+        # forward gradients WITHOUT splitting: every client perturbs all units
+        return make_round_step(cfg, sc, task, split=False), "spry"
+    if method in ("fedavg", "fedyogi", "fedsgd"):
+        return make_backprop_round_step(cfg, sc, task, method=method), "bp"
+    if method == "fedavgsplit":
+        return make_backprop_round_step(cfg, sc, task, method="fedavg",
+                                        split=True), "bp"
+    if method in ("fedmezo", "baffle", "fwdllm"):
+        return make_zeroorder_round_step(cfg, sc, task, method=method), "zo"
+    raise ValueError(method)
+
+
+def run_training(arch="roberta-large-lora", task="sst2", method="spry",
+                 rounds=100, clients_per_round=8, total_clients=32,
+                 batch_size=8, local_iters=1, local_lr=None, server_lr=None,
+                 dirichlet_alpha=0.1, seed=0, eval_every=10, reduced=True,
+                 k_perturbations=1, jvp_clip=None, log=print):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = reduce_config(cfg)
+    x_tr, y_tr, x_te, y_te = make_task(task, seed=seed, vocab=cfg.vocab)
+    cfg = dataclasses.replace(cfg, n_classes=int(y_tr.max()) + 1)
+
+    defaults = {
+        "spry": (5e-3, 1e-2), "spry_periter": (5e-3, 1e-2),
+        "fedfgd": (5e-3, 1e-2),
+        "fedavg": (5e-2, 1.0), "fedyogi": (5e-2, 1e-2), "fedsgd": (5e-2, 1.0),
+        "fedavgsplit": (5e-2, 1.0),
+        "fedmezo": (5e-3, 1e-2), "baffle": (5e-3, 1e-2), "fwdllm": (5e-3, 1e-2),
+    }
+    d_lr, d_slr = defaults[method]
+    sc = SpryConfig(
+        n_clients_per_round=clients_per_round,
+        n_total_clients=total_clients,
+        local_iters=local_iters,
+        local_lr=local_lr if local_lr is not None else d_lr,
+        server_lr=server_lr if server_lr is not None else d_slr,
+        k_perturbations=k_perturbations,
+        jvp_clip=jvp_clip,
+        dirichlet_alpha=dirichlet_alpha,
+        server_opt="fedavg" if method in ("fedavg", "fedsgd", "fedavgsplit")
+        else "fedyogi",
+        seed=seed,
+    )
+
+    rng = np.random.default_rng(seed)
+    parts = dirichlet_partition(y_tr, total_clients, dirichlet_alpha, seed=seed)
+    client_data = [ClientDataset(x_tr, y_tr, idx) for idx in parts]
+
+    key = jax.random.PRNGKey(seed)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, sc)
+    state = init_state(base, peft)
+
+    step_fn, kind = build_round_step(cfg, sc, method)
+    step_fn = jax.jit(step_fn)
+    if kind == "zo":
+        state = init_zo_state(state)
+
+    eval_logits = jax.jit(lambda st, xb: cls_logits(
+        cfg, st.base, st.peft, {"tokens": xb}))
+
+    def the_state(s):
+        return s.inner if isinstance(s, ZOState) else s
+
+    def eval_personalized():
+        st = the_state(state)
+        return personalized_accuracy(cfg, st, client_data, x_tr, y_tr, rng)
+
+    history = []
+    t0 = time.time()
+    for r in range(rounds):
+        chosen = sample_clients(rng, total_clients, clients_per_round)
+        bx, by = stack_client_batches([client_data[c] for c in chosen], rng,
+                                      batch_size)
+        state, metrics = step_fn(state, {"tokens": jnp.asarray(bx),
+                                         "labels": jnp.asarray(by)})
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            st = the_state(state)
+            accs = []
+            for i in range(0, min(len(x_te), 512), 64):
+                lg = eval_logits(st, jnp.asarray(x_te[i:i + 64]))
+                accs.append(np.asarray(
+                    accuracy_from_logits(lg, jnp.asarray(y_te[i:i + 64]))))
+            acc = float(np.mean(accs))
+            history.append({"round": r + 1, "acc": acc,
+                            "loss": float(metrics["loss"]),
+                            "t": time.time() - t0})
+            log(f"[{method}] round {r+1:4d} loss={float(metrics['loss']):.4f} "
+                f"test_acc={acc:.4f} ({time.time()-t0:.0f}s)")
+    history[-1]["personalized_acc"] = eval_personalized()
+    log(f"[{method}] personalized_acc={history[-1]['personalized_acc']:.4f}")
+    return history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="roberta-large-lora")
+    ap.add_argument("--task", default="sst2")
+    ap.add_argument("--method", default="spry", choices=METHODS)
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--total-clients", type=int, default=32)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--local-iters", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--server-lr", type=float, default=None)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--jvp-clip", type=float, default=None)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full (unreduced) architecture")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    hist = run_training(arch=args.arch, task=args.task, method=args.method,
+                        rounds=args.rounds, clients_per_round=args.clients,
+                        total_clients=args.total_clients,
+                        batch_size=args.batch_size,
+                        local_iters=args.local_iters, local_lr=args.lr,
+                        server_lr=args.server_lr, dirichlet_alpha=args.alpha,
+                        seed=args.seed, reduced=not args.full_size,
+                        k_perturbations=args.k, jvp_clip=args.jvp_clip)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(hist, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

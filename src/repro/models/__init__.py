@@ -1,0 +1,8 @@
+from repro.models.registry import (
+    ModelFns,
+    cls_logits,
+    cls_loss,
+    get_loss_fn,
+    get_model,
+    lm_loss,
+)

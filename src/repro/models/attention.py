@@ -1,0 +1,290 @@
+"""GQA attention: full / sliding-window / local-global, memory-bounded.
+
+Prefill and training scan over query chunks with online masking so the
+(S x S) score matrix never materialises; sliding-window layers additionally
+slice keys to a (window + chunk) band, making SWA prefill linear in S
+(structurally sub-quadratic, not just masked). Decode attends one query
+against the cache. This pure-jnp path mirrors the Pallas swa_attention
+kernel (kernels/swa_attention) used on real TPUs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, maybe_lora, proj, rope
+from repro.models.partitioning import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attn_params(cfg, key, layers=None, prefix_shape=()):
+    d, hd = cfg.d_model, cfg.hd
+    shapes = {
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, d),
+    }
+    keys = jax.random.split(key, len(shapes))
+    stack = (layers,) if layers else ()
+    p = {}
+    for k, (name, shape) in zip(keys, shapes.items()):
+        full = prefix_shape + stack + shape
+        p[name] = dense_init(k, full, in_axis=-2, dtype=cfg.dtype)
+        if cfg.use_bias:
+            p[name + "_b"] = jnp.zeros(full[:-2] + (shape[1],), cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core scores
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd), mask: (B?,Sq,Sk) bool keep."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def attend_prefill(q, k, v, *, window=None, causal=True, q_chunk=512):
+    """Chunked causal attention. q,k,v over the same sequence.
+
+    window=None -> full causal; window=W -> tokens attend to the last W keys
+    only, with keys sliced to the band (linear cost in S).
+    """
+    B, S_orig, H, hd = q.shape
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    q_chunk = min(q_chunk, S_orig)
+    pad = (-S_orig) % q_chunk
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    S = S_orig + pad
+    n = S // q_chunk
+
+    banded = window is not None and (window + q_chunk) < S
+    band = (window + q_chunk) if banded else S
+
+    qs = q.reshape(B, n, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, xs):
+        ci, qc = xs
+        start_q = ci * q_chunk
+        if banded:
+            start_k = jnp.clip(start_q + q_chunk - band, 0, S - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start_k, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start_k, band, axis=1)
+            kpos = start_k + jnp.arange(band)
+        else:
+            kc, vc = k, v
+            kpos = jnp.arange(S)
+        qpos = start_q + jnp.arange(q_chunk)
+        keep = kpos[None, :] <= qpos[:, None] if causal else jnp.ones(
+            (q_chunk, kpos.shape[0]), bool)
+        if window is not None:
+            keep = keep & (kpos[None, :] > qpos[:, None] - window)
+        keep = keep & (kpos[None, :] < S_orig)          # padded keys invalid
+        keep = jnp.broadcast_to(keep[None], (B,) + keep.shape)
+        return (), _sdpa(qc, kc, vc, keep, scale)
+
+    _, out = jax.lax.scan(body, (), (jnp.arange(n), qs))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return out[:, :S_orig]
+
+
+def attend_decode(q, k_cache, v_cache, pos, *, window=None):
+    """One-token decode. q: (B,1,H,hd); caches: (B,Sc,KV,hd).
+
+    For ring-buffer (window) caches, slot order is scrambled but attention is
+    permutation-invariant over keys, so only slot *validity* matters:
+    slot i valid iff i < min(pos+1, Sc).
+
+    ``window`` may be a python int OR a traced scalar (per-layer window in
+    local:global stacks — a traced mask keeps the scan body uniform so SPMD
+    sharding propagates cleanly, unlike a lax.cond over two attention
+    variants).
+    """
+    B, Sc = k_cache.shape[0], k_cache.shape[1]
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    n_valid = jnp.minimum(pos + 1, Sc)
+    keep = (jnp.arange(Sc)[None, :] < n_valid)[None]
+    keep = jnp.broadcast_to(keep, (B, 1, Sc))
+    if window is not None:
+        # mask stale entries beyond the (possibly per-layer) window; only
+        # meaningful when the cache is longer than the window
+        keep = keep & (jnp.arange(Sc)[None, None, :] > pos - window)
+    return _sdpa(q, k_cache, v_cache, keep, scale)
+
+
+# ---------------------------------------------------------------------------
+# Block-level API used by the model stacks
+# ---------------------------------------------------------------------------
+
+def qkv(cfg, p, x, peft_layer, lora_scale):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = proj(x, p["wq"], p.get("wq_b"), maybe_lora(peft_layer, "wq"), lora_scale)
+    k = proj(x, p["wk"], p.get("wk_b"), maybe_lora(peft_layer, "wk"), lora_scale)
+    v = proj(x, p["wv"], p.get("wv_b"), maybe_lora(peft_layer, "wv"), lora_scale)
+    if peft_layer is not None and "ia3_kv" in peft_layer:
+        s = peft_layer["ia3_kv"]["s"].astype(k.dtype)
+        k = k * s
+        v = v * s
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def attn_block_prefill(cfg, p, x, peft_layer, lora_scale, *, is_global=True,
+                       positions=None, causal=True):
+    B, S, _ = x.shape
+    q, k, v = qkv(cfg, p, x, peft_layer, lora_scale)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if cfg.rope_theta:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # context-parallel hint: when the head count does not divide the model
+    # axis (llama4: H=40, whisper: H=6), GSPMD falls back to sharding the
+    # contraction (hd) dim and ALL-REDUCES the full score tensor per chunk
+    # per layer. Sequence-sharding q instead keeps scores local (keys are
+    # gathered once — orders of magnitude cheaper). Installed by the
+    # launcher via sharding_hints; no-op otherwise.
+    q = constrain(q, "prefill_q")
+    k = constrain(k, "prefill_kv")
+    v = constrain(v, "prefill_kv")
+    window = None if is_global else cfg.window
+    out = attend_prefill(q, k, v, window=window, causal=causal)
+    out = constrain(out, "prefill_q")
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"), lora_scale)
+
+
+def attn_block_decode(cfg, p, x, peft_layer, lora_scale, k_cache, v_cache, pos,
+                      *, is_global=True, window_len=None):
+    """x: (B,1,D). Returns (out, new_k_cache, new_v_cache).
+
+    ``window_len``: optional traced per-layer window (overrides is_global;
+    use a huge value for global layers)."""
+    B = x.shape[0]
+    hd = cfg.hd
+    q, k, v = qkv(cfg, p, x, peft_layer, lora_scale)
+    if cfg.rope_theta:
+        pos_arr = jnp.full((1, 1), pos)
+        q = rope(q, pos_arr, cfg.rope_theta)
+        k = rope(k, pos_arr, cfg.rope_theta)
+    Sc = k_cache.shape[1]
+    slot = pos % Sc   # ring-buffer insert; identity while pos < Sc
+    q = constrain(q, "decode_q")
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    k_cache = constrain(k_cache, "decode_cache")
+    v_cache = constrain(v_cache, "decode_cache")
+    if window_len is not None:
+        window = window_len
+    else:
+        window = None if is_global else cfg.window
+        if window is not None and window >= Sc:
+            window = None   # ring buffer already bounds the visible set
+    out = attend_decode(q, k_cache, v_cache, pos, window=window)
+    out = constrain(out, "decode_q")
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    out = proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"), lora_scale)
+    return out, k_cache, v_cache
+
+
+def attn_block_decode_nocopy(cfg, p, x, peft_layer, lora_scale, k_cache,
+                             v_cache, pos, *, is_global=True, window_len=None):
+    """Decode WITHOUT writing the cache: returns (out, k_new, v_new).
+
+    The caller inserts the (L,B,1,KV,hd) new-token keys/values into the full
+    stacked cache with ONE dynamic_update_slice after the layer scan, so the
+    multi-GB cache is never double-buffered through scan xs/ys (the naive
+    pattern costs 2x cache bytes of temps; this costs one token row).
+
+    The current token's contribution is handled out-of-band: its score is
+    concatenated after the cache scores. For ring buffers the slot that the
+    new token will overwrite is exactly the entry falling out of the window,
+    so it is masked out of the cache part.
+    """
+    B = x.shape[0]
+    hd = cfg.hd
+    q, k_new, v_new = qkv(cfg, p, x, peft_layer, lora_scale)
+    if cfg.rope_theta:
+        pos_arr = jnp.full((1, 1), pos)
+        q = rope(q, pos_arr, cfg.rope_theta)
+        k_new = rope(k_new, pos_arr, cfg.rope_theta)
+    q = constrain(q, "decode_q")
+
+    Sc = k_cache.shape[1]
+    H = cfg.n_heads
+    KV = cfg.n_kv_heads
+    rep = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    if window_len is not None:
+        window = window_len
+    else:
+        window = None if is_global else cfg.window
+        if window is not None and window >= Sc:
+            window = None
+
+    kc = jnp.repeat(k_cache, rep, axis=2)
+    vc = jnp.repeat(v_cache, rep, axis=2)
+    s_cache = jnp.einsum("bqhd,bkhd->bhqk", q, kc).astype(jnp.float32) * scale
+    slot = pos % Sc
+    idx = jnp.arange(Sc)
+    valid = idx < jnp.minimum(pos, Sc)          # strictly past tokens
+    valid = valid & (idx != slot)               # slot being overwritten
+    if window is not None:
+        valid = valid & (idx > pos - window)
+    s_cache = jnp.where(valid[None, None, None, :], s_cache, NEG_INF)
+
+    kq = jnp.repeat(k_new, rep, axis=2)
+    s_new = jnp.einsum("bqhd,bkhd->bhqk", q, kq).astype(jnp.float32) * scale
+
+    s_all = jnp.concatenate([s_cache, s_new], axis=-1)       # (B,H,1,Sc+1)
+    p_all = jax.nn.softmax(s_all, axis=-1).astype(q.dtype)
+    p_cache, p_new = p_all[..., :Sc], p_all[..., Sc:]
+    out = jnp.einsum("bhqk,bkhd->bqhd", p_cache, vc)
+    out = out + jnp.einsum("bhqk,bkhd->bqhd", p_new,
+                           jnp.repeat(v_new, rep, axis=2))
+    out = constrain(out, "decode_q")
+    out = out.reshape(B, 1, H * hd)
+    out = proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"),
+               lora_scale)
+    return out, k_new, v_new
+
+
+def cross_attn_block(cfg, p, x, memory, peft_layer, lora_scale):
+    """Decoder cross-attention (whisper): queries from x, keys/values from
+    encoder memory (recomputed per call; memory is small and fixed)."""
+    B, S, _ = x.shape
+    Sm = memory.shape[1]
+    hd = cfg.hd
+    q = proj(x, p["wq"], p.get("wq_b"), maybe_lora(peft_layer, "wq"), lora_scale)
+    k = proj(memory, p["wk"], p.get("wk_b"))
+    v = proj(memory, p["wv"], p.get("wv_b"))
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, Sm, cfg.n_kv_heads, hd)
+    v = v.reshape(B, Sm, cfg.n_kv_heads, hd)
+    keep = jnp.ones((B, S, Sm), bool)
+    out = _sdpa(q, k, v, keep, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"), lora_scale)

@@ -1,0 +1,161 @@
+"""Shared model primitives: norms, RoPE, activations, chunked losses, init.
+
+Models are pure functions over pytrees. Per-layer parameters are stacked on a
+leading ``n_layers`` axis and iterated with ``lax.scan`` so that 60-90 layer
+configs lower to compact HLO (one loop body), which keeps the 512-device
+dry-run compile times tractable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal in fp32, cast by caller."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+def apply_norm(cfg, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+def norm_params(cfg, d, layers=None):
+    shape = (layers, d) if layers else (d,)
+    p = {"w": jnp.ones(shape, jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros(shape, jnp.float32)
+    return p
+
+
+def activation(cfg, x):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S) or scalar."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                                 # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq, d):
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Dense (+LoRA) projection
+# ---------------------------------------------------------------------------
+
+def proj(x, w, b=None, lora=None, lora_scale=1.0):
+    """y = x @ W (+ b) (+ s * (x@A)@B).
+
+    ``lora`` is None or {"A": (din, r), "B": (r, dout)}. The LoRA path is the
+    paper's trainable subspace; on TPU the fused variant lives in
+    kernels/lora_dual.
+    """
+    y = x @ w
+    if lora is not None:
+        lo = (x.astype(lora["A"].dtype) @ lora["A"]) @ lora["B"] * lora_scale
+        y = y + lo.astype(y.dtype)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def maybe_lora(peft_layer, name):
+    if peft_layer is None:
+        return None
+    entry = peft_layer.get(name)
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Losses (chunked over sequence so the (B,S,V) logits tensor never
+# materialises — essential for V=256k at seq 4k)
+# ---------------------------------------------------------------------------
+
+def chunked_lm_loss(h, unembed, targets, valid=None, chunk=512):
+    """Next-token CE.  h: (B,S,D) final hidden, unembed: (D,V),
+    targets: (B,S) already shifted. Scans over S in chunks."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    hs = h[:, : n * chunk].reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ts = targets[:, : n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+    if valid is None:
+        vs = jnp.ones((n, B, chunk), jnp.float32)
+    else:
+        vs = valid[:, : n * chunk].reshape(B, n, chunk).transpose(1, 0, 2).astype(jnp.float32)
+
+    def body(carry, xs):
+        hc, tc, vc = xs
+        logits = (hc @ unembed).astype(jnp.float32)          # (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * vc
+        return (carry[0] + nll.sum(), carry[1] + vc.sum()), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                     (hs, ts, vs))
+    return total / jnp.maximum(count, 1.0)
+
+
+def classification_loss(h, head, labels):
+    """Pooled (last-token) classification CE; ``head``={"w","b"} trainable by
+    every client (the paper's personalisation head)."""
+    pooled = h[:, -1, :]
+    logits = (pooled @ head["w"] + head["b"]).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return nll.mean(), logits
+
+
+def accuracy_from_logits(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

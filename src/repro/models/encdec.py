@@ -1,0 +1,129 @@
+"""Whisper-style encoder-decoder. The mel/conv frontend is a STUB per the
+assignment carve-out: the encoder consumes precomputed frame embeddings
+(B, encoder_seq, d_model) supplied by ``input_specs``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (
+    apply_norm,
+    dense_init,
+    norm_params,
+    sinusoidal_positions,
+)
+from repro.models.mlp import mlp_block, mlp_params
+from repro.models.partitioning import constrain
+
+
+def init_base(cfg, key):
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab
+    Le, Ld = cfg.encoder_layers, cfg.n_layers
+    enc_layers = {
+        "attn": attn.attn_params(cfg, keys[0], layers=Le),
+        "mlp": mlp_params(cfg, keys[1], layers=Le),
+        "ln1": norm_params(cfg, d, layers=Le),
+        "ln2": norm_params(cfg, d, layers=Le),
+    }
+    dec_layers = {
+        "self_attn": attn.attn_params(cfg, keys[2], layers=Ld),
+        "cross_attn": attn.attn_params(cfg, keys[3], layers=Ld),
+        "mlp": mlp_params(cfg, keys[4], layers=Ld),
+        "ln1": norm_params(cfg, d, layers=Ld),
+        "ln2": norm_params(cfg, d, layers=Ld),
+        "ln3": norm_params(cfg, d, layers=Ld),
+    }
+    return {
+        "embed": dense_init(keys[5], (V, d), in_axis=-1, dtype=cfg.dtype),
+        "enc_layers": enc_layers,
+        "enc_norm": norm_params(cfg, d),
+        "layers": dec_layers,
+        "final_norm": norm_params(cfg, d),
+    }
+
+
+def unembed(cfg, base):
+    return base["embed"].T  # whisper ties decoder output to the embedding
+
+
+def encode(cfg, base, frames, peft=None, lora_scale=1.0):
+    """frames: (B, F, D) precomputed frontend-stub embeddings."""
+    F = frames.shape[1]
+    h = frames.astype(cfg.dtype) + sinusoidal_positions(F, cfg.d_model).astype(cfg.dtype)
+    peft_layers = (peft or {}).get("enc_layers", {})
+
+    def body(h, xs):
+        lp, pl = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        h = h + attn.attn_block_prefill(cfg, lp["attn"], hn, pl or None,
+                                        lora_scale, causal=False)
+        hn = apply_norm(cfg, h, lp["ln2"])
+        return h + mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale), None
+
+    h, _ = jax.lax.scan(body, h, (base["enc_layers"], peft_layers))
+    return apply_norm(cfg, h, base["enc_norm"])
+
+
+def forward(cfg, base, peft, tokens, frames=None, lora_scale=1.0, memory=None):
+    """Teacher-forced decoder pass. Returns (hidden (B,S,D), aux)."""
+    if memory is None:
+        memory = encode(cfg, base, frames, peft, lora_scale)
+    S = tokens.shape[1]
+    h = jnp.take(base["embed"], tokens, axis=0)
+    h = h + sinusoidal_positions(S, cfg.d_model).astype(h.dtype)
+    peft_layers = (peft or {}).get("layers", {})
+
+    def body(h, xs):
+        lp, pl = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        h = h + attn.attn_block_prefill(cfg, lp["self_attn"], hn, pl or None,
+                                        lora_scale)
+        hn = apply_norm(cfg, h, lp["ln2"])
+        h = h + attn.cross_attn_block(cfg, lp["cross_attn"], hn, memory,
+                                      pl or None, lora_scale)
+        hn = apply_norm(cfg, h, lp["ln3"])
+        h = h + mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale)
+        return constrain(h, "prefill_h"), None
+
+    h, _ = jax.lax.scan(body, h, (base["layers"], peft_layers))
+    return apply_norm(cfg, h, base["final_norm"]), jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    L = cfg.n_layers
+    shape = (L, batch, seq_len, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "memory": jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), cfg.dtype),
+    }
+
+
+def decode_step(cfg, base, peft, cache, token, pos, lora_scale=1.0):
+    h = jnp.take(base["embed"], token, axis=0)
+    # learned/sinusoidal position for the current step
+    pos_table = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    h = h + jax.lax.dynamic_slice_in_dim(pos_table, pos, 1, axis=0)[None].astype(h.dtype)
+    memory = cache["memory"]
+    peft_layers = (peft or {}).get("layers", {})
+
+    def body(h, xs):
+        lp, pl, kc, vc = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        a, kc, vc = attn.attn_block_decode(cfg, lp["self_attn"], hn, pl or None,
+                                           lora_scale, kc, vc, pos)
+        h = h + a
+        hn = apply_norm(cfg, h, lp["ln2"])
+        h = h + attn.cross_attn_block(cfg, lp["cross_attn"], hn, memory,
+                                      pl or None, lora_scale)
+        hn = apply_norm(cfg, h, lp["ln3"])
+        return h + mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale), (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(
+        body, h, (base["layers"], peft_layers, cache["k"], cache["v"]))
+    h = apply_norm(cfg, h, base["final_norm"])
+    logits = (h[:, 0, :] @ unembed(cfg, base)).astype(jnp.float32)
+    return logits, {"k": kcs, "v": vcs, "memory": memory}

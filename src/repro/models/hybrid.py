@@ -1,0 +1,142 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single SHARED attention block
+applied every ``cfg.hybrid_attn_every`` layers (weights reused at each
+application — the Zamba trick for parameter efficiency).
+
+The shared block's KV caches are per *application site* (layer // every),
+carried through the layer scan and updated at the matching sites.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import apply_norm, dense_init, norm_params
+from repro.models.mlp import mlp_block, mlp_params
+from repro.models.partitioning import constrain
+from repro.models.ssm import mamba2_mix, mamba2_params
+
+
+def n_attn_sites(cfg) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def init_base(cfg, key):
+    keys = jax.random.split(key, 6)
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    return {
+        "embed": dense_init(keys[0], (V, d), in_axis=-1, dtype=cfg.dtype),
+        "layers": {
+            "mix": mamba2_params(cfg, keys[1], layers=L),
+            "ln1": norm_params(cfg, d, layers=L),
+        },
+        "shared": {
+            "attn": attn.attn_params(cfg, keys[2]),
+            "mlp": mlp_params(cfg, keys[3]),
+            "ln1": norm_params(cfg, d),
+            "ln2": norm_params(cfg, d),
+        },
+        "final_norm": norm_params(cfg, d),
+        "lm_head": dense_init(keys[4], (d, V), dtype=cfg.dtype),
+    }
+
+
+def embed_tokens(cfg, base, tokens):
+    return jnp.take(base["embed"], tokens, axis=0)
+
+
+def unembed(cfg, base):
+    return base["lm_head"]
+
+
+def _shared_block_prefill(cfg, shared, shared_peft, h, lora_scale):
+    hn = apply_norm(cfg, h, shared["ln1"])
+    h = h + attn.attn_block_prefill(cfg, shared["attn"], hn, shared_peft,
+                                    lora_scale, is_global=False)
+    hn = apply_norm(cfg, h, shared["ln2"])
+    return h + mlp_block(cfg, shared["mlp"], hn)
+
+
+def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    h = embed_tokens(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+    shared_peft = (peft or {}).get("shared") or None
+    every = cfg.hybrid_attn_every
+    idxs = jnp.arange(cfg.n_layers)
+
+    def body(h, xs):
+        lp, pl, idx = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        mix, _, _ = mamba2_mix(cfg, lp["mix"], hn, pl or None, lora_scale)
+        h = h + mix
+        h = jax.lax.cond(
+            (idx % every) == (every - 1),
+            lambda hh: _shared_block_prefill(cfg, base["shared"], shared_peft,
+                                             hh, lora_scale),
+            lambda hh: hh,
+            h)
+        return constrain(h, "prefill_h"), None
+
+    h, _ = jax.lax.scan(body, h, (base["layers"], peft_layers, idxs))
+    h = apply_norm(cfg, h, base["final_norm"])
+    return h, jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    L = cfg.n_layers
+    W = min(cfg.window, seq_len)
+    sites = n_attn_sites(cfg)
+    return {
+        "ssm": jnp.zeros((L, batch, H, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((L, batch, s.conv_kernel - 1, d_inner), cfg.dtype),
+        "attn_k": jnp.zeros((sites, batch, W, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "attn_v": jnp.zeros((sites, batch, W, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+    }
+
+
+def decode_step(cfg, base, peft, cache, token, pos, lora_scale=1.0):
+    h = embed_tokens(cfg, base, token)
+    peft_layers = (peft or {}).get("layers", {})
+    shared_peft = (peft or {}).get("shared") or None
+    every = cfg.hybrid_attn_every
+    idxs = jnp.arange(cfg.n_layers)
+
+    def shared_decode(h, ks, vs, site):
+        kc = jax.lax.dynamic_index_in_dim(ks, site, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vs, site, 0, keepdims=False)
+        hn = apply_norm(cfg, h, base["shared"]["ln1"])
+        a, kc, vc = attn.attn_block_decode(cfg, base["shared"]["attn"], hn,
+                                           shared_peft, lora_scale, kc, vc,
+                                           pos, is_global=False)
+        h = h + a
+        hn = apply_norm(cfg, h, base["shared"]["ln2"])
+        h = h + mlp_block(cfg, base["shared"]["mlp"], hn)
+        ks = jax.lax.dynamic_update_index_in_dim(ks, kc, site, 0)
+        vs = jax.lax.dynamic_update_index_in_dim(vs, vc, site, 0)
+        return h, ks, vs
+
+    def body(carry, xs):
+        h, ks, vs = carry
+        lp, pl, ssm_s, conv_s, idx = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        mix, ssm_s, conv_s = mamba2_mix(cfg, lp["mix"], hn, pl or None,
+                                        lora_scale, state=ssm_s, conv_state=conv_s)
+        h = h + mix
+        site = idx // every
+        h, ks, vs = jax.lax.cond(
+            (idx % every) == (every - 1),
+            lambda h, ks, vs: shared_decode(h, ks, vs, site),
+            lambda h, ks, vs: (h, ks, vs),
+            h, ks, vs)
+        return (h, ks, vs), (ssm_s, conv_s)
+
+    (h, ks, vs), (ssm_states, conv_states) = jax.lax.scan(
+        body, (h, cache["attn_k"], cache["attn_v"]),
+        (base["layers"], peft_layers, cache["ssm"], cache["conv"], idxs))
+    h = apply_norm(cfg, h, base["final_norm"])
+    logits = (h[:, 0, :] @ unembed(cfg, base)).astype(jnp.float32)
+    return logits, {"ssm": ssm_states, "conv": conv_states,
+                    "attn_k": ks, "attn_v": vs}

@@ -1,0 +1,37 @@
+"""Gated-MLP (SwiGLU / GeGLU) block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init, maybe_lora, proj
+
+
+def mlp_params(cfg, key, layers=None, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    stack = (layers,) if layers else ()
+    p = {
+        "wi": dense_init(keys[0], stack + (d, f), dtype=cfg.dtype),
+        "wg": dense_init(keys[1], stack + (d, f), dtype=cfg.dtype),
+        "wd": dense_init(keys[2], stack + (f, d), dtype=cfg.dtype),
+    }
+    if cfg.use_bias:
+        p["wi_b"] = jnp.zeros(stack + (f,), cfg.dtype)
+        p["wd_b"] = jnp.zeros(stack + (d,), cfg.dtype)
+    return p
+
+
+def _lora_entry(peft_layer, name):
+    e = maybe_lora(peft_layer, name)
+    return e if (e is not None and "A" in e) else None
+
+
+def mlp_block(cfg, p, x, peft_layer=None, lora_scale=1.0):
+    up = proj(x, p["wi"], p.get("wi_b"), _lora_entry(peft_layer, "wi"), lora_scale)
+    gate = proj(x, p["wg"], None, _lora_entry(peft_layer, "wg"), lora_scale)
+    h = activation(cfg, gate) * up
+    if peft_layer is not None and "ia3_ff" in peft_layer:
+        h = h * peft_layer["ia3_ff"]["s"].astype(h.dtype)
+    return proj(h, p["wd"], p.get("wd_b"), _lora_entry(peft_layer, "wd"), lora_scale)

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts block: top-k routing with GShard-style capacity
+dispatch, token-chunked so the (tokens, E, C) dispatch tensor stays
+VMEM/HBM-bounded at 32k-token prefills.
+
+Experts are sharded over the `model` mesh axis (expert parallelism); the
+dispatch/combine einsums become all-to-alls under GSPMD. Router auxiliary
+load-balancing loss follows Switch Transformer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+
+
+def moe_params(cfg, key, layers=None):
+    d = cfg.d_model
+    m = cfg.moe
+    f = m.d_expert
+    keys = jax.random.split(key, 5)
+    stack = (layers,) if layers else ()
+    p = {
+        "router": dense_init(keys[0], stack + (d, m.n_experts), dtype=jnp.float32),
+        "wi": dense_init(keys[1], stack + (m.n_experts, d, f), dtype=cfg.dtype),
+        "wg": dense_init(keys[2], stack + (m.n_experts, d, f), dtype=cfg.dtype),
+        "wd": dense_init(keys[3], stack + (m.n_experts, f, d), dtype=cfg.dtype),
+    }
+    if m.n_shared_experts:
+        sf = f * m.n_shared_experts
+        sk = jax.random.split(keys[4], 3)
+        p["shared"] = {
+            "wi": dense_init(sk[0], stack + (d, sf), dtype=cfg.dtype),
+            "wg": dense_init(sk[1], stack + (d, sf), dtype=cfg.dtype),
+            "wd": dense_init(sk[2], stack + (sf, d), dtype=cfg.dtype),
+        }
+    return p
+
+
+def _capacity(n_tokens: int, m) -> int:
+    return max(4, int(n_tokens * m.top_k * m.capacity_factor / m.n_experts))
+
+
+def _dispatch_chunk(cfg, p, chunk):
+    """chunk: (T, D) -> (out: (T, D), aux_loss scalar).
+
+    Capacity-based top-k dispatch. Tokens above an expert's capacity are
+    dropped for that expert (standard GShard semantics).
+    """
+    m = cfg.moe
+    T, D = chunk.shape
+    E = m.n_experts
+    C = _capacity(T, m)
+
+    logits = (chunk.astype(jnp.float32) @ p["router"])           # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topg, topi = jax.lax.top_k(gates, m.top_k)                   # (T, k)
+    topg = topg / jnp.maximum(topg.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e (frac_tokens_e * frac_prob_e)
+    me = gates.mean(0)
+    ce = jnp.zeros(E).at[topi[:, 0]].add(1.0) / T
+    aux = E * jnp.sum(me * ce)
+
+    counts = jnp.zeros((E,), jnp.int32)
+    dispatch = jnp.zeros((T, E, C), chunk.dtype)
+    combine = jnp.zeros((T, E, C), jnp.float32)
+    for j in range(m.top_k):                                      # static k
+        onehot = jax.nn.one_hot(topi[:, j], E, dtype=jnp.int32)   # (T, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]    # (T, E)
+        counts = counts + onehot.sum(0)
+        keep = (onehot == 1) & (pos < C)
+        posc = jnp.clip(pos, 0, C - 1)
+        d_j = keep[..., None] & (jax.nn.one_hot(posc, C, dtype=jnp.int32) == 1)
+        dispatch = dispatch + d_j.astype(chunk.dtype)
+        combine = combine + d_j.astype(jnp.float32) * topg[:, j][:, None, None]
+
+    xe = jnp.einsum("tec,td->ecd", dispatch, chunk)               # (E, C, D)
+    up = jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    h = activation(cfg, gate) * up
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"])                   # (E, C, D)
+    out = jnp.einsum("tec,ecd->td", combine.astype(chunk.dtype), ye)
+
+    if m.n_shared_experts:
+        s = p["shared"]
+        sh = activation(cfg, chunk @ s["wg"]) * (chunk @ s["wi"])
+        out = out + sh @ s["wd"]
+    return out, aux
+
+
+def moe_block(cfg, p, x):
+    """x: (B, S, D) -> (out, aux_loss). Chunked over tokens."""
+    B, S, D = x.shape
+    tokens = x.reshape(B * S, D)
+    T = tokens.shape[0]
+    chunk = min(cfg.moe.router_chunk, T)
+    n = T // chunk
+    if n * chunk != T:            # pad to a whole number of chunks
+        pad = n * chunk + chunk - T
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+        n += 1
+    else:
+        pad = 0
+
+    if n == 1:
+        out, aux = _dispatch_chunk(cfg, p, tokens)
+    else:
+        chunks = tokens.reshape(n, chunk, D)
+
+        def body(acc, tc):
+            out_c, aux_c = _dispatch_chunk(cfg, p, tc)
+            return acc + aux_c, out_c
+
+        aux, outs = jax.lax.scan(body, jnp.float32(0.0), chunks)
+        out = outs.reshape(n * chunk, D)
+        aux = aux / n
+    del pad  # padded tail (if any) is dropped by the slice below
+    return out[: B * S].reshape(B, S, D), aux

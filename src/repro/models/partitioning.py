@@ -1,0 +1,42 @@
+"""Optional sharding hints for model internals.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, "name")``, which is a
+no-op unless the launcher installed a PartitionSpec for that name via the
+``sharding_hints`` context manager (dryrun/serve do this while lowering under
+the production mesh).
+
+Why this exists: GSPMD's sharding propagation sometimes picks an internal
+sharding that conflicts with the cache layout (e.g. re-sharding a 32k-token
+KV cache from sequence-sharded to kv-head-sharded *inside the layer scan*,
+which costs a full all-gather per layer). A single constraint at the right
+spot pins the intended data flow.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_STATE = threading.local()
+
+
+def _hints():
+    return getattr(_STATE, "hints", {})
+
+
+@contextlib.contextmanager
+def sharding_hints(hints: dict):
+    old = _hints()
+    _STATE.hints = {**old, **hints}
+    try:
+        yield
+    finally:
+        _STATE.hints = old
+
+
+def constrain(x, name: str):
+    spec = _hints().get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,106 @@
+"""Family registry: one uniform API over all 10 assigned architectures.
+
+    model = get_model(cfg)
+    base  = model.init_base(cfg, key)          # frozen weights
+    h,aux = model.forward(cfg, base, peft, batch)
+    loss  = lm_loss(cfg, base, peft, batch) / cls_loss(...)
+    cache = model.init_cache(cfg, batch, seq_len)
+    logits, cache = model.decode_step(cfg, base, peft, cache, token, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, rwkv_model, transformer
+from repro.models.common import chunked_lm_loss, classification_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    init_base: Callable
+    forward: Callable          # (cfg, base, peft, batch) -> (hidden, aux)
+    unembed: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+
+def _tf_forward(cfg, base, peft, batch, lora_scale=1.0):
+    return transformer.forward(cfg, base, peft, batch["tokens"],
+                               extra_embeds=batch.get("patch_embeds"),
+                               lora_scale=lora_scale)
+
+
+def _rwkv_forward(cfg, base, peft, batch, lora_scale=1.0):
+    return rwkv_model.forward(cfg, base, peft, batch["tokens"],
+                              lora_scale=lora_scale)
+
+
+def _hybrid_forward(cfg, base, peft, batch, lora_scale=1.0):
+    return hybrid.forward(cfg, base, peft, batch["tokens"],
+                          lora_scale=lora_scale)
+
+
+def _encdec_forward(cfg, base, peft, batch, lora_scale=1.0):
+    return encdec.forward(cfg, base, peft, batch["tokens"],
+                          frames=batch["frames"], lora_scale=lora_scale)
+
+
+_FAMILIES = {
+    "dense": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
+                      transformer.init_cache, transformer.decode_step),
+    "moe": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
+                    transformer.init_cache, transformer.decode_step),
+    "vlm": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
+                    transformer.init_cache, transformer.decode_step),
+    "ssm": ModelFns(rwkv_model.init_base, _rwkv_forward, rwkv_model.unembed,
+                    rwkv_model.init_cache, rwkv_model.decode_step),
+    "hybrid": ModelFns(hybrid.init_base, _hybrid_forward, hybrid.unembed,
+                       hybrid.init_cache, hybrid.decode_step),
+    "audio": ModelFns(encdec.init_base, _encdec_forward, encdec.unembed,
+                      encdec.init_cache, encdec.decode_step),
+}
+
+
+def get_model(cfg) -> ModelFns:
+    return _FAMILIES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Losses — the objective f(w; D) the paper differentiates
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg, base, peft, batch, lora_scale=1.0):
+    """Causal-LM next-token loss (billion-scale configs / dry-run)."""
+    model = get_model(cfg)
+    h, aux = model.forward(cfg, base, peft, batch, lora_scale=lora_scale)
+    tokens = batch["tokens"]
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    valid = jnp.ones_like(targets, jnp.float32).at[:, -1].set(0.0)
+    if "patch_embeds" in batch and batch["patch_embeds"] is not None:
+        h = h[:, batch["patch_embeds"].shape[1]:, :]   # loss on text only
+    loss = chunked_lm_loss(h, model.unembed(cfg, base), targets, valid)
+    return loss + 0.01 * aux
+
+
+def cls_loss(cfg, base, peft, batch, lora_scale=1.0):
+    """Sequence-classification loss (the paper's FL tasks) using the
+    trainable head in ``peft['head']``."""
+    model = get_model(cfg)
+    h, aux = model.forward(cfg, base, peft, batch, lora_scale=lora_scale)
+    loss, _ = classification_loss(h, peft["head"], batch["labels"])
+    return loss + 0.01 * aux
+
+
+def cls_logits(cfg, base, peft, batch, lora_scale=1.0):
+    model = get_model(cfg)
+    h, _ = model.forward(cfg, base, peft, batch, lora_scale=lora_scale)
+    pooled = h[:, -1, :]
+    return (pooled @ peft["head"]["w"] + peft["head"]["b"]).astype(jnp.float32)
+
+
+def get_loss_fn(task: str):
+    return {"lm": lm_loss, "cls": cls_loss}[task]

@@ -1,0 +1,85 @@
+"""RWKV6 ("Finch") full model stack — attention-free family."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm, dense_init, norm_params
+from repro.models.partitioning import constrain
+from repro.models.ssm import rwkv6_channel_mix, rwkv6_params, rwkv6_time_mix
+
+
+def init_base(cfg, key):
+    keys = jax.random.split(key, 4)
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    return {
+        "embed": dense_init(keys[0], (V, d), in_axis=-1, dtype=cfg.dtype),
+        "layers": {
+            "mix": rwkv6_params(cfg, keys[1], layers=L),
+            "ln1": norm_params(cfg, d, layers=L),
+            "ln2": norm_params(cfg, d, layers=L),
+        },
+        "final_norm": norm_params(cfg, d),
+        "lm_head": dense_init(keys[2], (d, V), dtype=cfg.dtype),
+    }
+
+
+def embed_tokens(cfg, base, tokens):
+    return jnp.take(base["embed"], tokens, axis=0)
+
+
+def unembed(cfg, base):
+    return base["lm_head"]
+
+
+def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    h = embed_tokens(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+
+    def body(h, xs):
+        lp, pl = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        tm, _, _ = rwkv6_time_mix(cfg, lp["mix"], hn, pl or None, lora_scale)
+        h = h + tm
+        hn = apply_norm(cfg, h, lp["ln2"])
+        cm, _ = rwkv6_channel_mix(cfg, lp["mix"], hn)
+        return constrain(h + cm, "prefill_h"), None
+
+    h, _ = jax.lax.scan(body, h, (base["layers"], peft_layers))
+    h = apply_norm(cfg, h, base["final_norm"])
+    return h, jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+    L = cfg.n_layers
+    return {
+        "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((L, batch, 1, cfg.d_model), cfg.dtype),
+        "shift_cm": jnp.zeros((L, batch, 1, cfg.d_model), cfg.dtype),
+    }
+
+
+def decode_step(cfg, base, peft, cache, token, pos, lora_scale=1.0):
+    h = embed_tokens(cfg, base, token)     # (B,1,D)
+    peft_layers = (peft or {}).get("layers", {})
+
+    def body(h, xs):
+        lp, pl, wkv, s_tm, s_cm = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        tm, wkv, last_tm = rwkv6_time_mix(
+            cfg, lp["mix"], hn, pl or None, lora_scale,
+            state=wkv, shift_prev=s_tm)
+        h = h + tm
+        hn = apply_norm(cfg, h, lp["ln2"])
+        cm, last_cm = rwkv6_channel_mix(cfg, lp["mix"], hn, shift_prev=s_cm)
+        return h + cm, (wkv, last_tm.astype(s_tm.dtype), last_cm.astype(s_cm.dtype))
+
+    h, (wkvs, stms, scms) = jax.lax.scan(
+        body, h,
+        (base["layers"], peft_layers, cache["wkv"], cache["shift_tm"],
+         cache["shift_cm"]))
+    h = apply_norm(cfg, h, base["final_norm"])
+    logits = (h[:, 0, :] @ unembed(cfg, base)).astype(jnp.float32)
+    return logits, {"wkv": wkvs, "shift_tm": stms, "shift_cm": scms}

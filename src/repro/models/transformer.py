@@ -1,0 +1,233 @@
+"""Decoder-only transformer stack covering the dense / moe / vlm families.
+
+Layers are stacked on a leading axis and driven by ``lax.scan``; the gemma3
+local:global pattern is handled with a per-layer ``lax.cond`` whose branches
+are *statically* specialised (banded key-slicing for local layers, full
+attention for global layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models.common import (
+    apply_norm,
+    dense_init,
+    norm_params,
+)
+from repro.models.partitioning import constrain
+from repro.models.mlp import mlp_block, mlp_params
+from repro.models.moe import moe_block, moe_params
+
+
+def init_base(cfg, key):
+    keys = jax.random.split(key, 6)
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    layers = {
+        "attn": attn.attn_params(cfg, keys[0], layers=L),
+        "ln1": norm_params(cfg, d, layers=L),
+        "ln2": norm_params(cfg, d, layers=L),
+    }
+    if cfg.moe is not None:
+        layers["moe"] = moe_params(cfg, keys[1], layers=L)
+    else:
+        layers["mlp"] = mlp_params(cfg, keys[1], layers=L)
+    base = {
+        "embed": dense_init(keys[2], (V, d), in_axis=-1, dtype=cfg.dtype),
+        "layers": layers,
+        "final_norm": norm_params(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        base["lm_head"] = dense_init(keys[3], (d, V), dtype=cfg.dtype)
+    return base
+
+
+def _peft_bias(pl, name, like):
+    """BitFit additive bias (zero when absent)."""
+    if pl and name in pl:
+        return pl[name]["b"].astype(like.dtype)
+    return jnp.zeros((), like.dtype)
+
+
+def _layer_flags(cfg):
+    return jnp.asarray(
+        np.array([cfg.is_global_layer(i) for i in range(cfg.n_layers)]), bool)
+
+
+def _mixed_pattern(cfg) -> bool:
+    flags = [cfg.is_global_layer(i) for i in range(cfg.n_layers)]
+    return any(flags) and not all(flags)
+
+
+def embed_tokens(cfg, base, tokens):
+    h = jnp.take(base["embed"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def unembed(cfg, base):
+    return base["embed"].T if cfg.tie_embeddings else base["lm_head"]
+
+
+def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    """Full (train/prefill) forward pass -> (hidden (B,S,D), aux_loss).
+
+    ``extra_embeds`` (B,P,D) are frontend-stub embeddings (VLM patches /
+    early-fusion image tokens) prepended to the token embeddings.
+    """
+    h = embed_tokens(cfg, base, tokens)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    flags = _layer_flags(cfg)
+    mixed = _mixed_pattern(cfg)
+    peft_layers = (peft or {}).get("layers", {})
+
+    def attn_branch(is_global_static):
+        def run(lp, pl, hn):
+            return attn.attn_block_prefill(
+                cfg, lp["attn"], hn, pl or None, lora_scale,
+                is_global=is_global_static)
+        return run
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, pl, is_global = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        if mixed:
+            a = jax.lax.cond(is_global,
+                             lambda: attn_branch(True)(lp, pl, hn),
+                             lambda: attn_branch(False)(lp, pl, hn))
+        else:
+            a = attn_branch(bool(cfg.is_global_layer(0)))(lp, pl, hn)
+        h = h + a + _peft_bias(pl, "bias1", h)
+        hn = apply_norm(cfg, h, lp["ln2"])
+        if cfg.moe is not None:
+            y, aux_l = moe_block(cfg, lp["moe"], hn)
+            aux = aux + aux_l
+        else:
+            y = mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale)
+        h = constrain(h + y + _peft_bias(pl, "bias2", h), "prefill_h")
+        return (h, aux), None
+
+    (h, aux), _ = jax.lax.scan(
+        body, (h, jnp.float32(0.0)), (base["layers"], peft_layers, flags))
+    h = apply_norm(cfg, h, base["final_norm"])
+    return h, aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg, seq_len: int) -> int:
+    if cfg.attn_pattern == "swa":
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg, batch: int, seq_len: int, kv_int8: bool = False):
+    """KV cache. kv_int8=True stores int8 entries + per-(token,head) bf16
+    absmax scales — halves cache HBM (beyond-paper; EXPERIMENTS §Perf-2)."""
+    Sc = cache_len(cfg, seq_len)
+    shape = (cfg.n_layers, batch, Sc, cfg.n_kv_heads, cfg.hd)
+    if kv_int8:
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, cfg.dtype),
+                "v_scale": jnp.zeros(sshape, cfg.dtype)}
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def _quantize_kv(x):
+    """x: (..., hd) -> (int8, scale (...,1)). Per-vector absmax."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def decode_step(cfg, base, peft, cache, token, pos, lora_scale=1.0):
+    """token: (B,1) int32; pos: scalar int32. Returns (logits (B,V), cache).
+
+    Mixed local:global stacks use a traced per-layer window length instead
+    of lax.cond — the masks differ, the computation (and hence the SPMD
+    sharding) stays uniform across the layer scan.
+
+    The KV cache is NOT threaded through scan xs/ys (that double-buffers the
+    multi-GB arrays); the layer scan reads the loop-invariant cache via
+    dynamic indexing and emits only the new-token K/V rows, inserted with
+    one fused in-place write after the scan (§Perf-2)."""
+    h = embed_tokens(cfg, base, token)
+    flags = _layer_flags(cfg)
+    mixed = _mixed_pattern(cfg)
+    peft_layers = (peft or {}).get("layers", {})
+    Sc = cache["k"].shape[2]
+    window_lens = jnp.where(flags, jnp.int32(2**30), jnp.int32(cfg.window))
+    cache_k_all, cache_v_all = cache["k"], cache["v"]
+    quantized = "k_scale" in cache
+
+    def body(carry, xs):
+        h, li = carry
+        lp, pl, wlen = xs
+        kc = jax.lax.dynamic_index_in_dim(cache_k_all, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(cache_v_all, li, 0, keepdims=False)
+        if quantized:
+            ks = jax.lax.dynamic_index_in_dim(cache["k_scale"], li, 0,
+                                              keepdims=False)
+            vs = jax.lax.dynamic_index_in_dim(cache["v_scale"], li, 0,
+                                              keepdims=False)
+            kc = _dequantize_kv(kc, ks, cfg.dtype)
+            vc = _dequantize_kv(vc, vs, cfg.dtype)
+        hn = apply_norm(cfg, h, lp["ln1"])
+        if mixed:
+            a, k_new, v_new = attn.attn_block_decode_nocopy(
+                cfg, lp["attn"], hn, pl or None, lora_scale, kc, vc, pos,
+                window_len=wlen)
+        else:
+            a, k_new, v_new = attn.attn_block_decode_nocopy(
+                cfg, lp["attn"], hn, pl or None, lora_scale, kc, vc, pos,
+                is_global=bool(cfg.is_global_layer(0)))
+        h = h + a
+        hn = apply_norm(cfg, h, lp["ln2"])
+        if cfg.moe is not None:
+            y, _ = moe_block(cfg, lp["moe"], hn)
+        else:
+            y = mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale)
+        return (h + y, li + 1), (k_new, v_new)
+
+    (h, _), (k_news, v_news) = jax.lax.scan(
+        body, (h, jnp.int32(0)),
+        (base["layers"], peft_layers, window_lens))
+    h = apply_norm(cfg, h, base["final_norm"])
+    logits = (h[:, 0, :] @ unembed(cfg, base)).astype(jnp.float32)
+    # single fused insert of all layers' new-token K/V (see
+    # attn_block_decode_nocopy): one in-place row write instead of scanning
+    # the multi-GB cache through ys
+    slot = pos % Sc
+    if quantized:
+        kq, ksc = _quantize_kv(k_news)
+        vq, vsc = _quantize_kv(v_news)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ksc.astype(cache["k_scale"].dtype), slot, axis=2),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vsc.astype(cache["v_scale"].dtype), slot, axis=2),
+        }
+    else:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_news.astype(cache["k"].dtype), slot, axis=2),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_news.astype(cache["v"].dtype), slot, axis=2),
+        }
+    return logits, new_cache

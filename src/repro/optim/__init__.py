@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    yogi,
+    clip_by_global_norm,
+)

@@ -1,0 +1,137 @@
+"""Pure-JAX first-order optimizers (optax is not available in this environment).
+
+An ``Optimizer`` is a pair of pure functions over pytrees:
+
+    state  = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+matching the optax calling convention so client-side (SGD/Adam/AdamW) and
+server-side (FedAdam/FedYogi built on these) code composes uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# SGD / momentum
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": tree_zeros_like(params)}
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(lambda mi, g: beta * mi + g, state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda mi, g: -lr * (beta * mi + g), m, grads)
+        else:
+            upd = jax.tree.map(lambda mi: -lr * mi, m)
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam family
+# ---------------------------------------------------------------------------
+
+class _AdamState(NamedTuple):
+    count: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay=0.0, second_moment="adam"):
+    """Shared Adam/AdamW/Yogi machinery.
+
+    second_moment:
+      'adam': v <- b2*v + (1-b2)*g^2
+      'yogi': v <- v - (1-b2)*sign(v - g^2)*g^2      (Zaheer et al., 2018)
+    """
+
+    def init(params):
+        return _AdamState(jnp.zeros([], jnp.int32), tree_zeros_like(params),
+                          tree_zeros_like(params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g, state.m, grads)
+        if second_moment == "adam":
+            v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * (g * g),
+                             state.v, grads)
+        else:  # yogi
+            v = jax.tree.map(
+                lambda vi, g: vi - (1 - b2) * jnp.sign(vi - g * g) * (g * g),
+                state.v, grads)
+        # bias correction
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(mi, vi, p):
+            mhat = mi / c1
+            vhat = vi / c2
+            step = -lr * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step - lr * weight_decay * p
+            return step
+
+        if weight_decay:
+            updates = jax.tree.map(upd, m, v, params)
+        else:
+            updates = jax.tree.map(lambda mi, vi: upd(mi, vi, None), m, v)
+        return updates, _AdamState(count, m, v)
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=weight_decay)
+
+
+def yogi(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-3) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, second_moment="yogi")
+
+
+# ---------------------------------------------------------------------------
+# Gradient transforms
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads, max_norm: float):
+    from repro.utils.pytree import tree_norm
+
+    norm = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm

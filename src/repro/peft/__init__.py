@@ -1,0 +1,7 @@
+from repro.peft.lora import (
+    count_trainable,
+    default_lora_targets,
+    init_peft,
+    peft_layer_groups,
+    target_dims,
+)

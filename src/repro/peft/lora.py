@@ -1,0 +1,125 @@
+"""PEFT parameter trees (LoRA default; IA3 / BitFit / classifier-only also
+supported, matching the paper's ablation in Appendix G).
+
+The PEFT tree is structurally separate from the frozen base:
+
+    peft = {
+      "layers":     {target: {"A": (L, din, r), "B": (L, r, dout)}},   # stacked
+      "enc_layers": {...},                      # whisper encoder (if any)
+      "shared":     {target: {"A": (din,r), "B": (r,dout)}},           # zamba2
+      "head":       {"w": (D, C), "b": (C,)},   # classifier, trained by ALL clients
+    }
+
+Only this tree is trainable / perturbed / communicated. SPRY's layer-to-
+client splitting enumerates (group, target, layer) units over it — see
+core/assignment.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def default_lora_targets(cfg):
+    if cfg.family == "ssm":           # rwkv6 projections
+        return ("wr", "wv")
+    if cfg.family == "hybrid":        # mamba2 projections
+        return ("in_proj", "out_proj")
+    return ("wq", "wv")
+
+
+def target_dims(cfg, target: str):
+    """(din, dout) of the matrix a LoRA pair adapts."""
+    d, hd = cfg.d_model, cfg.hd
+    table = {
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, d),
+        "wi": (d, cfg.d_ff),
+        "wg": (d, cfg.d_ff),
+        "wd": (cfg.d_ff, d),
+        # rwkv6
+        "wr": (d, d),
+        # mamba2
+        "in_proj": (d, 2 * (cfg.ssm.expand * d) if cfg.ssm else 2 * d),
+        "out_proj": ((cfg.ssm.expand * d) if cfg.ssm else d, d),
+    }
+    if cfg.family == "ssm" and target in ("wk", "wv", "wo"):
+        return (d, d)
+    return table[target]
+
+
+def _lora_pair(key, din, dout, r, stack=()):
+    ka, kb = jax.random.split(key)
+    return {
+        "A": dense_init(ka, stack + (din, r), dtype=jnp.float32),
+        "B": jnp.zeros(stack + (r, dout), jnp.float32),   # B=0 -> identity at init
+    }
+
+
+def peft_layer_groups(cfg):
+    """(group_name, n_layers) pairs that carry stacked per-layer PEFT params."""
+    groups = [("layers", cfg.n_layers)]
+    if cfg.encoder_layers:
+        groups.append(("enc_layers", cfg.encoder_layers))
+    return groups
+
+
+def init_peft(cfg, key, spry_cfg):
+    kind = spry_cfg.peft
+    targets = spry_cfg.lora_targets or default_lora_targets(cfg)
+    # for ssm/hybrid families, remap the generic defaults
+    if cfg.family in ("ssm", "hybrid") and targets == ("wq", "wv"):
+        targets = default_lora_targets(cfg)
+    r = spry_cfg.lora_rank
+    keys = jax.random.split(key, 8)
+
+    peft = {}
+    if kind == "lora":
+        for gi, (group, L) in enumerate(peft_layer_groups(cfg)):
+            gtree = {}
+            tkeys = jax.random.split(keys[gi], len(targets))
+            for tk, t in zip(tkeys, targets):
+                din, dout = target_dims(cfg, t)
+                gtree[t] = _lora_pair(tk, din, dout, r, stack=(L,))
+            peft[group] = gtree
+        if cfg.family == "hybrid":
+            # the shared attention block gets one unstacked LoRA pair set
+            stree = {}
+            tkeys = jax.random.split(keys[3], 2)
+            for tk, t in zip(tkeys, ("wq", "wv")):
+                din, dout = target_dims(cfg, t)
+                stree[t] = _lora_pair(tk, din, dout, r)
+            peft["shared"] = stree
+    elif kind == "ia3":
+        # IA3: elementwise rescaling vectors on k/v/ffn activations.
+        for group, L in peft_layer_groups(cfg):
+            peft[group] = {
+                "ia3_kv": {"s": jnp.ones((L, cfg.n_kv_heads * cfg.hd), jnp.float32)},
+                "ia3_ff": {"s": jnp.ones((L, cfg.d_ff), jnp.float32)},
+            }
+    elif kind == "bitfit":
+        for group, L in peft_layer_groups(cfg):
+            peft[group] = {
+                "bias1": {"b": jnp.zeros((L, cfg.d_model), jnp.float32)},
+                "bias2": {"b": jnp.zeros((L, cfg.d_model), jnp.float32)},
+            }
+    elif kind == "classifier_only":
+        pass
+    else:
+        raise ValueError(f"unknown peft kind {kind!r}")
+
+    if cfg.n_classes:
+        kw, _ = jax.random.split(keys[7])
+        peft["head"] = {
+            "w": dense_init(kw, (cfg.d_model, cfg.n_classes), dtype=jnp.float32),
+            "b": jnp.zeros((cfg.n_classes,), jnp.float32),
+        }
+    return peft
+
+
+def count_trainable(peft) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(peft))

@@ -1,0 +1,12 @@
+from repro.utils.pytree import (
+    tree_zeros_like,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    tree_where_mask,
+    tree_cast,
+    normal_like,
+)

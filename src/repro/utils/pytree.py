@@ -1,0 +1,70 @@
+"""Pytree arithmetic helpers used throughout the framework.
+
+All functions are pure and jit-safe; they operate on arbitrary pytrees of
+jnp arrays (model params, optimizer states, perturbations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """a*x + y elementwise over trees."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Inner product across the full flattened tree (float32 accumulate)."""
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar entries (static)."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_where_mask(mask_tree, a, b):
+    """Select a where mask truthy, b elsewhere; mask leaves broadcast."""
+    return jax.tree.map(lambda m, x, y: jnp.where(m, x, y), mask_tree, a, b)
+
+
+def normal_like(key, tree, dtype=None):
+    """Sample a standard-normal pytree matching ``tree``'s structure.
+
+    Each leaf gets an independent fold of ``key`` so the sample for one leaf
+    does not depend on iteration order elsewhere.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    samples = [
+        jax.random.normal(k, l.shape, dtype or l.dtype) for k, l in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, samples)

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single CPU device (the 512-device dry-run sets its own
+# XLA_FLAGS in a subprocess; see tests/test_dryrun_smoke.py).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(2 layers, d_model<=512, <=4 experts) runs one forward pass, one SPRY train
+round, and one decode step on CPU — asserting shapes and finiteness.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SpryConfig, get_config, reduce_config
+from repro.core import init_state, make_round_step
+from repro.models import get_model, lm_loss
+from repro.peft import init_peft
+
+
+def _batch_for(cfg, key, M=None, B=2, S=24):
+    shape = (M, B, S) if M else (B, S)
+    batch = {"tokens": jax.random.randint(key, shape, 0, cfg.vocab)}
+    if cfg.frontend == "vision" and cfg.n_frontend_tokens:
+        eshape = ((M, B) if M else (B,)) + (cfg.n_frontend_tokens, cfg.d_model)
+        batch["patch_embeds"] = jnp.zeros(eshape, jnp.float32)
+    if cfg.family == "audio":
+        fshape = ((M, B) if M else (B,)) + (cfg.encoder_seq, cfg.d_model)
+        batch["frames"] = jnp.zeros(fshape, jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_forward_shapes_and_finite(arch, key):
+    cfg = reduce_config(get_config(arch))
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig())
+    batch = _batch_for(cfg, key)
+    h, aux = model.forward(cfg, base, peft, batch)
+    S_total = batch["tokens"].shape[1] + (
+        cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    assert h.shape == (2, S_total, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+    loss = lm_loss(cfg, base, peft, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_spry_train_step(arch, key):
+    cfg = reduce_config(get_config(arch))
+    sc = SpryConfig(n_clients_per_round=2, local_iters=1, local_lr=1e-3,
+                    server_lr=1e-2)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, sc)
+    state = init_state(base, peft)
+    step = jax.jit(make_round_step(cfg, sc, task="lm"))
+    batch = _batch_for(cfg, key, M=2)
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # peft actually changed
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(new_state.peft),
+                        jax.tree.leaves(state.peft)))
+    assert moved
+    # base frozen
+    for a, b in zip(jax.tree.leaves(new_state.base),
+                    jax.tree.leaves(state.base)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_decode_step(arch, key):
+    cfg = reduce_config(get_config(arch))
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig())
+    B = 2
+    cache = model.init_cache(cfg, B, 32)
+    logits, cache2 = model.decode_step(cfg, base, peft, cache,
+                                       jnp.zeros((B, 1), jnp.int32),
+                                       jnp.int32(0))
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-12b", "h2o-danube-3-4b",
+                                  "rwkv6-1.6b", "zamba2-1.2b"])
+def test_decode_matches_teacher_forcing(arch, key):
+    """Decode with cache must reproduce the teacher-forced last-position
+    logits (sub-quadratic archs: the long_500k path's correctness)."""
+    cfg = reduce_config(get_config(arch))
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig())
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    h, _ = model.forward(cfg, base, peft, {"tokens": toks})
+    un = base["embed"].T if cfg.tie_embeddings else base["lm_head"]
+    ref = (h[:, -1, :] @ un).astype(jnp.float32)
+    cache = model.init_cache(cfg, B, S + 2)
+    step = jax.jit(lambda c, t, p: model.decode_step(cfg, base, peft, c, t, p))
+    for i in range(S):
+        logits, cache = step(cache, toks[:, i:i + 1], jnp.int32(i))
+    rel = float(jnp.abs(logits - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 2e-2, rel
+
+
+def test_kv_int8_decode_matches_bf16(key):
+    """Beyond-paper int8 KV cache: decode logits must match the full-precision
+    teacher-forced reference closely (EXPERIMENTS §Perf-2 iter 4)."""
+    from repro.models import transformer
+    cfg = reduce_config(get_config("gemma3-27b"))
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig())
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    h, _ = model.forward(cfg, base, peft, {"tokens": toks})
+    ref = (h[:, -1, :] @ base["embed"].T).astype(jnp.float32)
+    cache = transformer.init_cache(cfg, B, S + 2, kv_int8=True)
+    step = jax.jit(lambda c, t, p: model.decode_step(cfg, base, peft, c, t, p))
+    for i in range(S):
+        logits, cache = step(cache, toks[:, i:i + 1], jnp.int32(i))
+    rel = float(jnp.abs(logits - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 5e-2, rel
+
+
+def test_ring_buffer_cache_equivalence(key):
+    """SWA arch: a ring-buffer cache (len=window) must give the same logits
+    as a full-length cache once both cover the window."""
+    cfg = reduce_config(get_config("h2o-danube-3-4b"))
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig())
+    B, S = 1, 40                     # window after reduce_config = 64 > S
+    cfg_small_window = dataclasses.replace(cfg, window=8)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    def run(cache_len):
+        cache = model.init_cache(cfg_small_window, B, cache_len)
+        step = jax.jit(lambda c, t, p: model.decode_step(
+            cfg_small_window, base, peft, c, t, p))
+        for i in range(S):
+            logits, cache = step(cache, toks[:, i:i + 1], jnp.int32(i))
+        return logits
+
+    ring = run(8)        # == window -> ring buffer
+    full = run(S + 1)    # full cache, window applied by masking
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)

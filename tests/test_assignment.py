@@ -1,0 +1,94 @@
+"""Property tests (hypothesis) for the layer->client assignment (Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import (
+    assignment_matrix,
+    build_mask_tree,
+    client_counts,
+    enumerate_units,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_units=st.integers(1, 60), n_clients=st.integers(1, 40),
+       offset=st.integers(0, 100))
+def test_every_unit_covered_every_round(n_units, n_clients, offset):
+    """The union of client assignments covers ALL units each round (the
+    paper's requirement that the round updates every trainable weight)."""
+    m = np.asarray(assignment_matrix(n_units, n_clients, offset))
+    assert m.shape == (n_clients, n_units)
+    assert (m.sum(axis=0) >= 1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_units=st.integers(1, 60), n_clients=st.integers(1, 40),
+       offset=st.integers(0, 100))
+def test_every_client_gets_work(n_units, n_clients, offset):
+    m = np.asarray(assignment_matrix(n_units, n_clients, offset))
+    assert (m.sum(axis=1) >= 1).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_units=st.integers(2, 60), n_clients=st.integers(2, 40))
+def test_balanced_load(n_units, n_clients):
+    """Cyclic mapping: per-client unit counts differ by at most 1 when
+    U >= M (paper: each client gets ceil/floor(L/M) layers)."""
+    m = np.asarray(assignment_matrix(n_units, n_clients, 0))
+    loads = m.sum(axis=1)
+    if n_units >= n_clients:
+        assert loads.max() - loads.min() <= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(offset=st.integers(0, 7))
+def test_rotation_changes_mapping(offset):
+    a = np.asarray(assignment_matrix(8, 4, 0))
+    b = np.asarray(assignment_matrix(8, 4, offset))
+    # rotated mapping is a column-permutation-compatible reassignment with
+    # identical per-unit coverage
+    assert (a.sum(0) == b.sum(0)).all()
+
+
+def _toy_peft():
+    return {
+        "layers": {
+            "wq": {"A": jnp.zeros((3, 4, 1)), "B": jnp.zeros((3, 1, 4))},
+            "wv": {"A": jnp.zeros((3, 4, 1)), "B": jnp.zeros((3, 1, 4))},
+        },
+        "shared": {"wq": {"A": jnp.zeros((4, 1)), "B": jnp.zeros((1, 4))}},
+        "head": {"w": jnp.zeros((4, 2)), "b": jnp.zeros(2)},
+    }
+
+
+def test_enumerate_units_structure():
+    peft = _toy_peft()
+    idx = enumerate_units(peft)
+    # 3 layers x 2 targets + 1 shared unit; head excluded
+    assert idx.n_units == 7
+    groups = {u[0] for u in idx.units}
+    assert groups == {"layers", "shared"}
+
+
+def test_mask_tree_partition_property():
+    """Summing all clients' mask trees must cover every unit leaf >= once,
+    and the head is assigned to every client."""
+    peft = _toy_peft()
+    idx = enumerate_units(peft)
+    M = 3
+    mm = assignment_matrix(idx.n_units, M, 0)
+    trees = [build_mask_tree(peft, idx, mm[m]) for m in range(M)]
+    total = jax.tree.map(lambda *xs: sum(xs), *trees)
+    for leaf in jax.tree.leaves(total["layers"]):
+        assert (np.asarray(leaf) >= 1).all()
+    for leaf in jax.tree.leaves(total["head"]):
+        assert (np.asarray(leaf) == M).all()
+
+
+def test_client_counts_match_mask():
+    mm = assignment_matrix(5, 3, 0)
+    counts = client_counts(mm)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(mm.sum(0)))

@@ -1,0 +1,160 @@
+"""Optimizers, server aggregation, Dirichlet partition, comm-cost tables."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.fl import (
+    comm_cost,
+    compute_cost,
+    dirichlet_partition,
+    heterogeneity_coefficients,
+    server_init,
+    server_update,
+)
+from repro.optim import adam, adamw, momentum, sgd, yogi
+from repro.optim.optimizers import apply_updates
+
+
+def _quad(opt, steps=300):
+    # minimize (w-3)^2 -> w should approach 3
+    w = {"w": jnp.zeros(())}
+    state = opt.init(w)
+    for _ in range(steps):
+        g = jax.grad(lambda p: (p["w"] - 3.0) ** 2)(w)
+        upd, state = opt.update(g, state, w)
+        w = apply_updates(w, upd)
+    return float(w["w"])
+
+
+def test_sgd_converges():
+    assert abs(_quad(sgd(0.1)) - 3.0) < 1e-3
+
+
+def test_momentum_converges():
+    assert abs(_quad(momentum(0.05)) - 3.0) < 1e-2
+
+
+def test_adam_converges():
+    assert abs(_quad(adam(0.1)) - 3.0) < 1e-2
+
+
+def test_adamw_decays_weights():
+    # with pure weight decay and zero gradient, weights shrink
+    opt = adamw(0.1, weight_decay=0.5)
+    w = {"w": jnp.ones(())}
+    state = opt.init(w)
+    g = {"w": jnp.zeros(())}
+    upd, state = opt.update(g, state, w)
+    w2 = apply_updates(w, upd)
+    assert float(w2["w"]) < 1.0
+
+
+def test_yogi_converges():
+    assert abs(_quad(yogi(0.1)) - 3.0) < 1e-2
+
+
+def test_adam_matches_closed_form_first_step():
+    opt = adam(0.1, b1=0.9, b2=0.999, eps=1e-8)
+    w = {"w": jnp.array(2.0)}
+    state = opt.init(w)
+    g = {"w": jnp.array(0.5)}
+    upd, _ = opt.update(g, state, w)
+    # first Adam step = -lr * g/|g| (bias-corrected) = -lr * sign-ish
+    expect = -0.1 * 0.5 / (np.sqrt(0.5 ** 2) + 1e-8)
+    np.testing.assert_allclose(float(upd["w"]), expect, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Server optimizers
+# ---------------------------------------------------------------------------
+
+def test_fedavg_server_is_plain_average_application():
+    w = {"w": jnp.zeros(3)}
+    delta = {"w": jnp.array([1.0, 2.0, 3.0])}
+    new, _ = server_update("fedavg", w, delta, server_init(w), lr=1.0)
+    np.testing.assert_allclose(np.asarray(new["w"]), [1, 2, 3])
+
+
+def test_fedyogi_moves_toward_delta():
+    w = {"w": jnp.zeros(3)}
+    st_ = server_init(w)
+    delta = {"w": jnp.array([1.0, -1.0, 2.0])}
+    new, st_ = server_update("fedyogi", w, delta, st_, lr=0.1)
+    assert float(jnp.sign(new["w"][0])) == 1.0
+    assert float(jnp.sign(new["w"][1])) == -1.0
+
+
+def test_fedyogi_second_moment_sign_rule():
+    """Yogi: v update uses sign(v - d^2), differing from Adam exactly when
+    v > d^2 (additive vs multiplicative decay)."""
+    w = {"w": jnp.zeros(1)}
+    st_ = server_init(w)
+    d = {"w": jnp.array([2.0])}
+    _, st1 = server_update("fedyogi", w, d, st_, lr=0.1)
+    # v after first step: 0 - (1-b2)*sign(0-4)*4 = +(1-b2)*4
+    np.testing.assert_allclose(np.asarray(st1.v["w"]), [0.01 * 4.0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet partition (paper Appendix B)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.sampled_from([0.1, 1.0, 10.0]), n_clients=st.integers(4, 32))
+def test_partition_is_a_partition(alpha, n_clients):
+    labels = np.random.default_rng(0).integers(0, 4, size=2000)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=1)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_heterogeneity_grows_as_alpha_shrinks():
+    labels = np.random.default_rng(0).integers(0, 4, size=4000)
+    h = []
+    for alpha in (10.0, 1.0, 0.1):
+        parts = dirichlet_partition(labels, 16, alpha, seed=1)
+        coef = heterogeneity_coefficients(labels, parts, 1.0)
+        # dispersion of per-client class fractions grows with heterogeneity
+        fracs = np.stack([
+            [(labels[p] == c).mean() if len(p) else 0 for c in range(4)]
+            for p in parts])
+        h.append(fracs.std())
+    assert h[0] < h[1] < h[2]
+
+
+def test_homogeneous_split_coefficients_near_zero():
+    """Paper Thm 4.1: alpha_c=1 and matching fractions -> alpha_{m,c} ~ 0."""
+    labels = np.tile(np.arange(4), 2500)
+    parts = dirichlet_partition(labels, 8, 1000.0, seed=0)  # near-uniform
+    coef = heterogeneity_coefficients(labels, parts, 1.0)
+    assert np.abs(coef).mean() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Communication / computation cost tables (paper Tables 2-3)
+# ---------------------------------------------------------------------------
+
+def test_comm_cost_spry_beats_backprop_per_epoch():
+    w_l, L, M = 1000.0, 48, 16
+    spry = comm_cost("spry", "per_epoch", w_l, L, M)
+    fedavg = comm_cost("fedavg", "per_epoch", w_l, L, M)
+    assert spry.client_to_server < fedavg.client_to_server
+    assert spry.server_to_client < fedavg.server_to_client
+    # client->server reduced by exactly M when L >= M (paper §1)
+    assert fedavg.client_to_server / spry.client_to_server == M
+
+
+def test_comm_cost_per_iteration_scalar():
+    spry = comm_cost("spry", "per_iteration", 1000.0, 48, 16)
+    assert spry.client_to_server == 1
+
+
+def test_compute_cost_spry_client_cheaper_than_zero_order():
+    w_l, L, M = 1000.0, 48, 16
+    spry = compute_cost("spry", "per_epoch", w_l, L, M, c=100.0, v=10.0)
+    baffle = compute_cost("baffle", "per_epoch", w_l, L, M, c=100.0, v=10.0,
+                          K=20)
+    assert spry.client_per_iter < baffle.client_per_iter
