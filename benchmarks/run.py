@@ -2,7 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
 
-Output format: ``name,us_per_call,derived`` CSV lines.
+Output format: ``name,us_per_call,derived`` CSV lines. The kernel suite
+additionally writes ``BENCH_kernels.json`` (machine-readable K-sweep +
+acceptance ratios) so the perf trajectory is recorded across PRs.
 
   table1_accuracy   paper Table 1  — SPRY vs backprop vs zero-order accuracy
   fig2_memory       paper Figure 2 — peak training memory (compiled analysis)
@@ -31,7 +33,9 @@ from benchmarks import (
 
 SUITES = {
     "table2_3_costs": lambda quick: bench_costs.main(),
-    "kernel": lambda quick: bench_kernels.main(),
+    # kernel suite also records the perf trajectory machine-readably
+    "kernel": lambda quick: bench_kernels.main(
+        quick=quick, json_path="BENCH_kernels.json"),
     "fig2_memory": lambda quick: bench_memory.main(
         archs=("roberta-large-lora",) if quick
         else ("roberta-large-lora", "llama2-7b")),

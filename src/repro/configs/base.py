@@ -157,6 +157,10 @@ class SpryConfig:
     n_total_clients: int = 100
     sampling_rate: float = 0.16          # s
     k_perturbations: int = 1             # K (paper default)
+    tangent_batch: int | None = None     # None = all K tangents in one batched
+                                         # pass (one primal); 1 = sequential
+                                         # jvp per perturbation (seed path);
+                                         # 1<b<K = chunked groups of b
     local_lr: float = 1e-4               # eta_l
     server_lr: float = 1e-2              # eta
     server_opt: str = "fedyogi"          # fedyogi | fedadam | fedavg | fedsgd | fedadagrad

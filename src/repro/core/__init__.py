@@ -10,6 +10,7 @@ from repro.core.forward_grad import (
     forward_gradient,
     masked_perturbation,
     reconstruct_gradient,
+    stacked_perturbations,
 )
 from repro.core.assignment import (
     UnitIndex,

@@ -1,18 +1,39 @@
 """Forward-mode AD gradient estimation (paper §2, Eq. 1-3).
 
-    jvp      = J_f(w) · v           — one jax.jvp forward pass
+    jvp      = J_f(w) · v           — directional derivative along v
     grad_est = jvp * v              — unbiased estimator of ∇f for v~N(0,I)
 
 K>1 perturbations are averaged (paper's ablation Fig. 5a). Perturbations are
 regenerated from scalar seeds with ``jax.random.fold_in`` chains so the
 server can rebuild any client's v exactly (per-iteration communication mode
 sends only the jvp scalar back — Table 2).
+
+Tangent-axis contract (this module's batched engine)
+----------------------------------------------------
+K perturbations are stacked on a leading *tangent axis*: a stacked
+perturbation tree has leaves of shape ``(K,) + leaf.shape`` and the jvp
+vector has shape ``(K,)``. The default path linearizes the loss once
+(``jax.linearize``) and evaluates all K tangents through the linear map with
+``jax.vmap`` — the frozen-base primal is computed ONCE per estimate instead
+of K times (the paper's §5.3 "column-by-column jvp" overhead). Ops whose
+inputs carry no tangent stay unbatched under vmap, so only tangent-carrying
+intermediates gain the K axis.
+
+``tangent_batch`` trades that amortization against tangent-intermediate
+memory (each tangent-carrying activation is K× wider):
+
+    None / >=K  one batched pass (default; max primal amortization)
+    1           the sequential fori_loop of full jax.jvp passes — zero
+                stacked tangents, primal recomputed per perturbation
+                (memory-constrained clients; the seed behaviour)
+    1<b<K       K/b groups evaluated sequentially, b tangents per pass
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import forward_ad_region
 from repro.utils.pytree import normal_like
 
 
@@ -25,13 +46,34 @@ def masked_perturbation(key, peft, mask_tree=None):
     return v
 
 
+def stacked_perturbations(key, peft, indices, mask_tree=None):
+    """Perturbations for ``fold_in(key, i) for i in indices`` stacked on a
+    leading tangent axis. Bit-identical per index to ``masked_perturbation``
+    (vmap of the PRNG chain is deterministic), which is what lets the server
+    rebuild the client's exact tangents from the scalar seed."""
+    return jax.vmap(
+        lambda i: masked_perturbation(jax.random.fold_in(key, i), peft,
+                                      mask_tree))(indices)
+
+
+def _combine(jvps, vs, k_total):
+    """g = (1/K) Σ_i jvps[i] · vs[i] — the estimator average, contracted over
+    the tangent axis. Shared by the client estimator and the server-side
+    reconstruction so the two are bit-identical (same ops, same inputs)."""
+    return jax.tree.map(
+        lambda v: jnp.tensordot(jvps, v, axes=[[0], [0]]) / k_total, vs)
+
+
 def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
-                     jvp_clip=None):
+                     jvp_clip=None, tangent_batch=None):
     """Forward-gradient estimate of ∇_peft loss_fn.
 
     Returns (loss, grad_estimate, jvps (K,)). ``loss_fn`` must be a function
-    of the peft tree only (base weights closed over). One jax.jvp call per
-    perturbation — each is a single forward pass, no activation stack.
+    of the peft tree only (base weights closed over).
+
+    ``tangent_batch`` — see module docstring. The batched paths and the
+    sequential path are numerically equivalent per seed (same perturbations,
+    same jvp values) up to float reassociation of the K-average.
 
     ``jvp_clip`` (beyond-paper stabiliser): clamp the jvp scalar to
     [-c, c] before forming jvp*v — bounds the update magnitude of outlier
@@ -39,37 +81,97 @@ def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
     default, matches the paper exactly when None).
     """
     peft32 = jax.tree.map(lambda x: x.astype(jnp.float32), peft)
+    K = int(k_perturbations)
+    tb = K if tangent_batch is None else max(1, min(int(tangent_batch), K))
 
-    def one(i, carry):
-        g, jvps, loss_acc = carry
-        ki = jax.random.fold_in(key, i)
-        v = masked_perturbation(ki, peft32, mask_tree)
-        loss, jvp = jax.jvp(loss_fn, (peft32,), (v,))
+    def clip(jvps):
         if jvp_clip is not None:
-            jvp = jnp.clip(jvp, -jvp_clip, jvp_clip)
-        g = jax.tree.map(lambda gi, vi: gi + jvp * vi, g, v)
-        return g, jvps.at[i].set(jvp), loss_acc + loss
+            return jnp.clip(jvps, -jvp_clip, jvp_clip)
+        return jvps
 
-    g0 = jax.tree.map(jnp.zeros_like, peft32)
-    jvps0 = jnp.zeros((k_perturbations,), jnp.float32)
-    if k_perturbations == 1:
-        g, jvps, loss = one(0, (g0, jvps0, jnp.float32(0.0)))
-    else:
+    if K == 1:
+        # no tangent stacking needed — single dual-number pass
+        v = masked_perturbation(jax.random.fold_in(key, 0), peft32, mask_tree)
+        with forward_ad_region():
+            loss, jvp = jax.jvp(loss_fn, (peft32,), (v,))
+        jvps = clip(jnp.reshape(jvp, (1,)))
+        vs = jax.tree.map(lambda x: x[None], v)
+        return loss, _combine(jvps, vs, 1), jvps
+
+    if tb == 1:
+        # sequential fallback: one full jax.jvp pass per perturbation — no
+        # stacked tangents and in-loop g accumulation (bounded memory), the
+        # primal recomputed K times (the seed behaviour)
+        def one(i, carry):
+            g, jvps, loss_acc = carry
+            ki = jax.random.fold_in(key, i)
+            v = masked_perturbation(ki, peft32, mask_tree)
+            with forward_ad_region():
+                loss, jvp = jax.jvp(loss_fn, (peft32,), (v,))
+            if jvp_clip is not None:
+                jvp = jnp.clip(jvp, -jvp_clip, jvp_clip)
+            g = jax.tree.map(lambda gi, vi: gi + jvp * vi, g, v)
+            return g, jvps.at[i].set(jvp), loss_acc + loss
+
+        g0 = jax.tree.map(jnp.zeros_like, peft32)
         g, jvps, loss = jax.lax.fori_loop(
-            0, k_perturbations, one, (g0, jvps0, jnp.float32(0.0)))
-    scale = 1.0 / k_perturbations
-    g = jax.tree.map(lambda x: x * scale, g)
-    return loss * scale, g, jvps
+            0, K, one,
+            (g0, jnp.zeros((K,), jnp.float32), jnp.float32(0.0)))
+        scale = 1.0 / K
+        return loss * scale, jax.tree.map(lambda x: x * scale, g), jvps
+
+    # batched: linearize once (one primal), push tangent groups through the
+    # linear map with vmap — stacked-tangent jvp. (forward_ad_region lets
+    # the dispatch layer lower LoRA tangents to the fused Pallas kernel —
+    # the tangent jaxpr is fixed here at trace time, so later vmap replays
+    # of tangent_map inherit it.)
+    with forward_ad_region():
+        loss, tangent_map = jax.linearize(loss_fn, peft32)
+
+    if tb >= K:
+        vs = stacked_perturbations(key, peft32, jnp.arange(K), mask_tree)
+        jvps = clip(jax.vmap(tangent_map)(vs))
+        return loss, _combine(jvps, vs, K), jvps
+
+    # chunked: groups of tb tangents, sequential over groups (bounds the
+    # stacked-tangent memory to tb× while still amortizing inside a group)
+    n_groups, rem = divmod(K, tb)
+
+    def group(start):
+        vs_g = stacked_perturbations(key, peft32, start + jnp.arange(tb),
+                                     mask_tree)
+        return clip(jax.vmap(tangent_map)(vs_g)), vs_g
+
+    # scan over full groups, accumulating the combine incrementally so the
+    # stacked vs of only one group are live at a time
+    g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), peft32)
+
+    def scan_body(g_acc, start):
+        jvps_g, vs_g = group(start)
+        g_acc = jax.tree.map(jnp.add, g_acc, _combine(jvps_g, vs_g, K))
+        return g_acc, jvps_g
+
+    g, jvps_groups = jax.lax.scan(
+        scan_body, g0, jnp.arange(n_groups) * tb)
+    jvps = jvps_groups.reshape(-1)
+    if rem:
+        vs_r = stacked_perturbations(
+            key, peft32, n_groups * tb + jnp.arange(rem), mask_tree)
+        jvps_r = clip(jax.vmap(tangent_map)(vs_r))
+        g = jax.tree.map(jnp.add, g, _combine(jvps_r, vs_r, K))
+        jvps = jnp.concatenate([jvps, jvps_r])
+    return loss, g, jvps
 
 
 def reconstruct_gradient(peft_template, key, jvps, mask_tree=None):
     """Server-side gradient reconstruction from jvp scalars + the shared seed
-    (per-iteration communication mode, paper §3.2). Must be bit-identical to
-    the client's estimate — enforced by tests/test_forward_grad.py."""
+    (per-iteration communication mode, paper §3.2). Regenerates the stacked
+    perturbations and applies the same ``_combine`` contraction as the
+    client-side estimator, so the rebuild is bit-identical to the client's
+    estimate and its trace stays O(1) in K — enforced by
+    tests/test_forward_grad.py."""
     K = jvps.shape[0]
-    g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), peft_template)
-    for i in range(K):
-        ki = jax.random.fold_in(key, i)
-        v = masked_perturbation(ki, g, mask_tree)
-        g = jax.tree.map(lambda gi, vi: gi + jvps[i] * vi, g, v)
-    return jax.tree.map(lambda x: x / K, g)
+    template32 = jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), peft_template)
+    vs = stacked_perturbations(key, template32, jnp.arange(K), mask_tree)
+    return _combine(jvps, vs, K)

@@ -27,7 +27,7 @@ from repro.core.assignment import (
     client_counts,
     enumerate_units,
 )
-from repro.core.forward_grad import forward_gradient
+from repro.core.forward_grad import forward_gradient, reconstruct_gradient
 from repro.fl.server import ServerState, server_init, server_update
 from repro.models.registry import get_loss_fn
 from repro.utils.pytree import tree_cast
@@ -82,7 +82,8 @@ def make_round_step(cfg, spry_cfg, task: str = "cls", split: bool = True):
                     return forward_gradient(loss_of, peft_c, ikey,
                                             k_perturbations=K,
                                             mask_tree=mask_tree,
-                                            jvp_clip=spry_cfg.jvp_clip)
+                                            jvp_clip=spry_cfg.jvp_clip,
+                                            tangent_batch=spry_cfg.tangent_batch)
                 # gradient accumulation: scan over microbatches, fresh
                 # perturbation per microbatch (each estimate is unbiased for
                 # its microbatch gradient; the average is unbiased for the
@@ -101,7 +102,8 @@ def make_round_step(cfg, spry_cfg, task: str = "cls", split: bool = True):
                     loss, g, jvps = forward_gradient(
                         loss_of, peft_c, jax.random.fold_in(ikey, i),
                         k_perturbations=K, mask_tree=mask_tree,
-                        jvp_clip=spry_cfg.jvp_clip)
+                        jvp_clip=spry_cfg.jvp_clip,
+                        tangent_batch=spry_cfg.tangent_batch)
                     g_acc, loss_acc = acc
                     g_acc = jax.tree.map(lambda a, b: a + b / n_mb, g_acc, g)
                     return (g_acc, loss_acc + loss / n_mb), jvps
@@ -187,18 +189,18 @@ def make_round_step_per_iteration(cfg, spry_cfg, task: str = "cls"):
                 return loss_fn_kind(cfg, base, p, client_batch,
                                     lora_scale=spry_cfg.lora_alpha)
 
-            loss, _, jvps = forward_gradient(loss_of, peft, ikey,
-                                             k_perturbations=K,
-                                             mask_tree=mask_tree,
-                                             jvp_clip=spry_cfg.jvp_clip)
+            loss, _, jvps = forward_gradient(
+                loss_of, peft, ikey, k_perturbations=K, mask_tree=mask_tree,
+                jvp_clip=spry_cfg.jvp_clip,
+                tangent_batch=spry_cfg.tangent_batch)
             return loss, jvps
 
         losses, jvps = jax.vmap(client_jvp)(
             jnp.arange(M), mask_matrix, batch)        # (M,), (M,K)
 
-        # --- server side: regenerate v from the seed, rebuild gradients ---
-        from repro.core.forward_grad import reconstruct_gradient
-
+        # --- server side: regenerate v from the seed, rebuild gradients
+        # (stacked-perturbation path, bit-identical to the client estimator
+        # and O(1) trace size in K) ---
         def rebuild(client_id, mask_row, jvps_m):
             mask_tree = build_mask_tree(peft, index, mask_row)
             ckey = jax.random.fold_in(round_key, client_id)

@@ -2,7 +2,13 @@
 
 lora_dual/     fused LoRA primal+tangent matmul — the forward-mode AD
                hot-spot (paper §5.3 jvp overhead, removed on TPU by fusing
-               tangent propagation into the same VMEM-resident pass)
+               tangent propagation into the same VMEM-resident pass). The
+               multi-tangent (mt) variants stack K tangents on a leading
+               axis so ONE pass over x/W serves the primal and all K jvp
+               columns (the batched K-perturbation estimator's hot loop).
+dispatch.py    backend routing for the fused LoRA projection: models'
+               ``proj`` differentiates through the Pallas kernel on TPU and
+               the jnp reference mirror on CPU (REPRO_LORA_BACKEND override).
 swa_attention/ sliding-window flash attention (gemma3 / h2o-danube / zamba2)
 wkv6_scan/     RWKV6 data-dependent-decay recurrence, block-parallel over
                (batch, heads)

@@ -1,0 +1,13 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+jax renamed ``TPUCompilerParams`` to ``CompilerParams`` across releases; the
+kernels import the resolved name from here so they run on either.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -1,0 +1,159 @@
+"""Backend dispatch for the fused LoRA projection.
+
+``models/common.py::proj`` routes every LoRA-adapted projection through
+``lora_proj`` below, whose custom-JVP rule evaluates the primal AND tangent
+with the fused dual kernel instead of the pure-jnp mirror:
+
+    backend 'pallas'     compiled Pallas TPU kernel (kernels/lora_dual)
+    backend 'interpret'  same kernel under the Pallas interpreter (CPU
+                         validation of the exact kernel dataflow)
+    backend 'jnp'        reference einsum/matmul mirror — the fast CPU path
+                         (XLA fuses it; interpret-mode Pallas would be
+                         orders of magnitude slower in the test suite)
+
+Resolution: ``REPRO_LORA_BACKEND`` env var if set (one of auto | jnp |
+interpret | pallas), else 'pallas' when jax's default backend is TPU, else
+'jnp'. ``set_backend`` overrides per-process (tests).
+
+The kernel route additionally requires being inside ``forward_ad_region()``
+(established by core/forward_grad.py while tracing the estimator): Pallas
+calls have no transpose rule, so outside that region — in particular under
+``jax.grad`` in the backprop baselines — the rule always traces the jnp
+mirror, keeping reverse-mode AD working on every backend.
+
+Tangent-axis note: under the batched K-tangent estimator
+(core/forward_grad.py) the tangent side of the JVP rule is batched by vmap —
+tangent operands gain the leading K axis while primal operands stay
+unbatched, which is exactly the multi-tangent kernel contract. The compiled
+TPU route currently lowers vmap-of-dual-kernel through the Pallas batching
+rule; routing it through ``lora_dual_mt`` directly via a custom batching
+rule is an open item (ROADMAP).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.custom_derivatives import SymbolicZero
+
+from repro.kernels.lora_dual.ops import lora_dual_mt_tangents
+
+# Pallas calls have no transpose rule, so the kernel tangent route would
+# break reverse-mode AD (the backprop baselines) if taken unconditionally.
+# The kernel route is therefore gated on a trace-time region that only the
+# forward-gradient estimator (core/forward_grad.py) establishes; any other
+# differentiation — jax.grad/value_and_grad in the baselines, or user code —
+# traces the transposable jnp mirror regardless of backend.
+_fwd_region = contextvars.ContextVar("repro_forward_ad_region", default=False)
+
+
+@contextlib.contextmanager
+def forward_ad_region():
+    """Trace-time marker: within this context, LoRA projection tangents may
+    lower to the (non-transposable) fused Pallas kernel."""
+    token = _fwd_region.set(True)
+    try:
+        yield
+    finally:
+        _fwd_region.reset(token)
+
+
+def in_forward_ad_region() -> bool:
+    return _fwd_region.get()
+
+_BACKENDS = ("auto", "jnp", "interpret", "pallas")
+_backend_override: str | None = None
+
+
+def set_backend(name: str | None) -> None:
+    """Force a dispatch backend for this process (None restores 'auto')."""
+    global _backend_override
+    if name is not None and name not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {name!r}")
+    _backend_override = name
+
+
+def get_backend() -> str:
+    """Resolved backend: override > $REPRO_LORA_BACKEND > platform default."""
+    name = _backend_override or os.environ.get("REPRO_LORA_BACKEND", "auto")
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"REPRO_LORA_BACKEND must be one of {_BACKENDS}, got {name!r}")
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return name
+
+
+def _lora_terms(x, a, b, scale):
+    """The rank-r update s*(x@A)@B computed in A's dtype (fp32 master LoRA
+    weights), mirroring the pre-dispatch pure-jnp proj numerics exactly."""
+    return (x.astype(a.dtype) @ a) @ b * scale
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(4,))
+def lora_proj(x, w, a, b, scale):
+    """y = x@W + s*(x@A)@B with a dispatchable fused-dual JVP rule."""
+    y = x @ w
+    return y + _lora_terms(x, a, b, scale).astype(y.dtype)
+
+
+def _materialize(t, like):
+    if isinstance(t, SymbolicZero):
+        return jnp.zeros(like.shape, like.dtype)
+    return t
+
+
+@functools.partial(lora_proj.defjvp, symbolic_zeros=True)
+def _lora_proj_jvp(scale, primals, tangents):
+    x, w, a, b = primals
+    xd, wd, ad, bd = tangents
+    has_xd = not isinstance(xd, SymbolicZero)
+    has_wd = not isinstance(wd, SymbolicZero)
+    backend = get_backend()
+
+    if backend in ("pallas", "interpret") and in_forward_ad_region():
+        # primal from the jnp mirror (must stay tangent-independent so
+        # linearize can split the rule); tangents from the fused kernel —
+        # one pass over x/W per tangent group
+        y = x @ w
+        y = y + _lora_terms(x, a, b, scale).astype(y.dtype)
+        yd = lora_dual_mt_tangents(
+            x, None if not has_xd else xd[None], w,
+            a, _materialize(ad, a)[None], b, _materialize(bd, b)[None],
+            scale=scale, interpret=(backend == "interpret"))[0]
+        if has_wd:  # frozen W in SPRY; handled for AD completeness
+            yd = yd + (x @ wd).astype(yd.dtype)
+        return y, yd
+
+    # 'jnp': reference mirror with symbolic-zero pruning — ops whose inputs
+    # carry no tangent never enter the graph (so under the batched estimator
+    # only tangent-carrying terms gain the K axis)
+    y = x @ w
+    y = y + _lora_terms(x, a, b, scale).astype(y.dtype)
+
+    x32 = x.astype(a.dtype)
+    u = x32 @ a
+    ud = None
+    if has_xd:
+        ud = xd.astype(a.dtype) @ a
+    if not isinstance(ad, SymbolicZero):
+        ud = x32 @ ad if ud is None else ud + x32 @ ad
+    lo_d = None
+    if ud is not None:
+        lo_d = (ud @ b) * scale
+    if not isinstance(bd, SymbolicZero):
+        t = (u @ bd) * scale
+        lo_d = t if lo_d is None else lo_d + t
+    yd = jnp.zeros(y.shape, y.dtype) if (lo_d is None and not has_xd
+                                         and not has_wd) else None
+    if yd is None:
+        yd = lo_d.astype(y.dtype) if lo_d is not None else 0.0
+        if has_xd:
+            yd = xd @ w + yd
+        if has_wd:
+            yd = yd + x @ wd
+    return y, yd

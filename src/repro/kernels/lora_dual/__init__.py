@@ -1,2 +1,10 @@
-from repro.kernels.lora_dual.ops import lora_dual
-from repro.kernels.lora_dual.ref import lora_dual_ref
+from repro.kernels.lora_dual.ops import (
+    lora_dual,
+    lora_dual_mt,
+    lora_dual_mt_jvps,
+)
+from repro.kernels.lora_dual.ref import (
+    lora_dual_mt_jvps_ref,
+    lora_dual_mt_ref,
+    lora_dual_ref,
+)

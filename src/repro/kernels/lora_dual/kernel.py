@@ -1,13 +1,25 @@
-"""Fused LoRA primal+tangent matmul — Pallas TPU kernel.
+"""Fused LoRA primal + multi-tangent matmul — Pallas TPU kernel.
 
 This is the TPU answer to the paper's §5.3 observation that PyTorch
-Forward-mode AD pays a "column-by-column jvp" overhead: here the tangent
-GEMM shares the VMEM residency of the primal GEMM. One pass over HBM for
-x/xdot/W computes BOTH y and ydot; the rank-r LoRA factors live entirely in
-VMEM scratch across the K-reduction.
+Forward-mode AD pays a "column-by-column jvp" overhead: the tangent GEMMs
+share the VMEM residency of the primal GEMM. The multi-tangent (mt) variant
+extends that to SPRY's K-perturbation estimates — tangent operands
+``xdot/adot/bdot`` carry a leading tangent axis T, and ONE pass over HBM for
+``x``/``W`` produces the primal ``y`` plus all T ``ydot``s. The frozen-weight
+GEMM (the overwhelming majority of FLOPs under LoRA) is read and computed
+once instead of T times; the rank-r LoRA factors live entirely in VMEM
+scratch across the K-reduction.
+
+Tangent-axis contract: ``xdots (T, M, K)``, ``adots (T, K, r)``,
+``bdots (T, r, N)`` -> ``ydots (T, M, N)``. ``has_xdot=False`` statically
+removes the input-tangent GEMMs for the common SPRY case where the
+projection is the client's first perturbed unit (upstream activations carry
+no tangent).
 
 Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" = sequential reduction).
-VMEM blocks are MXU-aligned (multiples of 128 on the matmul dims).
+VMEM blocks are MXU-aligned (multiples of 128 on the matmul dims); the T
+axis is unrolled statically (T <= ~16 keeps the (T, bm, bn) accumulator
+within VMEM budget: 16*128*128*4B = 1 MiB).
 """
 from __future__ import annotations
 
@@ -18,85 +30,142 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
 
-def _kernel(x_ref, xd_ref, w_ref, a_ref, ad_ref, b_ref, bd_ref,
-            y_ref, yd_ref,
-            acc_y, acc_yd, acc_u, acc_ud,
-            *, scale: float, n_k: int):
+
+def _mt_kernel(*refs, scale: float, n_k: int, n_t: int, has_xdot: bool,
+               emit_primal: bool):
+    refs = list(refs)
+    x_ref = refs.pop(0)
+    xd_ref = refs.pop(0) if has_xdot else None
+    w_ref, a_ref, ad_ref, b_ref, bd_ref = refs[:5]
+    refs = refs[5:]
+    y_ref = refs.pop(0) if emit_primal else None
+    yd_ref = refs.pop(0)
+    acc_y = refs.pop(0) if emit_primal else None
+    acc_yd = refs.pop(0) if has_xdot else None
+    acc_u, acc_ud = refs
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        acc_y[...] = jnp.zeros_like(acc_y)
-        acc_yd[...] = jnp.zeros_like(acc_yd)
+        if emit_primal:
+            acc_y[...] = jnp.zeros_like(acc_y)
+        if has_xdot:
+            acc_yd[...] = jnp.zeros_like(acc_yd)
         acc_u[...] = jnp.zeros_like(acc_u)
         acc_ud[...] = jnp.zeros_like(acc_ud)
 
     x = x_ref[...]
-    xd = xd_ref[...]
     w = w_ref[...]
-    acc_y[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
-    acc_yd[...] += jnp.dot(xd, w, preferred_element_type=jnp.float32)
     a = a_ref[...]
-    ad = ad_ref[...]
+    # one read of the x/W blocks feeds the primal AND every tangent
+    if emit_primal:
+        acc_y[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
     acc_u[...] += jnp.dot(x, a, preferred_element_type=jnp.float32)
-    acc_ud[...] += (jnp.dot(xd, a, preferred_element_type=jnp.float32)
-                    + jnp.dot(x, ad, preferred_element_type=jnp.float32))
+    for t in range(n_t):  # static unroll over the tangent axis
+        acc_ud[t] += jnp.dot(x, ad_ref[t],
+                             preferred_element_type=jnp.float32)
+        if has_xdot:
+            xd_t = xd_ref[t]
+            acc_yd[t] += jnp.dot(xd_t, w, preferred_element_type=jnp.float32)
+            acc_ud[t] += jnp.dot(xd_t, a, preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
     def _finish():
         b = b_ref[...].astype(jnp.float32)
-        bd = bd_ref[...].astype(jnp.float32)
         u = acc_u[...]
-        ud = acc_ud[...]
-        y = acc_y[...] + scale * jnp.dot(u, b, preferred_element_type=jnp.float32)
-        yd = acc_yd[...] + scale * (
-            jnp.dot(ud, b, preferred_element_type=jnp.float32)
-            + jnp.dot(u, bd, preferred_element_type=jnp.float32))
-        y_ref[...] = y.astype(y_ref.dtype)
-        yd_ref[...] = yd.astype(yd_ref.dtype)
+        if emit_primal:
+            y = acc_y[...] + scale * jnp.dot(
+                u, b, preferred_element_type=jnp.float32)
+            y_ref[...] = y.astype(y_ref.dtype)
+        for t in range(n_t):
+            bd_t = bd_ref[t].astype(jnp.float32)
+            yd = scale * (
+                jnp.dot(acc_ud[t], b, preferred_element_type=jnp.float32)
+                + jnp.dot(u, bd_t, preferred_element_type=jnp.float32))
+            if has_xdot:
+                yd = yd + acc_yd[t]
+            yd_ref[t] = yd.astype(yd_ref.dtype)
 
 
-def lora_dual_kernel(x, xdot, w, a, adot, b, bdot, *, scale: float,
-                     block_m: int = 128, block_n: int = 128,
-                     block_k: int = 128, interpret: bool = True):
-    """x/xdot: (M,K); w: (K,N); a/adot: (K,r); b/bdot: (r,N) -> (y, ydot)."""
+def lora_dual_mt_kernel(x, xdots, w, a, adots, b, bdots, *, scale: float,
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128, interpret: bool = True,
+                        emit_primal: bool = True):
+    """x: (M,K); xdots: (T,M,K) or None; w: (K,N); a/adots: (K,r)/(T,K,r);
+    b/bdots: (r,N)/(T,r,N) -> (y (M,N), ydots (T,M,N)), or just ydots when
+    ``emit_primal=False`` (tangent-only pass — used by the AD dispatch rule,
+    whose primal output must stay independent of tangents for
+    jax.linearize's partial evaluation to split the two)."""
     M, K = x.shape
     N = w.shape[1]
     r = a.shape[1]
+    T = adots.shape[0]
+    has_xdot = xdots is not None
     assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
         "caller (ops.py) must pad to block multiples")
     n_k = K // block_k
     grid = (M // block_m, N // block_n, n_k)
 
-    kernel = functools.partial(_kernel, scale=scale, n_k=n_k)
-    return pl.pallas_call(
+    kernel = functools.partial(_mt_kernel, scale=scale, n_k=n_k, n_t=T,
+                               has_xdot=has_xdot, emit_primal=emit_primal)
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),       # x
+    ]
+    operands = [x]
+    if has_xdot:
+        in_specs.append(
+            pl.BlockSpec((T, block_m, block_k), lambda i, j, k: (0, i, k)))
+        operands.append(xdots)
+    in_specs += [
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),       # w
+        pl.BlockSpec((block_k, r), lambda i, j, k: (k, 0)),             # a
+        pl.BlockSpec((T, block_k, r), lambda i, j, k: (0, k, 0)),       # adots
+        pl.BlockSpec((r, block_n), lambda i, j, k: (0, j)),             # b
+        pl.BlockSpec((T, r, block_n), lambda i, j, k: (0, 0, j)),       # bdots
+    ]
+    operands += [w, a, adots, b, bdots]
+    out_specs = [
+        pl.BlockSpec((T, block_m, block_n), lambda i, j, k: (0, i, j)),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((T, M, N), x.dtype)]
+    # the (T, bm, bn) input-tangent accumulator is only allocated when xdots
+    # exist — in the common first-perturbed-unit case it would hold zeros
+    # while eating ~T*bm*bn*4B of VMEM per grid cell
+    scratch = ([pltpu.VMEM((T, block_m, block_n), jnp.float32)]
+               if has_xdot else [])
+    scratch += [
+        pltpu.VMEM((block_m, r), jnp.float32),
+        pltpu.VMEM((T, block_m, r), jnp.float32),
+    ]
+    if emit_primal:
+        out_specs.insert(
+            0, pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)))
+        out_shape.insert(0, jax.ShapeDtypeStruct((M, N), x.dtype))
+        scratch.insert(0, pltpu.VMEM((block_m, block_n), jnp.float32))
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),   # x
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),   # xdot
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),   # w
-            pl.BlockSpec((block_k, r), lambda i, j, k: (k, 0)),         # a
-            pl.BlockSpec((block_k, r), lambda i, j, k: (k, 0)),         # adot
-            pl.BlockSpec((r, block_n), lambda i, j, k: (0, j)),         # b
-            pl.BlockSpec((r, block_n), lambda i, j, k: (0, j)),         # bdot
-        ],
-        out_specs=[
-            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-            pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((M, N), x.dtype),
-            jax.ShapeDtypeStruct((M, N), x.dtype),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_m, block_n), jnp.float32),
-            pltpu.VMEM((block_m, block_n), jnp.float32),
-            pltpu.VMEM((block_m, r), jnp.float32),
-            pltpu.VMEM((block_m, r), jnp.float32),
-        ],
-        compiler_params=pltpu.CompilerParams(
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, xdot, w, a, adot, b, bdot)
+    )(*operands)
+    return outs if emit_primal else outs[0]
+
+
+def lora_dual_kernel(x, xdot, w, a, adot, b, bdot, *, scale: float,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128, interpret: bool = True):
+    """Single-tangent compatibility wrapper: T=1 slice of the mt kernel.
+
+    x/xdot: (M,K); w: (K,N); a/adot: (K,r); b/bdot: (r,N) -> (y, ydot)."""
+    y, ydots = lora_dual_mt_kernel(
+        x, xdot[None], w, a, adot[None], b, bdot[None], scale=scale,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+    return y, ydots[0]

@@ -1,5 +1,15 @@
-"""jit'd dispatch wrapper: flattens batch dims, pads to block multiples,
-calls the Pallas kernel, unpads."""
+"""jit'd dispatch wrappers: flatten batch dims, pad to block multiples,
+call the Pallas kernel, unpad.
+
+``lora_dual``      single-tangent fused pass (y, ydot)
+``lora_dual_mt``   multi-tangent fused pass (y, ydots (T, ...)) — one read
+                   of x/W serves the primal and all T tangents
+``lora_dual_mt_jvps``  contraction-reassociated forward-gradient estimate:
+                   all T jvp scalars <gy, ydot_t> WITHOUT materializing any
+                   (T, M, N) tangent output — the cheap path when the
+                   projection output feeds a known cotangent (benchmarks,
+                   last-layer estimates)
+"""
 from __future__ import annotations
 
 import functools
@@ -7,7 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.lora_dual.kernel import lora_dual_kernel
+from repro.kernels.lora_dual.kernel import lora_dual_kernel, lora_dual_mt_kernel
 
 
 def _pad_to(x, mult, axis):
@@ -25,24 +35,99 @@ def lora_dual(x, xdot, w, a, adot, b, bdot, scale: float = 1.0,
               block_m: int = 128, block_n: int = 128, block_k: int = 128,
               interpret: bool = True):
     """Fused y = x@W + s(x@A)@B and its jvp. x may have leading batch dims."""
+    y, ydots = lora_dual_mt(x, xdot[None], w, a, adot[None], b, bdot[None],
+                            scale=scale, block_m=block_m, block_n=block_n,
+                            block_k=block_k, interpret=interpret)
+    return y, ydots[0]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def lora_dual_mt(x, xdots, w, a, adots, b, bdots, scale: float = 1.0,
+                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                 interpret: bool = True):
+    """Multi-tangent fused pass. x: (..., K); xdots: (T, ..., K) or None;
+    adots: (T, K, r); bdots: (T, r, N) -> (y (..., N), ydots (T, ..., N))."""
     batch_shape = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[1]
+    T = adots.shape[0]
     x2 = x.reshape(-1, K)
-    xd2 = xdot.reshape(-1, K)
     M = x2.shape[0]
 
     x2 = _pad_to(_pad_to(x2, block_m, 0), block_k, 1)
-    xd2 = _pad_to(_pad_to(xd2, block_m, 0), block_k, 1)
+    if xdots is not None:
+        xd2 = xdots.reshape(T, -1, K)
+        xd2 = _pad_to(_pad_to(xd2, block_m, 1), block_k, 2)
+    else:
+        xd2 = None
     wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
     ap = _pad_to(a, block_k, 0)
-    adp = _pad_to(adot, block_k, 0)
+    adp = _pad_to(adots, block_k, 1)
     bp = _pad_to(b, block_n, 1)
-    bdp = _pad_to(bdot, block_n, 1)
+    bdp = _pad_to(bdots, block_n, 2)
 
-    y, yd = lora_dual_kernel(x2, xd2, wp, ap, adp, bp, bdp, scale=scale,
-                             block_m=block_m, block_n=block_n,
-                             block_k=block_k, interpret=interpret)
+    y, yds = lora_dual_mt_kernel(x2, xd2, wp, ap, adp, bp, bdp, scale=scale,
+                                 block_m=block_m, block_n=block_n,
+                                 block_k=block_k, interpret=interpret)
     y = y[:M, :N].reshape(batch_shape + (N,))
-    yd = yd[:M, :N].reshape(batch_shape + (N,))
-    return y, yd
+    yds = yds[:, :M, :N].reshape((T,) + batch_shape + (N,))
+    return y, yds
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def lora_dual_mt_tangents(x, xdots, w, a, adots, b, bdots, scale: float = 1.0,
+                          block_m: int = 128, block_n: int = 128,
+                          block_k: int = 128, interpret: bool = True):
+    """Tangent-only fused pass -> ydots (T, ..., N). Same contract as
+    ``lora_dual_mt`` but skips the primal output — the AD dispatch rule uses
+    this so its primal stays a pure function of primal inputs (required for
+    jax.linearize to partial-eval through the custom-JVP rule)."""
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    T = adots.shape[0]
+    x2 = _pad_to(_pad_to(x.reshape(-1, K), block_m, 0), block_k, 1)
+    M = x.reshape(-1, K).shape[0]
+    if xdots is not None:
+        xdots = _pad_to(_pad_to(xdots.reshape(T, -1, K), block_m, 1),
+                        block_k, 2)
+    wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+    ap = _pad_to(a, block_k, 0)
+    adp = _pad_to(adots, block_k, 1)
+    bp = _pad_to(b, block_n, 1)
+    bdp = _pad_to(bdots, block_n, 2)
+    yds = lora_dual_mt_kernel(x2, xdots, wp, ap, adp, bp, bdp, scale=scale,
+                              block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=interpret,
+                              emit_primal=False)
+    return yds[:, :M, :N].reshape((T,) + batch_shape + (N,))
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def lora_dual_mt_jvps(x, w, a, adots, b, bdots, gy, scale: float = 1.0,
+                      xdots=None):
+    """All T jvp scalars <gy, ydot_t> via contraction reassociation.
+
+    Never materializes a (T, M, N) tangent stack: the frozen-weight GEMM
+    appears at most once (gy@Wᵀ, only when ``xdots`` is given) and every
+    per-tangent term is rank-r sized. Equivalent (up to float reassociation)
+    to contracting ``gy`` with ``lora_dual_mt``'s ydots — the oracle is
+    ``ref.lora_dual_mt_jvps_ref``.
+    """
+    x = x.reshape(-1, x.shape[-1])
+    gy = gy.reshape(-1, gy.shape[-1]).astype(jnp.float32)
+    u = x @ a                                       # (M, r)
+    z1 = gy @ b.T                                   # (M, r)  ydot·b side
+    z2 = u.T @ gy                                   # (r, N)  u·bdot side
+    udots = x @ adots                               # (T, M, r)
+    if xdots is not None:
+        xdots = xdots.reshape(adots.shape[0], -1, x.shape[-1])
+        udots = udots + xdots @ a
+    jvps = scale * (jnp.einsum("mr,tmr->t", z1, udots)
+                    + jnp.einsum("rn,trn->t", z2,
+                                 bdots.astype(jnp.float32)))
+    if xdots is not None:
+        jvps = jvps + jnp.einsum("mk,tmk->t", gy @ w.T, xdots)
+    return jvps

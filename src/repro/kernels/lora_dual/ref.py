@@ -1,10 +1,15 @@
-"""Pure-jnp oracle for the fused LoRA dual-number (primal+tangent) matmul.
+"""Pure-jnp oracles for the fused LoRA dual-number (primal+tangent) matmul.
 
 Semantics (exactly what jax.jvp produces for y = x@W + s*(x@A)@B with
 tangents on x, A, B and frozen W):
 
     y    = x@W + s*(x@A)@B
     ydot = xdot@W + s*((xdot@A + x@adot)@B + (x@A)@bdot)
+
+Tangent-axis contract (multi-tangent variants): tangent stacks carry a
+leading axis T — ``xdots (T,M,K)``, ``adots (T,K,r)``, ``bdots (T,r,N)`` ->
+``ydots (T,M,N)``; ``xdots=None`` means the input carries no tangent (the
+projection is the first perturbed unit on the client's path).
 """
 from __future__ import annotations
 
@@ -18,3 +23,25 @@ def lora_dual_ref(x, xdot, w, a, adot, b, bdot, scale: float):
     udot = xdot @ a + x @ adot
     ydot = xdot @ w + scale * (udot @ b + u @ bdot)
     return y, ydot
+
+
+def lora_dual_mt_ref(x, xdots, w, a, adots, b, bdots, scale: float):
+    """Multi-tangent oracle; x 2-D (M,K), tangent stacks lead with T."""
+    u = x @ a                                        # (M, r)
+    y = x @ w + scale * (u @ b)
+    udots = x @ adots                                # (T, M, r) broadcast
+    if xdots is not None:
+        udots = udots + xdots @ a
+    ydots = scale * (udots @ b + u @ bdots)          # (T, M, N)
+    if xdots is not None:
+        ydots = ydots + xdots @ w
+    return y, ydots
+
+
+def lora_dual_mt_jvps_ref(x, w, a, adots, b, bdots, gy, scale: float,
+                          xdots=None):
+    """Oracle for the fused jvp contraction: materializes all T ydots and
+    contracts them against the output cotangent ``gy`` (M,N)."""
+    _, ydots = lora_dual_mt_ref(x, xdots, w, a, adots, b, bdots, scale)
+    return jnp.einsum("mn,tmn->t", gy.astype(jnp.float32),
+                      ydots.astype(jnp.float32))

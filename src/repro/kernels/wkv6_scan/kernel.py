@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_scr,
             *, block_s: int):
@@ -64,7 +66,7 @@ def wkv6_scan_kernel(r, k, v, w, u, *, block_s: int = 64, interpret=True):
         out_specs=pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

@@ -192,6 +192,8 @@ def analyse(cfg, shape, mesh, lowered, compiled, multi_pod: bool):
     n_chips = 512 if multi_pod else 256
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):    # newer jax: list of per-program dicts
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
 
     # XLA's cost_analysis counts while bodies ONCE; the loop-aware static

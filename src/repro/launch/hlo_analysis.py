@@ -75,8 +75,7 @@ def parse_computations(hlo_text):
                 if line.startswith("ENTRY") or s.startswith("ENTRY"):
                     entry = cur
                 # header params give shapes: "name: f32[8,16], ..."
-                for p in m.group(2).split(","):
-                    p = p.strip()
+                for p in _split_top(m.group(2)):
                     if ":" in p:
                         pname, pshape = p.split(":", 1)
                         comps[cur]["params"][pname.strip()] = pshape.strip()
@@ -101,17 +100,36 @@ def _symbol_table(comp):
     return table
 
 
+def _split_top(s, sep=","):
+    """Split on ``sep`` at bracket depth 0 — shape strings carry commas
+    inside ``[dims]`` and layout ``{1,0}`` annotations."""
+    parts, buf, depth = [], "", 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == sep and depth == 0:
+            parts.append(buf.strip())
+            buf = ""
+        else:
+            buf += ch
+    if buf.strip():
+        parts.append(buf.strip())
+    return parts
+
+
 def _operands(raw):
     """names of operands inside the top-level parens of `opcode(...)`."""
     i = raw.index("(")
     depth = 0
     args, buf = [], ""
     for ch in raw[i:]:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-            if depth == 1:
+            if depth == 1 and ch == "(":
                 continue
-        elif ch == ")":
+        elif ch in ")]}":
             depth -= 1
             if depth == 0:
                 if buf.strip():

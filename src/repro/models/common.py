@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import lora_proj
+
 
 # ---------------------------------------------------------------------------
 # Initialisation
@@ -97,13 +99,14 @@ def proj(x, w, b=None, lora=None, lora_scale=1.0):
     """y = x @ W (+ b) (+ s * (x@A)@B).
 
     ``lora`` is None or {"A": (din, r), "B": (r, dout)}. The LoRA path is the
-    paper's trainable subspace; on TPU the fused variant lives in
-    kernels/lora_dual.
+    paper's trainable subspace; it routes through ``kernels/dispatch`` so
+    forward-mode differentiation (SPRY's estimator) hits the fused
+    primal+tangent kernel — Pallas on TPU, the jnp reference mirror on CPU.
     """
-    y = x @ w
     if lora is not None:
-        lo = (x.astype(lora["A"].dtype) @ lora["A"]) @ lora["B"] * lora_scale
-        y = y + lo.astype(y.dtype)
+        y = lora_proj(x, w, lora["A"], lora["B"], float(lora_scale))
+    else:
+        y = x @ w
     if b is not None:
         y = y + b
     return y

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point (see ROADMAP.md).
+#
+#   ./test.sh              fast subset (-m "not slow") — the CI gate
+#   FULL=1 ./test.sh       entire suite, including slow integration tests
+#   ./test.sh tests/foo.py pass-through of extra pytest args
+#
+# Env idiom follows SNIPPETS.md (olmax test.sh): force the CPU backend and a
+# fixed host-device count so sharding tests are reproducible anywhere.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS=cpu
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+if [[ "${FULL:-0}" == "1" ]]; then
+  exec python -m pytest -x -q "$@"
+fi
+exec python -m pytest -x -q -m "not slow" "$@"

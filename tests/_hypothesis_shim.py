@@ -1,0 +1,72 @@
+"""Fallback for the ``hypothesis`` property-testing library.
+
+The container image does not ship ``hypothesis`` (and tier-0 policy forbids
+installing packages at test time), so the property-test modules import
+``given``/``settings``/``st`` from here instead. When the real library is
+available (see requirements-dev.txt) it is used unchanged; otherwise a tiny
+deterministic shim replays ``max_examples`` pseudo-random draws per test —
+weaker shrinking/coverage than real hypothesis, but the same assertions run.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd):
+            return self._draw(rnd)
+
+    class st:  # noqa: N801 - mirrors ``hypothesis.strategies`` alias
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rnd: rnd.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies_):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples", 10)
+                rnd = random.Random(0)
+                for _ in range(n):
+                    draw = {k: s.example(rnd) for k, s in strategies_.items()}
+                    fn(*args, **kwargs, **draw)
+
+            # hide the wrapped signature or pytest mistakes draw parameters
+            # for fixtures (functools.wraps sets __wrapped__)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

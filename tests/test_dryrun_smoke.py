@@ -21,6 +21,7 @@ def _run(arch, shape, multi_pod=False):
     return res.stdout
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("whisper-tiny", "train_4k"),        # train kind + enc-dec family
     ("rwkv6-1.6b", "long_500k"),         # decode kind + ssm family
@@ -31,6 +32,7 @@ def test_single_pod_lowers(arch, shape):
     assert "all requested combinations lowered + compiled OK" in out
 
 
+@pytest.mark.slow
 def test_multi_pod_lowers():
     out = _run("rwkv6-1.6b", "decode_32k", multi_pod=True)
     assert "all requested combinations lowered + compiled OK" in out

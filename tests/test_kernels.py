@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.kernels.lora_dual import lora_dual, lora_dual_ref
 from repro.kernels.swa_attention import swa_attention, swa_attention_ref
@@ -57,6 +57,7 @@ def test_lora_dual_matches_jax_jvp():
                                rtol=1e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(M=st.integers(1, 4), K=st.integers(1, 4), N=st.integers(1, 4),
        r=st.integers(1, 4))
@@ -118,6 +119,7 @@ def test_swa_attention_bf16():
                                rtol=3e-2)
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(wmul=st.integers(1, 6))
 def test_swa_attention_window_sweep(wmul):
