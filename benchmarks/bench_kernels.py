@@ -29,7 +29,12 @@ jnp paths the dispatch layer routes to on CPU, and report:
                              does blockwise on TPU
 
 The acceptance gate (ISSUE 1): batched_fused at K=8 < 0.5x the sequential
-wall time. Results are written to BENCH_kernels.json by benchmarks/run.py.
+wall time. ISSUE 2 adds ``fg_mixer_ksweep``: the same
+sequential-vs-batched estimator comparison THROUGH an RWKV6 recurrence and
+an SWA attention block (the dispatched sequence mixers) — the batched
+engine amortizes the mixer primal across K tangents, which is what the
+wkv6/swa multi-tangent Pallas kernels do blockwise on TPU. Results are
+written to BENCH_kernels.json by benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -44,12 +49,15 @@ from repro.core.forward_grad import (
     forward_gradient,
     stacked_perturbations,
 )
-from repro.kernels.dispatch import lora_proj
+from repro.kernels.dispatch import lora_proj, swa_attend, wkv6_mix
 from repro.kernels.lora_dual import lora_dual_mt_jvps
 from repro.kernels.lora_dual.ref import lora_dual_ref
 
 M, K_DIM, N, R = 1024, 1024, 1024, 8
 SCALE = 1.0
+
+# mixer-block sweep shapes: big enough that the mixer primal dominates
+MB, MS, MH, MHD = 2, 256, 4, 32
 
 
 def _time(fn, *args, n=5):
@@ -190,6 +198,106 @@ def _bench_fg_ksweep(x, w, peft, k_values, print_csv):
     return rows
 
 
+def _mixer_problem(mixer):
+    """A one-block loss through the dispatched sequence mixer, with a LoRA
+    projection feeding it so perturbations carry tangents into the mixer."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 8)
+    B, S, H, hd = MB, MS, MH, MHD
+    D = H * hd
+    x = jax.random.normal(ks[0], (B, S, D)) * 0.3
+    wp = [jax.random.normal(ks[1 + i], (D, D)) * 0.05 for i in range(3)]
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    wdec = jax.nn.sigmoid(jax.random.normal(ks[5], (B, S, H, hd)))
+    peft = {"A": jax.random.normal(ks[6], (D, R)) * 0.05,
+            "B": jax.random.normal(ks[7], (R, D)) * 0.05}
+
+    def loss_of(p):
+        r = lora_proj(x, wp[0], p["A"], p["B"], SCALE)
+        k = (x @ wp[1]).reshape(B, S, H, hd)
+        v = (x @ wp[2]).reshape(B, S, H, hd)
+        if mixer == "rwkv6":
+            y = wkv6_mix(r.reshape(B, S, H, hd), k, v, wdec, u)
+        else:
+            y = swa_attend(r.reshape(B, S, H, hd).transpose(0, 2, 1, 3),
+                           k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), 128)
+        return jnp.mean(y * y)
+
+    return loss_of, peft
+
+
+def _bench_mixer_ksweep(k_values, print_csv):
+    """Estimator wall time through an RWKV6 recurrence and an SWA attention
+    block, three executions of the same estimate (cf. ``_bench_fg_ksweep``):
+
+      sequential_columnwise  one jit call per perturbation — the paper's
+                             column-by-column jvp behaviour (the mixer
+                             primal recomputed K times)
+      sequential_fused_loop  tangent_batch=1 fori_loop inside one jit (XLA
+                             may hoist loop-invariant primal work)
+      batched_engine         linearize + vmap: ONE mixer primal, K stacked
+                             tangents — the execution the wkv6/swa
+                             multi-tangent Pallas kernels realize blockwise
+                             on TPU
+
+    Measures the jnp paths the dispatch layer routes to on CPU."""
+    from repro.core.forward_grad import masked_perturbation
+
+    out = {}
+    key = jax.random.PRNGKey(13)
+    for mixer in ("rwkv6", "swa"):
+        loss_of, peft = _mixer_problem(mixer)
+
+        @jax.jit
+        def one_col(i, key, p, loss_of=loss_of):
+            v = masked_perturbation(jax.random.fold_in(key, i), p)
+            loss, jvp = jax.jvp(loss_of, (p,), (v,))
+            return loss, jax.tree.map(lambda vi: jvp * vi, v), jvp
+
+        tree_add = jax.jit(lambda a, b: jax.tree.map(jnp.add, a, b))
+        rows = []
+        for K in k_values:
+            def columnwise(key, p, K=K):
+                g, jvps = None, []
+                for i in range(K):
+                    loss, gi, jvp = one_col(jnp.int32(i), key, p)
+                    g = gi if g is None else tree_add(g, gi)
+                    jvps.append(jvp)
+                return loss, jax.tree.map(lambda t: t / K, g), jnp.stack(jvps)
+
+            seq = jax.jit(lambda k_, p, K=K: forward_gradient(
+                loss_of, p, k_, k_perturbations=K, tangent_batch=1))
+            bat = jax.jit(lambda k_, p, K=K: forward_gradient(
+                loss_of, p, k_, k_perturbations=K))
+            _, _, j_c = columnwise(key, peft)
+            _, _, j_b = bat(key, peft)
+            jvp_err = float(jnp.abs(j_c - j_b).max()
+                            / (jnp.abs(j_c).max() + 1e-12))
+            t_col = _time(columnwise, key, peft)
+            t_seq = _time(seq, key, peft)
+            t_bat = _time(bat, key, peft)
+            rows.append({
+                "K": K,
+                "sequential_columnwise_us": t_col * 1e6,
+                "sequential_fused_loop_us": t_seq * 1e6,
+                "batched_engine_us": t_bat * 1e6,
+                "ratio_batched_vs_columnwise": t_bat / t_col,
+                "ratio_batched_vs_loop": t_bat / t_seq,
+                "jvp_rel_err": jvp_err,
+            })
+            if print_csv:
+                print(f"kernel/fg_mixer_ksweep/{mixer}/K={K}/"
+                      f"sequential_columnwise,{t_col*1e6:.0f},")
+                print(f"kernel/fg_mixer_ksweep/{mixer}/K={K}/"
+                      f"sequential_fused_loop,{t_seq*1e6:.0f},")
+                print(f"kernel/fg_mixer_ksweep/{mixer}/K={K}/batched_engine,"
+                      f"{t_bat*1e6:.0f},ratio_vs_columnwise={t_bat/t_col:.2f}"
+                      f" ratio_vs_loop={t_bat/t_seq:.2f} "
+                      f"jvp_err={jvp_err:.1e}")
+        out[mixer] = rows
+    return out
+
+
 def main(print_csv=True, quick=False, json_path=None):
     x, w, peft = _problem()
     result = {
@@ -197,6 +305,9 @@ def main(print_csv=True, quick=False, json_path=None):
         "jvp_vs_forward": _bench_jvp_vs_forwards(x, w, peft, print_csv),
         "fg_ksweep": _bench_fg_ksweep(
             x, w, peft, (1, 8) if quick else (1, 2, 4, 8, 16), print_csv),
+        "mixer_shapes": {"B": MB, "S": MS, "H": MH, "hd": MHD},
+        "fg_mixer_ksweep": _bench_mixer_ksweep(
+            (1, 8) if quick else (1, 2, 4, 8), print_csv),
     }
     k8 = next((r for r in result["fg_ksweep"] if r["K"] == 8), None)
     if k8 is not None:
@@ -210,6 +321,24 @@ def main(print_csv=True, quick=False, json_path=None):
             print(f"kernel/fg_ksweep/acceptance,0,"
                   f"K=8 fused/columnwise={k8['ratio_fused_vs_columnwise']:.2f}"
                   f" (<0.5 required) pass={result['acceptance']['pass']}")
+    mixer_acc = {}
+    for mixer, rows in result["fg_mixer_ksweep"].items():
+        k8m = next((r for r in rows if r["K"] == 8), None)
+        if k8m is not None:
+            mixer_acc[mixer] = {
+                "criterion": ("batched K=8 estimate < 1x the sequential "
+                              "column-by-column wall time"),
+                "ratio_batched_vs_columnwise":
+                    k8m["ratio_batched_vs_columnwise"],
+                "pass": k8m["ratio_batched_vs_columnwise"] < 1.0,
+            }
+            if print_csv:
+                print(f"kernel/fg_mixer_ksweep/{mixer}/acceptance,0,"
+                      f"K=8 batched/columnwise="
+                      f"{k8m['ratio_batched_vs_columnwise']:.2f} (<1 "
+                      f"required) pass={mixer_acc[mixer]['pass']}")
+    if mixer_acc:
+        result["mixer_acceptance"] = mixer_acc
     if json_path:
         with open(json_path, "w") as f:
             json.dump(result, f, indent=2)

@@ -19,6 +19,15 @@ of K times (the paper's §5.3 "column-by-column jvp" overhead). Ops whose
 inputs carry no tangent stay unbatched under vmap, so only tangent-carrying
 intermediates gain the K axis.
 
+On kernel backends the vmap does not stop at batched jnp ops: the dispatch
+layer (kernels/dispatch.py) registers custom batching rules so that
+vmap-of-tangents through a LoRA projection, an RWKV6 recurrence, or an SWA
+attention block lowers DIRECTLY to the corresponding multi-tangent Pallas
+kernel (``lora_dual_mt_tangents`` / ``wkv6_scan_mt_tangents`` /
+``swa_attention_mt_tangents``) — the same leading-K tangent axis becomes
+the kernel's T axis, and one pass over the primal operands serves all K
+tangents in VMEM.
+
 ``tangent_batch`` trades that amortization against tangent-intermediate
 memory (each tangent-carrying activation is K× wider):
 

@@ -1,14 +1,17 @@
-"""Backend dispatch for the fused LoRA projection.
+"""Backend dispatch for the fused forward-gradient kernels.
 
 ``models/common.py::proj`` routes every LoRA-adapted projection through
 ``lora_proj`` below, whose custom-JVP rule evaluates the primal AND tangent
-with the fused dual kernel instead of the pure-jnp mirror:
+with the fused dual kernel instead of the pure-jnp mirror; the sequence
+mixers route the same way — ``models/ssm.py`` (RWKV6) through ``wkv6_mix``
+and ``models/attention.py`` (SWA prefill) through ``swa_attend``:
 
-    backend 'pallas'     compiled Pallas TPU kernel (kernels/lora_dual)
-    backend 'interpret'  same kernel under the Pallas interpreter (CPU
+    backend 'pallas'     compiled Pallas TPU kernels (kernels/lora_dual,
+                         kernels/wkv6_scan, kernels/swa_attention)
+    backend 'interpret'  same kernels under the Pallas interpreter (CPU
                          validation of the exact kernel dataflow)
-    backend 'jnp'        reference einsum/matmul mirror — the fast CPU path
-                         (XLA fuses it; interpret-mode Pallas would be
+    backend 'jnp'        reference einsum/scan mirrors — the fast CPU path
+                         (XLA fuses them; interpret-mode Pallas would be
                          orders of magnitude slower in the test suite)
 
 Resolution: ``REPRO_LORA_BACKEND`` env var if set (one of auto | jnp |
@@ -18,16 +21,26 @@ interpret | pallas), else 'pallas' when jax's default backend is TPU, else
 The kernel route additionally requires being inside ``forward_ad_region()``
 (established by core/forward_grad.py while tracing the estimator): Pallas
 calls have no transpose rule, so outside that region — in particular under
-``jax.grad`` in the backprop baselines — the rule always traces the jnp
-mirror, keeping reverse-mode AD working on every backend.
+``jax.grad`` in the backprop baselines — the rules always trace the jnp
+mirror, keeping reverse-mode AD working on every backend. The mixer call
+sites additionally gate on ``use_kernel_mixers()`` so the pure-jnp model
+paths are untouched byte-for-byte on the 'jnp' backend.
 
-Tangent-axis note: under the batched K-tangent estimator
-(core/forward_grad.py) the tangent side of the JVP rule is batched by vmap —
-tangent operands gain the leading K axis while primal operands stay
-unbatched, which is exactly the multi-tangent kernel contract. The compiled
-TPU route currently lowers vmap-of-dual-kernel through the Pallas batching
-rule; routing it through ``lora_dual_mt`` directly via a custom batching
-rule is an open item (ROADMAP).
+Tangent-axis contract
+---------------------
+Under the batched K-tangent estimator (core/forward_grad.py) the tangent
+side of each JVP rule is batched by vmap — tangent operands gain the
+leading K axis while primal operands stay unbatched, which is exactly the
+multi-tangent kernel contract (``lora_dual_mt_tangents``,
+``wkv6_scan_mt_tangents``, ``swa_attention_mt_tangents``: tangents carry a
+leading T axis; one pass over the primal serves all T tangents). The
+tangent calls are wrapped in ``jax.custom_batching.custom_vmap`` so that
+vmap-of-tangents lowers DIRECTLY to the T=K multi-tangent kernel — one
+fused pallas_call per projection/mixer — instead of the Pallas default
+batching rule (which would re-grid the T=1 kernel over K and recompute the
+primal per tangent). Unexpected batching patterns (e.g. a batched primal)
+fall back to a sequential ``lax.map`` of the T=1 kernel, which is always
+correct.
 """
 from __future__ import annotations
 
@@ -38,9 +51,17 @@ import os
 
 import jax
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 from jax.custom_derivatives import SymbolicZero
 
 from repro.kernels.lora_dual.ops import lora_dual_mt_tangents
+from repro.kernels.swa_attention.ops import (
+    swa_attention,
+    swa_attention_mt_tangents,
+)
+from repro.kernels.swa_attention.ref import swa_attention_gqa_ref
+from repro.kernels.wkv6_scan.ops import wkv6_scan, wkv6_scan_mt_tangents
+from repro.kernels.wkv6_scan.ref import wkv6_scan_ref
 
 # Pallas calls have no transpose rule, so the kernel tangent route would
 # break reverse-mode AD (the backprop baselines) if taken unconditionally.
@@ -53,8 +74,9 @@ _fwd_region = contextvars.ContextVar("repro_forward_ad_region", default=False)
 
 @contextlib.contextmanager
 def forward_ad_region():
-    """Trace-time marker: within this context, LoRA projection tangents may
-    lower to the (non-transposable) fused Pallas kernel."""
+    """Trace-time marker: within this context, LoRA projection and sequence
+    mixer tangents may lower to the (non-transposable) fused Pallas
+    kernels."""
     token = _fwd_region.set(True)
     try:
         yield
@@ -88,6 +110,160 @@ def get_backend() -> str:
     return name
 
 
+def use_kernel_mixers() -> bool:
+    """True when the sequence-mixer call sites (models/ssm.py,
+    models/attention.py) should route through the dispatched ops below:
+    inside the estimator's forward-AD region on a kernel backend. On the
+    'jnp' backend the model keeps its native scan/chunked paths untouched."""
+    return in_forward_ad_region() and get_backend() in ("pallas", "interpret")
+
+
+def _materialize(t, like):
+    if isinstance(t, SymbolicZero):
+        return jnp.zeros(like.shape, like.dtype)
+    return t
+
+
+def _map_fallback(axis_size, in_batched, args, f):
+    """custom_vmap fallback for unexpected batching patterns: broadcast the
+    unbatched operands and run the T=1 tangent kernel sequentially."""
+    args_b = tuple(
+        a if b else jnp.broadcast_to(a, (axis_size,) + jnp.shape(a))
+        for a, b in zip(args, in_batched))
+    return jax.lax.map(lambda xs: f(*xs), args_b), True
+
+
+def _stack_tangents(axis_size, tangents, batched):
+    """Give every tangent the leading T axis. Unbatched tangents (e.g. a
+    symbolic zero materialized at linearize time — the same constant for all
+    K lanes) are broadcast, so the mt route still fires whenever the
+    PRIMALS are unbatched."""
+    return tuple(
+        t if b else jnp.broadcast_to(t, (axis_size,) + jnp.shape(t))
+        for t, b in zip(tangents, batched))
+
+
+# ---------------------------------------------------------------------------
+# Multi-tangent batching rules (vmap-of-tangents -> one mt kernel call)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _lora_tangent_fn(scale: float, has_xd: bool, interpret: bool):
+    """Tangent-only LoRA jvp, custom-vmapped so K stacked tangents lower to
+    ONE ``lora_dual_mt_tangents`` call (T=K) instead of K re-gridded T=1
+    Pallas calls."""
+    if has_xd:
+        def base(x, w, a, b, xd, ad, bd):
+            return lora_dual_mt_tangents(
+                x, xd[None], w, a, ad[None], b, bd[None], scale=scale,
+                interpret=interpret)[0]
+
+        f = custom_vmap(base)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, x, w, a, b, xd, ad, bd):
+            xb, wb, ab, bb = in_batched[:4]
+            if not (xb or wb or ab or bb):
+                xd, ad, bd = _stack_tangents(axis_size, (xd, ad, bd),
+                                             in_batched[4:])
+                return lora_dual_mt_tangents(
+                    x, xd, w, a, ad, b, bd, scale=scale,
+                    interpret=interpret), True
+            return _map_fallback(axis_size, in_batched,
+                                 (x, w, a, b, xd, ad, bd), base)
+    else:
+        def base(x, w, a, b, ad, bd):
+            return lora_dual_mt_tangents(
+                x, None, w, a, ad[None], b, bd[None], scale=scale,
+                interpret=interpret)[0]
+
+        f = custom_vmap(base)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, x, w, a, b, ad, bd):
+            xb, wb, ab, bb = in_batched[:4]
+            if not (xb or wb or ab or bb):
+                ad, bd = _stack_tangents(axis_size, (ad, bd), in_batched[4:])
+                return lora_dual_mt_tangents(
+                    x, None, w, a, ad, b, bd, scale=scale,
+                    interpret=interpret), True
+            return _map_fallback(axis_size, in_batched,
+                                 (x, w, a, b, ad, bd), base)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _wkv6_tangent_fn(has_ud: bool, interpret: bool):
+    """Tangent-only WKV6 jvp, custom-vmapped onto ``wkv6_scan_mt_tangents``
+    (one primal state walk for all K tangents)."""
+    if has_ud:
+        def base(r, k, v, w, u, rd, kd, vd, wd, ud):
+            return wkv6_scan_mt_tangents(
+                r, k, v, w, u, rd[None], kd[None], vd[None], wd[None],
+                ud[None], interpret=interpret)[0]
+
+        f = custom_vmap(base)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, r, k, v, w, u, rd, kd, vd, wd, ud):
+            pb, tb = in_batched[:5], in_batched[5:]
+            if not any(pb):
+                rd, kd, vd, wd, ud = _stack_tangents(
+                    axis_size, (rd, kd, vd, wd, ud), tb)
+                return wkv6_scan_mt_tangents(
+                    r, k, v, w, u, rd, kd, vd, wd, ud,
+                    interpret=interpret), True
+            return _map_fallback(axis_size, in_batched,
+                                 (r, k, v, w, u, rd, kd, vd, wd, ud), base)
+    else:
+        def base(r, k, v, w, u, rd, kd, vd, wd):
+            return wkv6_scan_mt_tangents(
+                r, k, v, w, u, rd[None], kd[None], vd[None], wd[None],
+                interpret=interpret)[0]
+
+        f = custom_vmap(base)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, r, k, v, w, u, rd, kd, vd, wd):
+            pb, tb = in_batched[:5], in_batched[5:]
+            if not any(pb):
+                rd, kd, vd, wd = _stack_tangents(axis_size,
+                                                 (rd, kd, vd, wd), tb)
+                return wkv6_scan_mt_tangents(
+                    r, k, v, w, u, rd, kd, vd, wd, interpret=interpret), True
+            return _map_fallback(axis_size, in_batched,
+                                 (r, k, v, w, u, rd, kd, vd, wd), base)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _swa_tangent_fn(window, interpret: bool):
+    """Tangent-only SWA jvp, custom-vmapped onto
+    ``swa_attention_mt_tangents`` (one online-softmax walk for all K
+    tangents)."""
+    def base(q, k, v, qd, kd, vd):
+        return swa_attention_mt_tangents(
+            q, k, v, qd[None], kd[None], vd[None], window=window,
+            interpret=interpret)[0]
+
+    f = custom_vmap(base)
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, q, k, v, qd, kd, vd):
+        pb, tb = in_batched[:3], in_batched[3:]
+        if not any(pb):
+            qd, kd, vd = _stack_tangents(axis_size, (qd, kd, vd), tb)
+            return swa_attention_mt_tangents(
+                q, k, v, qd, kd, vd, window=window, interpret=interpret), True
+        return _map_fallback(axis_size, in_batched, (q, k, v, qd, kd, vd),
+                             base)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# LoRA projection
+# ---------------------------------------------------------------------------
+
 def _lora_terms(x, a, b, scale):
     """The rank-r update s*(x@A)@B computed in A's dtype (fp32 master LoRA
     weights), mirroring the pre-dispatch pure-jnp proj numerics exactly."""
@@ -101,12 +277,6 @@ def lora_proj(x, w, a, b, scale):
     return y + _lora_terms(x, a, b, scale).astype(y.dtype)
 
 
-def _materialize(t, like):
-    if isinstance(t, SymbolicZero):
-        return jnp.zeros(like.shape, like.dtype)
-    return t
-
-
 @functools.partial(lora_proj.defjvp, symbolic_zeros=True)
 def _lora_proj_jvp(scale, primals, tangents):
     x, w, a, b = primals
@@ -118,13 +288,17 @@ def _lora_proj_jvp(scale, primals, tangents):
     if backend in ("pallas", "interpret") and in_forward_ad_region():
         # primal from the jnp mirror (must stay tangent-independent so
         # linearize can split the rule); tangents from the fused kernel —
-        # one pass over x/W per tangent group
+        # one pass over x/W per tangent group. The custom-vmapped tangent fn
+        # makes the batched estimator's vmap collapse K tangents into ONE
+        # mt kernel call.
         y = x @ w
         y = y + _lora_terms(x, a, b, scale).astype(y.dtype)
-        yd = lora_dual_mt_tangents(
-            x, None if not has_xd else xd[None], w,
-            a, _materialize(ad, a)[None], b, _materialize(bd, b)[None],
-            scale=scale, interpret=(backend == "interpret"))[0]
+        fn = _lora_tangent_fn(scale, has_xd, backend == "interpret")
+        ad_m, bd_m = _materialize(ad, a), _materialize(bd, b)
+        if has_xd:
+            yd = fn(x, w, a, b, xd, ad_m, bd_m)
+        else:
+            yd = fn(x, w, a, b, ad_m, bd_m)
         if has_wd:  # frozen W in SPRY; handled for AD completeness
             yd = yd + (x @ wd).astype(yd.dtype)
         return y, yd
@@ -157,3 +331,87 @@ def _lora_proj_jvp(scale, primals, tangents):
         if has_wd:
             yd = yd + x @ wd
     return y, yd
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV recurrence (fresh-state training path)
+# ---------------------------------------------------------------------------
+
+@jax.custom_jvp
+def wkv6_mix(r, k, v, w, u):
+    """y = WKV6(r, k, v, w, u) from a fresh state — the training-path
+    sequence mixer. r,k,v,w: (B,S,H,hd) fp32; u: (H,hd). The primal is the
+    jnp scan mirror (bit-identical to models/ssm.py::wkv6_recurrence); the
+    JVP rule lowers tangents to ``wkv6_scan_mt_tangents`` on kernel
+    backends inside ``forward_ad_region()``."""
+    return wkv6_scan_ref(r, k, v, w, u)[0]
+
+
+@functools.partial(wkv6_mix.defjvp, symbolic_zeros=True)
+def _wkv6_mix_jvp(primals, tangents):
+    r, k, v, w, u = primals
+    rd, kd, vd, wd, ud = tangents
+    backend = get_backend()
+    if backend in ("pallas", "interpret") and in_forward_ad_region():
+        # primal (tangent-independent, so linearize still splits the rule):
+        # the compiled state-walk kernel on TPU — the jnp scan pays the
+        # per-token HBM round-trip of the (hd,hd) state the kernel exists to
+        # remove; under the interpreter keep the fast XLA scan (the kernel
+        # dataflow is already exercised by the tangent route)
+        if backend == "pallas":
+            y = wkv6_scan(r, k, v, w, u, interpret=False)
+        else:
+            y = wkv6_scan_ref(r, k, v, w, u)[0]
+        has_ud = not isinstance(ud, SymbolicZero)
+        fn = _wkv6_tangent_fn(has_ud, backend == "interpret")
+        args = (r, k, v, w, u, _materialize(rd, r), _materialize(kd, k),
+                _materialize(vd, v), _materialize(wd, w))
+        if has_ud:
+            args += (ud,)
+        return y, fn(*args)
+
+    def f(r_, k_, v_, w_, u_):
+        return wkv6_scan_ref(r_, k_, v_, w_, u_)[0]
+
+    return jax.jvp(f, primals, (
+        _materialize(rd, r), _materialize(kd, k), _materialize(vd, v),
+        _materialize(wd, w), _materialize(ud, u)))
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window attention (prefill/training path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(3,))
+def swa_attend(q, k, v, window):
+    """Causal (sliding-window) GQA attention, kernel layout: q (B,H,S,hd);
+    k,v (B,KV,S,hd), contiguous query-head groups. The primal is the grouped
+    jnp mirror (no repeated K/V); the JVP rule lowers tangents to
+    ``swa_attention_mt_tangents`` on kernel backends inside
+    ``forward_ad_region()``."""
+    return swa_attention_gqa_ref(q, k, v, window=window)
+
+
+@functools.partial(swa_attend.defjvp, symbolic_zeros=True)
+def _swa_attend_jvp(window, primals, tangents):
+    q, k, v = primals
+    qd, kd, vd = tangents
+    backend = get_backend()
+    if backend in ("pallas", "interpret") and in_forward_ad_region():
+        # primal via the flash kernel on TPU: the grouped jnp mirror
+        # materializes the (S, S) score tensor, which would make every
+        # estimate's primal quadratic in memory; under the interpreter the
+        # mirror is the fast CPU path
+        if backend == "pallas":
+            y = swa_attention(q, k, v, window=window, interpret=False)
+        else:
+            y = swa_attention_gqa_ref(q, k, v, window=window)
+        fn = _swa_tangent_fn(window, backend == "interpret")
+        return y, fn(q, k, v, _materialize(qd, q), _materialize(kd, k),
+                     _materialize(vd, v))
+
+    def f(q_, k_, v_):
+        return swa_attention_gqa_ref(q_, k_, v_, window=window)
+
+    return jax.jvp(f, primals, (
+        _materialize(qd, q), _materialize(kd, k), _materialize(vd, v)))

@@ -22,3 +22,39 @@ def swa_attention_ref(q, k, v, window=None):
     scores = jnp.where(keep, scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)
+
+
+def swa_attention_gqa_ref(q, k, v, window=None):
+    """GQA oracle without repeated K/V: q (B,H,S,hd); k,v (B,KV,S,hd) with
+    contiguous query-head groups (head h reads kv head h // (H//KV) — the
+    models/attention.py convention)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    qg = q.reshape(B, KV, rep, S, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    keep = kpos <= qpos
+    if window is not None:
+        keep = keep & (kpos > qpos - window)
+    scores = jnp.where(keep, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(q.dtype), v)
+    return out.reshape(B, H, S, hd)
+
+
+def swa_attention_mt_ref(q, k, v, qds, kds, vds, window=None):
+    """Multi-tangent oracle: (out, outds) via T independent ``jax.jvp``
+    calls of the GQA reference — the column-by-column semantics the mt
+    kernel fuses. Tangents carry a leading T axis."""
+    out = swa_attention_gqa_ref(q, k, v, window=window)
+
+    def one(tangents):
+        qd, kd, vd = tangents
+        return jax.jvp(lambda q_, k_, v_: swa_attention_gqa_ref(
+            q_, k_, v_, window=window), (q, k, v), (qd, kd, vd))[1]
+
+    outds = jax.vmap(one)((qds, kds, vds))
+    return out, outds

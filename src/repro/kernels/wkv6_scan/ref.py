@@ -27,3 +27,22 @@ def wkv6_scan_ref(r, k, v, w, u, state=None):
     xs = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), (r, k, v, w))
     state, ys = jax.lax.scan(step, state, xs)
     return ys.transpose(1, 0, 2, 3), state
+
+
+def wkv6_scan_mt_ref(r, k, v, w, u, rds, kds, vds, wds, uds=None):
+    """Multi-tangent oracle: (y, ydots) via T independent ``jax.jvp`` calls
+    of the single-tangent reference — the column-by-column semantics the mt
+    kernel fuses. Tangents carry a leading T axis (uds may be None)."""
+    T = rds.shape[0]
+    y, _ = wkv6_scan_ref(r, k, v, w, u)
+
+    def f(r_, k_, v_, w_, u_):
+        return wkv6_scan_ref(r_, k_, v_, w_, u_)[0]
+
+    def one(tangents):
+        rd, kd, vd, wd, ud = tangents
+        return jax.jvp(f, (r, k, v, w, u), (rd, kd, vd, wd, ud))[1]
+
+    uds_ = uds if uds is not None else jnp.zeros((T,) + u.shape, jnp.float32)
+    yds = jax.vmap(one)((rds, kds, vds, wds, uds_))
+    return y, yds

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models.common import dense_init, maybe_lora, proj, rope
 from repro.models.partitioning import constrain
 
@@ -170,7 +171,16 @@ def attn_block_prefill(cfg, p, x, peft_layer, lora_scale, *, is_global=True,
     k = constrain(k, "prefill_kv")
     v = constrain(v, "prefill_kv")
     window = None if is_global else cfg.window
-    out = attend_prefill(q, k, v, window=window, causal=causal)
+    if causal and dispatch.use_kernel_mixers():
+        # forward-gradient fast path: the dispatched op lowers K stacked
+        # tangents to the multi-tangent SWA Pallas kernel — one online-
+        # softmax walk over the primal q/k/v for all K perturbations. K/V
+        # stay at KV-head width (contiguous groups, no repeat).
+        out = dispatch.swa_attend(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), window).transpose(0, 2, 1, 3)
+    else:
+        out = attend_prefill(q, k, v, window=window, causal=causal)
     out = constrain(out, "prefill_q")
     out = out.reshape(B, S, cfg.n_heads * cfg.hd)
     return proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"), lora_scale)

@@ -20,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models.common import dense_init, maybe_lora, proj
 
 
@@ -87,7 +88,9 @@ def wkv6_recurrence(r, k, v, w, u, state):
 def rwkv6_time_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
                    shift_prev=None):
     """x: (B,S,D). state: (B,H,hd,hd) or None (zeros). Returns
-    (out, new_state, last_x)."""
+    (out, new_state, last_x). On the dispatched forward-gradient fast path
+    (fresh state inside ``dispatch.use_kernel_mixers()``) new_state is None —
+    the estimator's loss closures never consume it."""
     B, S, D = x.shape
     hd = cfg.ssm.head_dim
     H = D // hd
@@ -107,11 +110,21 @@ def rwkv6_time_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
     w = jnp.exp(-jnp.exp(p["w0"] + dw.astype(jnp.float32)))   # (B,S,D)
 
     hsplit = lambda t: t.reshape(B, S, H, hd)
-    if state is None:
-        state = jnp.zeros((B, H, hd, hd), jnp.float32)
-    y, state = wkv6_recurrence(
-        hsplit(r).astype(jnp.float32), hsplit(k).astype(jnp.float32),
-        hsplit(v).astype(jnp.float32), hsplit(w), p["u"], state)
+    if state is None and dispatch.use_kernel_mixers():
+        # forward-gradient fast path (fresh state): the dispatched op lowers
+        # K stacked tangents to the multi-tangent wkv6 Pallas kernel — one
+        # primal state walk for all K perturbations. The estimator's loss
+        # closures discard the carried state, so none is produced here.
+        y = dispatch.wkv6_mix(
+            hsplit(r).astype(jnp.float32), hsplit(k).astype(jnp.float32),
+            hsplit(v).astype(jnp.float32), hsplit(w), p["u"])
+        state = None
+    else:
+        if state is None:
+            state = jnp.zeros((B, H, hd, hd), jnp.float32)
+        y, state = wkv6_recurrence(
+            hsplit(r).astype(jnp.float32), hsplit(k).astype(jnp.float32),
+            hsplit(v).astype(jnp.float32), hsplit(w), p["u"], state)
     y = y.reshape(B, S, D)
     # group-norm per head then gate
     y = y.reshape(B, S, H, hd)
