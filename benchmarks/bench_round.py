@@ -1,0 +1,169 @@
+"""Federation-runtime round benchmark (ISSUE 3).
+
+Measures rounds/sec and bytes-on-wire vs cohort size across the runtime's
+execution strategies, and records the aggregation-memory story that
+motivates the streaming executor:
+
+  executor      serial-1dev (whole-cohort vmap, stacked aggregation) vs
+                sharded-8dev (shard_map + scan streaming aggregation)
+  comm mode     per_epoch (masked-delta uplink) vs per_iteration (K jvp
+                scalars + seed ref)
+  wire dtype    fp32 vs bf16 scalar quantization (measured frame bytes)
+  cohort size   sweep past the in-process M — the stacked (C, |peft|)
+                aggregation grows linearly while the streaming accumulator
+                stays O(|peft|) per device (agg_bytes_* fields)
+
+Results append machine-readably to BENCH_round.json:
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu \
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m benchmarks.bench_round [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SpryConfig, get_config, reduce_config
+from repro.core import enumerate_units, init_state
+from repro.fl.runtime import (
+    ClientPopulation,
+    CohortScheduler,
+    FederationEngine,
+    SerialExecutor,
+    ShardedExecutor,
+    WireConfig,
+)
+from repro.models import get_model
+from repro.peft import init_peft
+from repro.utils.pytree import tree_size
+
+ARCH = "roberta-large-lora"
+B, S = 2, 16
+
+
+def _setup(seed=0):
+    cfg = reduce_config(get_config(ARCH))
+    sc = SpryConfig(n_clients_per_round=8, local_iters=1, local_lr=1e-2,
+                    server_lr=1e-2, k_perturbations=2)
+    key = jax.random.PRNGKey(seed)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, sc)
+    state = init_state(base, peft)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, cfg.vocab, size=(4096, S), dtype=np.int64)
+    y = rng.integers(0, cfg.n_classes, size=(4096,), dtype=np.int64)
+    return cfg, sc, state, x, y
+
+
+def _time_rounds(engine, scheduler, state, n_units, sc, cohort, reps):
+    """Wall-time `reps` scheduled rounds (after a warmup compile round)."""
+    plans, batches = [], []
+    for r in range(reps + 1):
+        plan = scheduler.plan_round(r, n_units, sc.seed,
+                                    client_ids=np.arange(cohort))
+        bx, by = scheduler.round_batch(plan, B)
+        plans.append(plan)
+        batches.append({"tokens": jnp.asarray(bx), "labels": jnp.asarray(by)})
+    # warmup (compile)
+    st, _, report = engine.run_round(state, plans[0], batches[0])
+    jax.block_until_ready(jax.tree.leaves(st.peft))
+    t0 = time.perf_counter()
+    for r in range(1, reps + 1):
+        st, _, report = engine.run_round(st, plans[r], batches[r])
+    jax.block_until_ready(jax.tree.leaves(st.peft))
+    dt = (time.perf_counter() - t0) / reps
+    return dt, report
+
+
+def main(quick: bool = False, json_path: str = "BENCH_round.json"):
+    cfg, sc, state, x, y = _setup()
+    n_units = enumerate_units(state.peft).n_units
+    peft_params = tree_size(state.peft)
+    n_dev = len(jax.devices())
+    reps = 2 if quick else 3
+    cohorts = (8, 16) if quick else (8, 16, 32)
+
+    pop = ClientPopulation(x, y, n_clients=1_000_000, alpha=0.1, seed=0,
+                           shard_size=32)
+
+    results = []
+    for comm_mode in ("per_epoch", "per_iteration"):
+        for label, make_exec, devs in (
+                ("serial_1dev", lambda: SerialExecutor(), 1),
+                ("sharded_8dev", lambda: ShardedExecutor(microbatch=1),
+                 n_dev)):
+            for wire in ("fp32", "bf16"):
+                for C in cohorts:
+                    scheduler = CohortScheduler(pop, cohort_size=C,
+                                                over_select=1.0,
+                                                deadline=float("inf"),
+                                                seed=0)
+                    engine = FederationEngine(
+                        cfg, sc, comm_mode=comm_mode, executor=make_exec(),
+                        wire=WireConfig(dtype=wire, simulate=False))
+                    dt, report = _time_rounds(engine, scheduler, state,
+                                              n_units, sc, C, reps)
+                    row = {
+                        "comm_mode": comm_mode,
+                        "executor": label,
+                        "n_devices": devs,
+                        "wire": wire,
+                        "cohort": C,
+                        "rounds_per_sec": 1.0 / dt,
+                        "sec_per_round": dt,
+                        "bytes_up": report.bytes_up,
+                        "bytes_down": report.bytes_down,
+                        "agg_bytes_streaming": report.agg_bytes_streaming,
+                        "agg_bytes_stacked": report.agg_bytes_stacked,
+                    }
+                    results.append(row)
+                    print(f"[bench_round] {comm_mode:13s} {label:12s} "
+                          f"wire={wire} C={C:3d} "
+                          f"{1.0/dt:6.2f} rounds/s  "
+                          f"up={report.bytes_up/1e3:8.1f}kB  "
+                          f"agg_stream={report.agg_bytes_streaming/1e3:.1f}kB"
+                          f" vs stacked={report.agg_bytes_stacked/1e3:.1f}kB")
+
+    # headline checks recorded machine-readably: streaming aggregation memory
+    # is flat in cohort size; the stacked equivalent grows linearly
+    stream = [r for r in results if r["executor"] == "sharded_8dev"]
+    by_cohort = {}
+    for r in stream:
+        by_cohort.setdefault(r["cohort"], r["agg_bytes_streaming"])
+    flat = len(set(by_cohort.values())) == 1
+    doc = {
+        "arch": ARCH,
+        "peft_params": int(peft_params),
+        "peft_bytes_fp32": int(peft_params * 4),
+        "batch_shape": [B, S],
+        "k_perturbations": sc.k_perturbations,
+        "n_devices": n_dev,
+        "streaming_agg_flat_in_cohort": bool(flat),
+        "results": results,
+    }
+    out = {}
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            out = json.load(f)
+    out.setdefault("round_bench", []).append(doc)
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[bench_round] wrote {json_path} "
+          f"(streaming agg flat in cohort: {flat})")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_round.json")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json)

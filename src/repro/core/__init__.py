@@ -21,7 +21,12 @@ from repro.core.assignment import (
 )
 from repro.core.spry import (
     SpryState,
+    aggregate_payloads,
     init_state,
+    make_client_jvp_fn,
+    make_client_update_fn,
+    make_count_tree,
+    make_rebuild_fn,
     make_round_step,
     make_round_step_per_iteration,
 )

@@ -12,6 +12,26 @@ One call = one FL round:
 The same function lowers for the production mesh: the client axis (M) and
 per-client batch are sharded over ('pod','data'); base weights are
 tensor/2D-sharded over ('model' [, 'data']). See launch/.
+
+The round is decomposed into named pieces so the federation runtime
+(fl/runtime/) can execute the SAME math through explicit messages and a
+device-parallel cohort executor instead of one in-process vmap:
+
+  make_client_update_fn   per-epoch client: local forward-gradient SGD,
+                          returns the masked delta (the wire payload)
+  make_client_jvp_fn      per-iteration client: one estimate, returns the
+                          K jvp scalars (the wire payload)
+  make_rebuild_fn         per-iteration server side: regenerate the
+                          perturbations from the seed chain and rebuild the
+                          client's gradient from its jvp scalars
+  make_count_tree         per-unit client-count divisor tree (head counted
+                          by every participating client)
+  aggregate_payloads      weighted-union average of stacked client payloads
+
+``make_round_step`` / ``make_round_step_per_iteration`` compose exactly
+these pieces; the runtime's ideal path (full participation, no wire
+quantization, whole-cohort executor) is bit-identical by construction —
+asserted in tests/test_runtime.py.
 """
 from __future__ import annotations
 
@@ -45,6 +65,163 @@ def init_state(base, peft) -> SpryState:
     return SpryState(base, peft32, server_init(peft32), jnp.zeros([], jnp.int32))
 
 
+# ---------------------------------------------------------------------------
+# Client-side pieces
+# ---------------------------------------------------------------------------
+
+def make_client_update_fn(cfg, spry_cfg, task: str = "cls"):
+    """Per-epoch client computation (paper Alg. 1 lines 6-13).
+
+    Returns ``client_update(base, peft, round_key, seed_id, mask_row,
+    client_batch) -> (delta, loss_mean, jvps)``:
+    ``spry_cfg.local_iters`` steps of forward-gradient SGD on the units
+    selected by ``mask_row``, starting from the server ``peft``. ``seed_id``
+    is the client's position in the round (the fold_in chain the server
+    shares), ``delta`` the masked weight change — the per-epoch wire payload.
+    """
+    loss_fn_kind = get_loss_fn(task)
+    K = spry_cfg.k_perturbations
+    lr_l = spry_cfg.local_lr
+
+    def client_update(base, peft, round_key, seed_id, mask_row, client_batch):
+        index = enumerate_units(peft)
+        mask_tree = build_mask_tree(peft, index, mask_row)
+        ckey = jax.random.fold_in(round_key, seed_id)
+        mb = spry_cfg.microbatch_size
+
+        def grad_of(peft_c, ikey):
+            if mb is None or mb >= client_batch["tokens"].shape[0]:
+                def loss_of(p):
+                    return loss_fn_kind(cfg, base, p, client_batch,
+                                        lora_scale=spry_cfg.lora_alpha)
+                return forward_gradient(loss_of, peft_c, ikey,
+                                        k_perturbations=K,
+                                        mask_tree=mask_tree,
+                                        jvp_clip=spry_cfg.jvp_clip,
+                                        tangent_batch=spry_cfg.tangent_batch)
+            # gradient accumulation: scan over microbatches, fresh
+            # perturbation per microbatch (each estimate is unbiased for
+            # its microbatch gradient; the average is unbiased for the
+            # full-batch gradient), bounded activation memory
+            B = client_batch["tokens"].shape[0]
+            n_mb = B // mb
+            mb_batch = jax.tree.map(
+                lambda x: x[: n_mb * mb].reshape((n_mb, mb) + x.shape[1:]),
+                client_batch)
+
+            def mb_step(acc, xs):
+                i, one = xs
+                def loss_of(p):
+                    return loss_fn_kind(cfg, base, p, one,
+                                        lora_scale=spry_cfg.lora_alpha)
+                loss, g, jvps = forward_gradient(
+                    loss_of, peft_c, jax.random.fold_in(ikey, i),
+                    k_perturbations=K, mask_tree=mask_tree,
+                    jvp_clip=spry_cfg.jvp_clip,
+                    tangent_batch=spry_cfg.tangent_batch)
+                g_acc, loss_acc = acc
+                g_acc = jax.tree.map(lambda a, b: a + b / n_mb, g_acc, g)
+                return (g_acc, loss_acc + loss / n_mb), jvps
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                              peft_c)
+            (g, loss), jvps = jax.lax.scan(
+                mb_step, (g0, jnp.float32(0.0)),
+                (jnp.arange(n_mb), mb_batch))
+            return loss, g, jvps.reshape(-1)[:K]
+
+        def local_iter(carry, it):
+            peft_c = carry
+            ikey = jax.random.fold_in(ckey, it)
+            loss, g, jvps = grad_of(peft_c, ikey)
+            # local SGD on assigned units only (mask already zeroes g
+            # outside the assignment, incl. the always-on head)
+            peft_c = jax.tree.map(lambda p, gi: p - lr_l * gi, peft_c, g)
+            return peft_c, (loss, jvps)
+
+        peft_c, (losses, jvps) = jax.lax.scan(
+            local_iter, peft, jnp.arange(spry_cfg.local_iters))
+        delta = jax.tree.map(lambda a, b: a - b, peft_c, peft)
+        return delta, losses.mean(), jvps
+
+    return client_update
+
+
+def make_client_jvp_fn(cfg, spry_cfg, task: str = "cls"):
+    """Per-iteration client computation (paper §3.2): one forward-jvp at the
+    current server weights; the K jvp scalars are the entire uplink payload.
+
+    Returns ``client_jvp(base, peft, round_key, seed_id, mask_row,
+    client_batch) -> (loss, jvps)``.
+    """
+    loss_fn_kind = get_loss_fn(task)
+    K = spry_cfg.k_perturbations
+
+    def client_jvp(base, peft, round_key, seed_id, mask_row, client_batch):
+        index = enumerate_units(peft)
+        mask_tree = build_mask_tree(peft, index, mask_row)
+        ckey = jax.random.fold_in(round_key, seed_id)
+        ikey = jax.random.fold_in(ckey, 0)
+
+        def loss_of(p):
+            return loss_fn_kind(cfg, base, p, client_batch,
+                                lora_scale=spry_cfg.lora_alpha)
+
+        loss, _, jvps = forward_gradient(
+            loss_of, peft, ikey, k_perturbations=K, mask_tree=mask_tree,
+            jvp_clip=spry_cfg.jvp_clip,
+            tangent_batch=spry_cfg.tangent_batch)
+        return loss, jvps
+
+    return client_jvp
+
+
+def make_rebuild_fn():
+    """Server-side per-iteration gradient rebuild: regenerate v from the seed
+    chain and combine with the client's jvp scalars (bit-identical to the
+    client estimate, see forward_grad.reconstruct_gradient).
+
+    Returns ``rebuild(peft, round_key, seed_id, mask_row, jvps) -> grad``.
+    """
+    def rebuild(peft, round_key, seed_id, mask_row, jvps):
+        index = enumerate_units(peft)
+        mask_tree = build_mask_tree(peft, index, mask_row)
+        ckey = jax.random.fold_in(round_key, seed_id)
+        ikey = jax.random.fold_in(ckey, 0)
+        return reconstruct_gradient(peft, ikey, jvps, mask_tree)
+
+    return rebuild
+
+
+# ---------------------------------------------------------------------------
+# Aggregation pieces
+# ---------------------------------------------------------------------------
+
+def make_count_tree(peft, index, counts, head_count):
+    """Per-unit divisor tree: M-tilde per LoRA unit (``counts``, shape (U,)),
+    the participating-client count for the always-on head."""
+    count_tree = build_mask_tree(peft, index, counts)
+    return {
+        g: (jax.tree.map(lambda x: jnp.full_like(x, head_count), count_tree[g])
+            if g == "head" else count_tree[g])
+        for g in count_tree
+    }
+
+
+def aggregate_payloads(peft, index, stacked, counts, head_count):
+    """Weighted-union average of stacked per-client payload trees.
+
+    ``stacked`` leaves carry a leading client axis; clients that share a unit
+    are averaged FedAvg-style (sum over clients / per-unit count).
+    """
+    count_tree = make_count_tree(peft, index, counts, head_count)
+    return jax.tree.map(lambda leaf, c: leaf.sum(0) / c, stacked, count_tree)
+
+
+# ---------------------------------------------------------------------------
+# In-process round steps (one vmap over the M simulated clients)
+# ---------------------------------------------------------------------------
+
 def make_round_step(cfg, spry_cfg, task: str = "cls", split: bool = True):
     """Build the jittable round_step(state, batch) -> (state, metrics).
 
@@ -52,10 +229,8 @@ def make_round_step(cfg, spry_cfg, task: str = "cls", split: bool = True):
     split=False disables the paper's weight splitting (the FedFGD ablation:
     every client perturbs ALL trainable units).
     """
-    loss_fn_kind = get_loss_fn(task)
     M = spry_cfg.n_clients_per_round
-    K = spry_cfg.k_perturbations
-    lr_l = spry_cfg.local_lr
+    client_update = make_client_update_fn(cfg, spry_cfg, task)
 
     def round_step(state: SpryState, batch):
         base, peft = state.base, state.peft
@@ -69,83 +244,14 @@ def make_round_step(cfg, spry_cfg, task: str = "cls", split: bool = True):
         round_key = jax.random.fold_in(
             jax.random.PRNGKey(spry_cfg.seed), state.round_idx)
 
-        def client_update(client_id, mask_row, client_batch):
-            mask_tree = build_mask_tree(peft, index, mask_row)
-            ckey = jax.random.fold_in(round_key, client_id)
-            mb = spry_cfg.microbatch_size
-
-            def grad_of(peft_c, ikey):
-                if mb is None or mb >= client_batch["tokens"].shape[0]:
-                    def loss_of(p):
-                        return loss_fn_kind(cfg, base, p, client_batch,
-                                            lora_scale=spry_cfg.lora_alpha)
-                    return forward_gradient(loss_of, peft_c, ikey,
-                                            k_perturbations=K,
-                                            mask_tree=mask_tree,
-                                            jvp_clip=spry_cfg.jvp_clip,
-                                            tangent_batch=spry_cfg.tangent_batch)
-                # gradient accumulation: scan over microbatches, fresh
-                # perturbation per microbatch (each estimate is unbiased for
-                # its microbatch gradient; the average is unbiased for the
-                # full-batch gradient), bounded activation memory
-                B = client_batch["tokens"].shape[0]
-                n_mb = B // mb
-                mb_batch = jax.tree.map(
-                    lambda x: x[: n_mb * mb].reshape((n_mb, mb) + x.shape[1:]),
-                    client_batch)
-
-                def mb_step(acc, xs):
-                    i, one = xs
-                    def loss_of(p):
-                        return loss_fn_kind(cfg, base, p, one,
-                                            lora_scale=spry_cfg.lora_alpha)
-                    loss, g, jvps = forward_gradient(
-                        loss_of, peft_c, jax.random.fold_in(ikey, i),
-                        k_perturbations=K, mask_tree=mask_tree,
-                        jvp_clip=spry_cfg.jvp_clip,
-                        tangent_batch=spry_cfg.tangent_batch)
-                    g_acc, loss_acc = acc
-                    g_acc = jax.tree.map(lambda a, b: a + b / n_mb, g_acc, g)
-                    return (g_acc, loss_acc + loss / n_mb), jvps
-
-                g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
-                                  peft_c)
-                (g, loss), jvps = jax.lax.scan(
-                    mb_step, (g0, jnp.float32(0.0)),
-                    (jnp.arange(n_mb), mb_batch))
-                return loss, g, jvps.reshape(-1)[:K]
-
-            def local_iter(carry, it):
-                peft_c = carry
-                ikey = jax.random.fold_in(ckey, it)
-                loss, g, jvps = grad_of(peft_c, ikey)
-                # local SGD on assigned units only (mask already zeroes g
-                # outside the assignment, incl. the always-on head)
-                peft_c = jax.tree.map(lambda p, gi: p - lr_l * gi, peft_c, g)
-                return peft_c, (loss, jvps)
-
-            peft_c, (losses, jvps) = jax.lax.scan(
-                local_iter, peft, jnp.arange(spry_cfg.local_iters))
-            delta = jax.tree.map(lambda a, b: a - b, peft_c, peft)
-            return delta, losses.mean(), jvps
-
-        deltas, losses, jvps = jax.vmap(client_update)(
+        deltas, losses, jvps = jax.vmap(
+            lambda sid, row, cb: client_update(base, peft, round_key, sid,
+                                               row, cb))(
             jnp.arange(M), mask_matrix, batch)
 
         # --- weighted union over clients (paper: FedAvg-style average over
-        # the clients assigned to each unit) ---
-        def agg(leaf_deltas, mask_leaf_count):
-            # leaf_deltas: (M, ...); sum over clients / count per unit
-            return leaf_deltas.sum(0) / mask_leaf_count
-
-        count_tree = build_mask_tree(peft, index, counts)
-        # head is trained by all M clients
-        count_tree = {
-            g: (jax.tree.map(lambda x: jnp.full_like(x, M), count_tree[g])
-                if g == "head" else count_tree[g])
-            for g in count_tree
-        }
-        delta = jax.tree.map(agg, deltas, count_tree)
+        # the clients assigned to each unit; head trained by all M) ---
+        delta = aggregate_payloads(peft, index, deltas, counts, M)
 
         new_peft, server = server_update(
             spry_cfg.server_opt, peft, delta, state.server,
@@ -167,9 +273,9 @@ def make_round_step(cfg, spry_cfg, task: str = "cls", split: bool = True):
 # ---------------------------------------------------------------------------
 
 def make_round_step_per_iteration(cfg, spry_cfg, task: str = "cls"):
-    loss_fn_kind = get_loss_fn(task)
     M = spry_cfg.n_clients_per_round
-    K = spry_cfg.k_perturbations
+    client_jvp = make_client_jvp_fn(cfg, spry_cfg, task)
+    rebuild = make_rebuild_fn()
 
     def round_step(state: SpryState, batch):
         base, peft = state.base, state.peft
@@ -180,41 +286,18 @@ def make_round_step_per_iteration(cfg, spry_cfg, task: str = "cls"):
             jax.random.PRNGKey(spry_cfg.seed), state.round_idx)
 
         # --- client side: one forward-jvp, transmit K scalars ---
-        def client_jvp(client_id, mask_row, client_batch):
-            mask_tree = build_mask_tree(peft, index, mask_row)
-            ckey = jax.random.fold_in(round_key, client_id)
-            ikey = jax.random.fold_in(ckey, 0)
-
-            def loss_of(p):
-                return loss_fn_kind(cfg, base, p, client_batch,
-                                    lora_scale=spry_cfg.lora_alpha)
-
-            loss, _, jvps = forward_gradient(
-                loss_of, peft, ikey, k_perturbations=K, mask_tree=mask_tree,
-                jvp_clip=spry_cfg.jvp_clip,
-                tangent_batch=spry_cfg.tangent_batch)
-            return loss, jvps
-
-        losses, jvps = jax.vmap(client_jvp)(
+        losses, jvps = jax.vmap(
+            lambda sid, row, cb: client_jvp(base, peft, round_key, sid, row,
+                                            cb))(
             jnp.arange(M), mask_matrix, batch)        # (M,), (M,K)
 
         # --- server side: regenerate v from the seed, rebuild gradients
         # (stacked-perturbation path, bit-identical to the client estimator
         # and O(1) trace size in K) ---
-        def rebuild(client_id, mask_row, jvps_m):
-            mask_tree = build_mask_tree(peft, index, mask_row)
-            ckey = jax.random.fold_in(round_key, client_id)
-            ikey = jax.random.fold_in(ckey, 0)
-            return reconstruct_gradient(peft, ikey, jvps_m, mask_tree)
-
-        grads = jax.vmap(rebuild)(jnp.arange(M), mask_matrix, jvps)
-        count_tree = build_mask_tree(peft, index, counts)
-        count_tree = {
-            g: (jax.tree.map(lambda x: jnp.full_like(x, M), count_tree[g])
-                if g == "head" else count_tree[g])
-            for g in count_tree
-        }
-        grad = jax.tree.map(lambda gm, c: gm.sum(0) / c, grads, count_tree)
+        grads = jax.vmap(
+            lambda sid, row, jv: rebuild(peft, round_key, sid, row, jv))(
+            jnp.arange(M), mask_matrix, jvps)
+        grad = aggregate_payloads(peft, index, grads, counts, M)
         # server applies the *gradient direction* with its adaptive optimizer
         delta = jax.tree.map(lambda g: -spry_cfg.local_lr * g, grad)
         new_peft, server = server_update(

@@ -1,0 +1,26 @@
+"""Scale-out federation runtime (wire protocol, population, executors,
+round engine). Import explicitly — ``from repro.fl.runtime import ...`` —
+rather than via ``repro.fl`` (which core.spry imports; keeping the runtime
+out of that __init__ avoids an import cycle)."""
+from repro.fl.runtime.engine import (
+    FederationEngine,
+    RoundReport,
+    WireConfig,
+)
+from repro.fl.runtime.executor import (
+    SerialExecutor,
+    ShardedExecutor,
+    pad_cohort,
+)
+from repro.fl.runtime.messages import (
+    ClientUpdate,
+    TaskAssignment,
+    WIRE_DTYPES,
+    wire_dtype,
+)
+from repro.fl.runtime.population import (
+    ClientPopulation,
+    CohortPlan,
+    CohortScheduler,
+    DeviceTier,
+)

@@ -1,0 +1,367 @@
+"""Federation round engine: scheduler -> executor -> aggregator -> server.
+
+One ``FederationEngine`` drives SPRY rounds through the runtime pieces for
+both communication modes:
+
+  per_epoch      clients run local forward-gradient SGD and ship masked
+                 deltas; the server re-averages each unit over the clients
+                 whose update actually ARRIVED (dropout-corrected counts —
+                 the fixed-M ``client_counts`` of the in-process step cannot
+                 express a straggler whose payload never lands).
+  per_iteration  clients ship K jvp scalars + seed ref; the server
+                 regenerates the perturbations and rebuilds/aggregates the
+                 gradients (paper §3.2 / Table 2).
+
+Bit-identity contract (tests/test_runtime.py): with full participation, an
+ideal network (no wire quantization / wire simulation off or fp32) and the
+whole-cohort SerialExecutor, ``run_round`` is bit-identical to
+``core.spry.make_round_step`` / ``make_round_step_per_iteration`` — the
+engine composes exactly the pieces those round steps are built from
+(make_client_update_fn / make_client_jvp_fn / make_rebuild_fn /
+aggregate_payloads) in the same op order inside one jit.
+
+Wire simulation (``WireConfig(simulate=True)``) routes every surviving
+client's payload through a real serialized ``ClientUpdate`` frame
+(measured bytes, configurable fp32/bf16/fp16 scalar quantization) before
+aggregation; fp32 framing is bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assignment import assignment_matrix, enumerate_units
+from repro.core.spry import (
+    SpryState,
+    aggregate_payloads,
+    make_client_jvp_fn,
+    make_client_update_fn,
+    make_count_tree,
+    make_rebuild_fn,
+)
+from repro.fl.runtime.executor import (
+    SerialExecutor,
+    _weighted,
+    pad_cohort,
+)
+from repro.fl.runtime.messages import ClientUpdate, wire_dtype
+from repro.fl.runtime.population import CohortPlan
+from repro.fl.server import server_update
+from repro.utils.pytree import tree_size
+
+
+@dataclasses.dataclass(frozen=True)
+class WireConfig:
+    """Uplink wire behaviour. ``simulate=True`` packs/unpacks real frames
+    (collect mode — test/accounting scale); False streams in-process and
+    only *accounts* bytes from zero-filled template frames."""
+    dtype: str = "fp32"
+    simulate: bool = False
+    include_head: bool = True
+
+
+@dataclasses.dataclass
+class RoundReport:
+    round_idx: int
+    cohort_size: int                 # scheduled (over-selected) cohort
+    n_requested: int
+    n_survivors: int
+    dropped_client_ids: List[int]
+    deadline: float
+    bytes_down: int                  # Σ TaskAssignment frames
+    bytes_up: int                    # Σ surviving ClientUpdate frames
+    wire: str
+    executor: str
+    n_devices: int
+    agg_bytes_streaming: int         # accumulator bytes (O(peft) / device)
+    agg_bytes_stacked: int           # (C, peft) materialization equivalent
+
+
+def _ideal_plan(round_idx: int, M: int, n_units: int) -> CohortPlan:
+    """Full participation, no over-selection, everyone on time."""
+    mask = np.asarray(assignment_matrix(n_units, M, round_idx % M),
+                      np.float32)
+    return CohortPlan(
+        round_idx=round_idx, client_ids=np.arange(M, dtype=np.int64),
+        seed_ids=np.arange(M, dtype=np.int32), mask_matrix=mask,
+        latencies=np.zeros(M), deadline=float("inf"),
+        keep=np.ones(M, bool), assignments=[], n_requested=M)
+
+
+class FederationEngine:
+    def __init__(self, cfg, spry_cfg, task: str = "cls",
+                 comm_mode: Optional[str] = None, executor=None,
+                 wire: Optional[WireConfig] = None):
+        self.cfg = cfg
+        self.spry_cfg = spry_cfg
+        self.task = task
+        self.comm_mode = comm_mode or spry_cfg.comm_mode
+        if self.comm_mode not in ("per_epoch", "per_iteration"):
+            raise ValueError(self.comm_mode)
+        self.executor = executor if executor is not None else SerialExecutor()
+        self.wire = wire or WireConfig()
+        # whole-cohort serial execution can materialize the client stack and
+        # reuse the reference aggregation verbatim (bit-identity); any
+        # microbatched/sharded executor streams instead
+        self.collect = (isinstance(self.executor, SerialExecutor)
+                        and self.executor.microbatch is None)
+        if self.comm_mode == "per_epoch":
+            self._client_fn = make_client_update_fn(cfg, spry_cfg, task)
+        else:
+            self._client_fn = make_client_jvp_fn(cfg, spry_cfg, task)
+            self._rebuild_fn = make_rebuild_fn()
+        self._round_jit = jax.jit(self._round_fn)
+        self._clients_jit = jax.jit(self._clients_fn)
+        self._aggregate_jit = jax.jit(self._aggregate_fn)
+
+    # ------------------------------------------------------------------
+    # jitted bodies
+    # ------------------------------------------------------------------
+
+    def _kernels(self):
+        if self.comm_mode == "per_epoch":
+            def kernel(base, peft, rk, sid, row, cb):
+                delta, loss, jvps = self._client_fn(base, peft, rk, sid, row,
+                                                    cb)
+                return delta, (loss, jvps)
+            return kernel, None
+
+        def kernel(base, peft, rk, sid, row, cb):
+            loss, jvps = self._client_fn(base, peft, rk, sid, row, cb)
+            return (), (loss, jvps)
+
+        def rebuild_kernel(base, peft, rk, sid, row, jvps):
+            return self._rebuild_fn(peft, rk, sid, row, jvps), ()
+        return kernel, rebuild_kernel
+
+    def _round_key(self, state):
+        return jax.random.fold_in(
+            jax.random.PRNGKey(self.spry_cfg.seed), state.round_idx)
+
+    def _finish(self, state, peft, index, payload_sum_or_stack, counts,
+                head_count, losses, jvps, keep, stacked: bool):
+        """Shared tail: unit-averaged payload -> server update + metrics."""
+        if stacked:
+            agg = aggregate_payloads(peft, index, payload_sum_or_stack,
+                                     counts, head_count)
+        else:
+            count_tree = make_count_tree(peft, index, counts, head_count)
+            agg = jax.tree.map(lambda s, c: s / c, payload_sum_or_stack,
+                               count_tree)
+        if self.comm_mode == "per_iteration":
+            delta = jax.tree.map(lambda g: -self.spry_cfg.local_lr * g, agg)
+        else:
+            delta = agg
+        new_peft, server = server_update(
+            self.spry_cfg.server_opt, peft, delta, state.server,
+            lr=self.spry_cfg.server_lr)
+        jvps_flat = jvps.reshape(jvps.shape[0], -1)   # (C, local_iters*K)
+        n_kept = keep.sum()
+        metrics = {
+            "loss": (losses * keep).sum() / n_kept,
+            "jvp_abs_mean": (jnp.abs(jvps_flat) * keep[:, None]).sum()
+            / (n_kept * jvps_flat.shape[-1]),
+        }
+        if self.comm_mode == "per_epoch":
+            metrics["delta_norm"] = jnp.sqrt(
+                sum(jnp.sum(d * d) for d in jax.tree.leaves(delta)))
+        new_state = SpryState(state.base, new_peft, server,
+                              state.round_idx + 1)
+        return new_state, metrics
+
+    def _round_fn(self, state, seed_ids, mask_matrix, keep, batch):
+        """Whole round in one jit (wire simulation off)."""
+        base, peft = state.base, state.peft
+        index = enumerate_units(peft)
+        rk = self._round_key(state)
+        kernel, rebuild_kernel = self._kernels()
+        counts = jnp.maximum((mask_matrix * keep[:, None]).sum(0), 1.0)
+        head_count = keep.sum()
+
+        payload, (losses, jvps) = self.executor.run(
+            kernel, base, peft, rk, seed_ids, mask_matrix, batch, keep,
+            collect=self.collect)
+        if self.comm_mode == "per_iteration":
+            payload, _ = self.executor.run(
+                rebuild_kernel, base, peft, rk, seed_ids, mask_matrix, jvps,
+                keep, collect=self.collect)
+        if self.collect:
+            payload = _weighted(payload, keep)
+        return self._finish(state, peft, index, payload, counts, head_count,
+                            losses, jvps, keep, stacked=self.collect)
+
+    def _clients_fn(self, state, seed_ids, mask_matrix, keep, batch):
+        """Wire-sim phase 1: per-client payload stack + telemetry."""
+        base, peft = state.base, state.peft
+        rk = self._round_key(state)
+        kernel, _ = self._kernels()
+        payload, (losses, jvps) = self.executor.run(
+            kernel, base, peft, rk, seed_ids, mask_matrix, batch, keep,
+            collect=True)
+        return payload, losses, jvps
+
+    def _aggregate_fn(self, state, stacked, seed_ids, mask_matrix, keep,
+                      losses, jvps):
+        """Wire-sim phase 2: aggregate the unpacked payload stack."""
+        peft = state.peft
+        index = enumerate_units(peft)
+        counts = jnp.maximum((mask_matrix * keep[:, None]).sum(0), 1.0)
+        if self.comm_mode == "per_iteration":
+            rk = self._round_key(state)
+            _, rebuild_kernel = self._kernels()
+            stacked, _ = self.executor.run(
+                rebuild_kernel, state.base, peft, rk, seed_ids, mask_matrix,
+                stacked, keep, collect=True)
+        return self._finish(state, peft, index, _weighted(stacked, keep),
+                            counts, keep.sum(), losses, jvps, keep,
+                            stacked=True)
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def run_ideal(self, state, batch) -> Tuple[Any, Dict[str, Any]]:
+        """Full-participation round on a stacked (M, B, ...) batch —
+        semantically the in-process ``make_round_step`` executed through the
+        runtime (bit-identical with the default whole-cohort executor)."""
+        M = jax.tree.leaves(batch)[0].shape[0]
+        index = enumerate_units(state.peft)
+        plan = _ideal_plan(int(state.round_idx), M, index.n_units)
+        state, metrics, _ = self.run_round(state, plan, batch)
+        return state, metrics
+
+    def run_round(self, state, plan: CohortPlan, batch):
+        """Execute one scheduled round. ``batch`` leaves lead with the plan's
+        cohort axis. Returns (state, metrics, RoundReport)."""
+        index = enumerate_units(state.peft)
+        keep = np.asarray(plan.keep, np.float32)
+        seed_ids, mask_rows, batch_p, keep_p, C = pad_cohort(
+            self.executor, np.asarray(plan.seed_ids, np.int32),
+            plan.mask_matrix, batch, keep)
+
+        if self.wire.simulate:
+            new_state, metrics, bytes_up = self._run_simulated(
+                state, seed_ids, mask_rows, keep_p, batch_p, plan, C)
+        else:
+            new_state, metrics = self._round_jit(
+                state, seed_ids, mask_rows, keep_p, batch_p)
+            bytes_up = self._estimate_uplink(state.peft, index, plan)
+
+        peft_bytes = tree_size(state.peft) * 4
+        m = self.executor.microbatch or (len(seed_ids)
+                                         // self.executor.n_devices)
+        report = RoundReport(
+            round_idx=int(plan.round_idx),
+            cohort_size=plan.cohort_size,
+            n_requested=plan.n_requested,
+            n_survivors=plan.n_survivors,
+            dropped_client_ids=[int(c) for c, k in
+                                zip(plan.client_ids, plan.keep) if not k],
+            deadline=float(plan.deadline),
+            bytes_down=plan.downlink_bytes(),
+            bytes_up=int(bytes_up),
+            wire=self.wire.dtype,
+            executor=type(self.executor).__name__,
+            n_devices=self.executor.n_devices,
+            agg_bytes_streaming=(m + 1) * peft_bytes,
+            agg_bytes_stacked=len(seed_ids) * peft_bytes,
+        )
+        return new_state, metrics, report
+
+    # -- wire simulation ------------------------------------------------
+
+    def _run_simulated(self, state, seed_ids, mask_rows, keep, batch, plan,
+                       C):
+        payload, losses, jvps = self._clients_jit(
+            state, seed_ids, mask_rows, keep, batch)
+        updates = self.pack_updates(state.peft, payload, jvps, losses, plan)
+        bytes_up = sum(u.byte_size() for u in updates)
+        # the server only sees what arrived: unpack frames back into the
+        # cohort stack (zeros for dropped clients). Frames carry the fold-in
+        # seed_id; cohort POSITION comes from keep order (pack_updates emits
+        # survivors in plan order).
+        survivor_pos = np.flatnonzero(plan.keep)
+        index = enumerate_units(state.peft)
+        if self.comm_mode == "per_epoch":
+            template = jax.tree.map(np.zeros_like, jax.tree.map(
+                lambda x: np.asarray(x[0]), payload))
+            rows = {int(pos): u.to_delta(template, index)
+                    for pos, u in zip(survivor_pos, updates)}
+            stacked = jax.tree.map(
+                lambda *xs: jnp.asarray(np.stack(xs)),
+                *[rows.get(i, template) for i in range(len(seed_ids))])
+        else:
+            K = jvps.shape[-1]
+            arr = np.zeros((len(seed_ids), K), np.float32)
+            for pos, u in zip(survivor_pos, updates):
+                arr[int(pos)] = np.asarray(u.jvps, np.float32)
+            stacked = jnp.asarray(arr)
+        new_state, metrics = self._aggregate_jit(
+            state, stacked, seed_ids, mask_rows, keep, losses, jvps)
+        return new_state, metrics, bytes_up
+
+    def pack_updates(self, peft, payload, jvps, losses,
+                     plan: CohortPlan) -> List[ClientUpdate]:
+        """Serialize every SURVIVING client's uplink frame."""
+        index = enumerate_units(peft)
+        out = []
+        for i, (cid, k) in enumerate(zip(plan.client_ids, plan.keep)):
+            if not k:
+                continue
+            sid = int(plan.seed_ids[i])   # the fold-in seed ref ON THE WIRE
+            if self.comm_mode == "per_epoch":
+                delta_i = jax.tree.map(lambda x: np.asarray(x[i]), payload)
+                unit_ids = np.flatnonzero(plan.mask_matrix[i] > 0)
+                out.append(ClientUpdate.from_delta(
+                    delta_i, index, unit_ids, round_idx=plan.round_idx,
+                    client_id=int(cid), seed_id=sid, wire=self.wire.dtype,
+                    loss=float(losses[i]),
+                    include_head=self.wire.include_head))
+            else:
+                out.append(ClientUpdate.from_jvps(
+                    np.asarray(jvps[i]), round_idx=plan.round_idx,
+                    client_id=int(cid), seed_id=sid, wire=self.wire.dtype,
+                    loss=float(losses[i])))
+        return out
+
+    def _estimate_uplink(self, peft, index, plan: CohortPlan) -> int:
+        """Measured frame size of zero-filled template updates. Frame size
+        depends only on the unit-id set and the header-int digit widths, so
+        sizes are memoized — no per-round O(|peft|) serialization."""
+        if not hasattr(self, "_uplink_cache"):
+            self._uplink_cache = {}
+            self._zeros_peft = jax.tree.map(
+                lambda x: np.zeros(x.shape, np.float32), peft)
+        total = 0
+        K = self.spry_cfg.k_perturbations
+        for i, (cid, k) in enumerate(zip(plan.client_ids, plan.keep)):
+            if not k:
+                continue
+            sid = int(plan.seed_ids[i])
+            if self.comm_mode == "per_epoch":
+                unit_ids = np.flatnonzero(plan.mask_matrix[i] > 0)
+                ckey = (tuple(unit_ids.tolist()),)
+            else:
+                unit_ids = None
+                ckey = (K,)
+            ckey += (len(str(int(plan.round_idx))), len(str(int(cid))),
+                     len(str(sid)))
+            if ckey not in self._uplink_cache:
+                if self.comm_mode == "per_epoch":
+                    u = ClientUpdate.from_delta(
+                        self._zeros_peft, index, unit_ids,
+                        round_idx=plan.round_idx, client_id=int(cid),
+                        seed_id=sid, wire=self.wire.dtype,
+                        include_head=self.wire.include_head)
+                else:
+                    u = ClientUpdate.from_jvps(
+                        np.zeros((K,), np.float32),
+                        round_idx=plan.round_idx, client_id=int(cid),
+                        seed_id=sid, wire=self.wire.dtype)
+                self._uplink_cache[ckey] = u.byte_size()
+            total += self._uplink_cache[ckey]
+        return total

@@ -1,0 +1,326 @@
+"""Federation wire protocol: the two messages of one SPRY round.
+
+    server -> client   TaskAssignment   round seed ref + unit-mask id +
+                                        hyperparams (the weights themselves
+                                        travel via the model-distribution
+                                        channel, not per-round)
+    client -> server   ClientUpdate     per-epoch:     masked delta payload
+                                        per-iteration: K jvp scalars + seed
+                                                       ref (the paper's
+                                                       Table-2 trick: the
+                                                       server regenerates
+                                                       the perturbations
+                                                       from the shared seed)
+
+Both messages serialize to a self-describing binary frame:
+
+    MAGIC(4) | header_len uint32 LE | header json (utf-8) | raw buffers
+
+and ``byte_size()`` is MEASURED from the actual serialized frame — the
+reconciliation against the analytic ``fl/comm.py`` Table-2 parameter counts
+is asserted in tests/test_messages.py. Scalar payloads are quantized on the
+wire with a configurable dtype (fp32 lossless / bf16 / fp16); fp32 framing
+round-trips bit-exactly, which is what keeps the runtime's ideal-network
+round bit-identical to the in-process round step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+try:  # bf16 comes with jax's ml_dtypes dependency; fall back gracefully
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except Exception:  # pragma: no cover - ml_dtypes ships with jax
+    _BF16 = None
+
+MAGIC_ASSIGN = b"SPA1"
+MAGIC_UPDATE = b"SPU1"
+
+WIRE_DTYPES: Dict[str, np.dtype] = {
+    "fp32": np.dtype(np.float32),
+    "fp16": np.dtype(np.float16),
+}
+if _BF16 is not None:
+    WIRE_DTYPES["bf16"] = _BF16
+
+
+def wire_dtype(name: str) -> np.dtype:
+    try:
+        return WIRE_DTYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire dtype {name!r}; available: {sorted(WIRE_DTYPES)}")
+
+
+def _encode_buffers(buffers):
+    """buffers: list of np arrays -> (meta list, concatenated bytes)."""
+    meta, blobs = [], []
+    for b in buffers:
+        b = np.ascontiguousarray(b)
+        meta.append({"shape": list(b.shape), "dtype": b.dtype.name})
+        blobs.append(b.tobytes())
+    return meta, b"".join(blobs)
+
+
+def _decode_buffers(meta, raw: bytes):
+    out, off = [], 0
+    for m in meta:
+        dt = _BF16 if (m["dtype"] == "bfloat16" and _BF16 is not None) \
+            else np.dtype(m["dtype"])
+        n = int(np.prod(m["shape"], dtype=np.int64)) * dt.itemsize
+        out.append(np.frombuffer(raw[off:off + n], dtype=dt)
+                   .reshape(m["shape"]))
+        off += n
+    if off != len(raw):
+        raise ValueError(f"trailing bytes in frame: {len(raw) - off}")
+    return out
+
+
+def _frame(magic: bytes, header: dict, raw: bytes) -> bytes:
+    hj = json.dumps(header, separators=(",", ":")).encode()
+    return magic + np.uint32(len(hj)).tobytes() + hj + raw
+
+
+def _unframe(magic: bytes, data: bytes) -> Tuple[dict, bytes]:
+    if data[:4] != magic:
+        raise ValueError(f"bad magic {data[:4]!r} (want {magic!r})")
+    hlen = int(np.frombuffer(data[4:8], np.uint32)[0])
+    header = json.loads(data[8:8 + hlen].decode())
+    return header, data[8 + hlen:]
+
+
+# ---------------------------------------------------------------------------
+# TaskAssignment (server -> client)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TaskAssignment:
+    """One client's marching orders for one round.
+
+    ``seed_id`` is the client's position in the round's fold_in chain (what
+    the reference round step calls ``client_id = arange(M)``); ``client_id``
+    is the logical population id (data shard / availability identity).
+    ``unit_ids`` are indices into the round's UnitIndex — the unit-mask id.
+    """
+    round_idx: int
+    client_id: int
+    seed_id: int
+    cohort_size: int
+    seed: int                    # global algorithm seed; the chain is
+                                 # fold_in(fold_in(PRNGKey(seed), round), seed_id)
+    n_units: int                 # U — so the mask row can be rebuilt
+    unit_ids: np.ndarray         # (n_assigned,) int32
+    hparams: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def mask_row(self) -> np.ndarray:
+        row = np.zeros((self.n_units,), np.float32)
+        row[np.asarray(self.unit_ids, np.int64)] = 1.0
+        return row
+
+    def to_bytes(self) -> bytes:
+        meta, raw = _encode_buffers(
+            [np.asarray(self.unit_ids, np.int32)])
+        header = {
+            "round_idx": int(self.round_idx),
+            "client_id": int(self.client_id),
+            "seed_id": int(self.seed_id),
+            "cohort_size": int(self.cohort_size),
+            "seed": int(self.seed),
+            "n_units": int(self.n_units),
+            "hparams": self.hparams,
+            "buffers": meta,
+        }
+        return _frame(MAGIC_ASSIGN, header, raw)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "TaskAssignment":
+        header, raw = _unframe(MAGIC_ASSIGN, data)
+        (unit_ids,) = _decode_buffers(header.pop("buffers"), raw)
+        return cls(unit_ids=unit_ids.astype(np.int32), **header)
+
+    def byte_size(self) -> int:
+        return len(self.to_bytes())
+
+
+# ---------------------------------------------------------------------------
+# ClientUpdate (client -> server)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClientUpdate:
+    """One client's uplink for one round.
+
+    mode='delta' (per-epoch): ``unit_payload`` maps unit id -> flat list of
+    that unit's delta leaves (e.g. the LoRA (A,B) slices at one depth);
+    ``head_payload`` carries the always-trained personalisation head.
+    mode='jvp' (per-iteration): ``jvps`` carries the K scalars; the seed ref
+    (round_idx, seed_id) is all the server needs to rebuild the gradient.
+    """
+    round_idx: int
+    client_id: int
+    seed_id: int
+    mode: str                                      # 'delta' | 'jvp'
+    wire: str = "fp32"
+    unit_payload: Optional[Dict[int, list]] = None  # unit id -> [np arrays]
+    head_payload: Optional[list] = None             # [np arrays] or None
+    jvps: Optional[np.ndarray] = None               # (K,) in wire dtype
+    loss: float = float("nan")                      # telemetry, not payload
+
+    # -- construction from in-process trees ---------------------------------
+
+    @classmethod
+    def from_delta(cls, delta_tree, index, unit_ids, *, round_idx, client_id,
+                   seed_id, wire="fp32", loss=float("nan"),
+                   include_head=True) -> "ClientUpdate":
+        """Extract the masked slices of a peft-shaped delta tree.
+
+        Only the leaves of the client's assigned ``unit_ids`` (plus the head)
+        are packed — the rest of the tree is exactly zero by construction
+        (the estimator masks the gradient), so the wire payload is lossless
+        at fp32.
+        """
+        import jax
+
+        dt = wire_dtype(wire)
+        unit_payload: Dict[int, list] = {}
+        for uid in np.asarray(unit_ids, np.int64).tolist():
+            group, target, layer = index.units[uid]
+            leaves = jax.tree.leaves(delta_tree[group][target])
+            sel = [np.asarray(l[layer] if layer >= 0 else l).astype(dt)
+                   for l in leaves]
+            unit_payload[int(uid)] = sel
+        head_payload = None
+        if include_head and "head" in delta_tree:
+            head_payload = [np.asarray(l).astype(dt)
+                            for l in jax.tree.leaves(delta_tree["head"])]
+        return cls(round_idx=round_idx, client_id=client_id, seed_id=seed_id,
+                   mode="delta", wire=wire, unit_payload=unit_payload,
+                   head_payload=head_payload, loss=loss)
+
+    @classmethod
+    def from_jvps(cls, jvps, *, round_idx, client_id, seed_id, wire="fp32",
+                  loss=float("nan")) -> "ClientUpdate":
+        dt = wire_dtype(wire)
+        return cls(round_idx=round_idx, client_id=client_id, seed_id=seed_id,
+                   mode="jvp", wire=wire,
+                   jvps=np.asarray(jvps).astype(dt), loss=loss)
+
+    def to_delta(self, peft_template, index):
+        """Expand the payload back into a peft-shaped tree (zeros outside the
+        assigned units). fp32 wire round-trips bit-exactly."""
+        import jax
+
+        leaves, treedef = jax.tree.flatten(peft_template)
+        out = [np.zeros(l.shape, np.float32) for l in leaves]
+        # enumerate flat positions through the same tree structure so subtree
+        # leaves can be mapped to indices without relying on leaf identity
+        pos_tree = jax.tree.unflatten(treedef, list(range(len(leaves))))
+
+        def leaf_indices(subtree_pos):
+            return jax.tree.leaves(subtree_pos)
+
+        for uid, bufs in (self.unit_payload or {}).items():
+            group, target, layer = index.units[int(uid)]
+            for li, buf in zip(leaf_indices(pos_tree[group][target]), bufs):
+                if layer >= 0:
+                    out[li][layer] = np.asarray(buf, np.float32)
+                else:
+                    out[li][...] = np.asarray(buf, np.float32)
+        if self.head_payload is not None and "head" in peft_template:
+            for li, buf in zip(leaf_indices(pos_tree["head"]),
+                               self.head_payload):
+                out[li][...] = np.asarray(buf, np.float32)
+        return jax.tree.unflatten(treedef, out)
+
+    # -- serialization ------------------------------------------------------
+
+    def _payload_buffers(self):
+        bufs, layout = [], []
+        if self.mode == "delta":
+            for uid in sorted(self.unit_payload or {}):
+                arrs = self.unit_payload[uid]
+                layout.append({"unit": int(uid), "n": len(arrs)})
+                bufs.extend(arrs)
+            if self.head_payload is not None:
+                layout.append({"unit": -1, "n": len(self.head_payload)})
+                bufs.extend(self.head_payload)
+        else:
+            layout.append({"unit": -2, "n": 1})
+            bufs.append(np.asarray(self.jvps))
+        return bufs, layout
+
+    def to_bytes(self) -> bytes:
+        bufs, layout = self._payload_buffers()
+        meta, raw = _encode_buffers(bufs)
+        header = {
+            "round_idx": int(self.round_idx),
+            "client_id": int(self.client_id),
+            "seed_id": int(self.seed_id),
+            "mode": self.mode,
+            "wire": self.wire,
+            "layout": layout,
+            "buffers": meta,
+        }
+        # loss telemetry rides as a FIXED 4-byte trailer (a json float field
+        # would make the frame size value-dependent, breaking the shape-only
+        # byte accounting the engine's streamed estimate relies on)
+        trailer = np.float32(self.loss).tobytes()
+        return _frame(MAGIC_UPDATE, header, raw) + trailer
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "ClientUpdate":
+        header, raw = _unframe(MAGIC_UPDATE, data[:-4])
+        loss = float(np.frombuffer(data[-4:], np.float32)[0])
+        bufs = _decode_buffers(header["buffers"], raw)
+        out = cls(round_idx=header["round_idx"], client_id=header["client_id"],
+                  seed_id=header["seed_id"], mode=header["mode"],
+                  wire=header["wire"], loss=loss)
+        off = 0
+        if out.mode == "delta":
+            out.unit_payload = {}
+            for entry in header["layout"]:
+                chunk = bufs[off:off + entry["n"]]
+                off += entry["n"]
+                if entry["unit"] == -1:
+                    out.head_payload = chunk
+                else:
+                    out.unit_payload[int(entry["unit"])] = chunk
+        else:
+            out.jvps = bufs[0]
+        return out
+
+    # -- accounting ---------------------------------------------------------
+
+    def byte_size(self) -> int:
+        """Total measured frame size (header + payload)."""
+        return len(self.to_bytes())
+
+    def payload_byte_size(self, include_head: bool = True) -> int:
+        """Raw payload bytes only (no framing/header overhead) — the number
+        the Table-2 analytic parameter counts predict."""
+        bufs, layout = self._payload_buffers()
+        total = 0
+        off = 0
+        for entry in layout:
+            chunk = bufs[off:off + entry["n"]]
+            off += entry["n"]
+            if entry["unit"] == -1 and not include_head:
+                continue
+            total += sum(np.asarray(b).nbytes for b in chunk)
+        return total
+
+    def n_payload_scalars(self, include_head: bool = True) -> int:
+        bufs, layout = self._payload_buffers()
+        total = 0
+        off = 0
+        for entry in layout:
+            chunk = bufs[off:off + entry["n"]]
+            off += entry["n"]
+            if entry["unit"] == -1 and not include_head:
+                continue
+            total += sum(int(np.asarray(b).size) for b in chunk)
+        return total

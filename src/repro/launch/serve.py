@@ -19,21 +19,70 @@ from repro.models import get_model
 from repro.peft import init_peft
 
 
-def greedy_generate(cfg, base, peft, prompt_tokens, n_steps, cache_len=None):
-    """prompt_tokens: (B, P) int32. Returns (B, n_steps) generated ids."""
+def tokenwise_prefill(cfg, model, base, peft, cache, prompt_tokens,
+                      decode=None):
+    """Reference prompt ingestion: P decode_step calls (exercises the cache
+    exactly as production decode does). Kept as the fallback for families
+    without a fused prefill and as the equivalence oracle in tests.
+    ``decode`` reuses an already-jitted decode_step (avoids a second
+    compilation of the identical function)."""
+    if decode is None:
+        decode = jax.jit(
+            lambda base, peft, cache, tok, pos: model.decode_step(
+                cfg, base, peft, cache, tok, pos))
+    P = prompt_tokens.shape[1]
+    for p in range(P):
+        logits, cache = decode(base, peft, cache, prompt_tokens[:, p:p + 1],
+                               jnp.int32(p))
+    return logits, cache
+
+
+def greedy_generate(cfg, base, peft, prompt_tokens, n_steps, cache_len=None,
+                    fused_prefill=True, kv_int8=False):
+    """prompt_tokens: (B, P) int32. Returns (B, n_steps) generated ids.
+
+    ``fused_prefill=True`` ingests the prompt with ONE chunked-attention /
+    recurrence pass (model.prefill) instead of P decode_step calls — decode
+    output is identical (asserted in tests/test_serve_prefill.py); families
+    without a fused path (hybrid/encdec) fall back to the token loop.
+    """
     model = get_model(cfg)
     B, P = prompt_tokens.shape
-    cache = model.init_cache(cfg, B, cache_len or (P + n_steps))
+    try:
+        cache = model.init_cache(cfg, B, cache_len or (P + n_steps),
+                                 kv_int8=kv_int8)
+    except TypeError:   # families without a quantized-cache knob
+        cache = model.init_cache(cfg, B, cache_len or (P + n_steps))
 
     decode = jax.jit(
         lambda base, peft, cache, tok, pos: model.decode_step(
             cfg, base, peft, cache, tok, pos))
 
-    # prefill token-by-token through the decode path (exercises the cache
-    # exactly as production decode does; a fused prefill is an optimization)
-    for p in range(P):
-        logits, cache = decode(base, peft, cache, prompt_tokens[:, p:p + 1],
-                               jnp.int32(p))
+    use_fused = fused_prefill and model.prefill is not None
+    if use_fused and isinstance(cache, dict) and "k" in cache:
+        # int8-KV caches: the decode loop attends to QUANTIZED history
+        # during ingestion while a fused pass would attend to exact K/V —
+        # not equivalent; take the token loop
+        if "k_scale" in cache:
+            use_fused = False
+        # a ring cache SHORTER than the prompt makes the decode loop lossy
+        # (early keys are overwritten before later prompt tokens attend);
+        # fused attention over the full prompt cannot reproduce that unless
+        # every layer is sliding-window AND the ring still covers the window
+        Sc = cache["k"].shape[2]
+        if Sc < P:
+            all_swa = not any(cfg.is_global_layer(i)
+                              for i in range(cfg.n_layers))
+            if not (all_swa and Sc >= cfg.window):
+                use_fused = False
+    if use_fused:
+        run_prefill = jax.jit(
+            lambda base, peft, cache, toks: model.prefill(
+                cfg, base, peft, cache, toks))
+        logits, cache = run_prefill(base, peft, cache, prompt_tokens)
+    else:
+        logits, cache = tokenwise_prefill(cfg, model, base, peft, cache,
+                                          prompt_tokens, decode=decode)
     out = []
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     for s in range(n_steps):

@@ -92,7 +92,10 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                  rounds=100, clients_per_round=8, total_clients=32,
                  batch_size=8, local_iters=1, local_lr=None, server_lr=None,
                  dirichlet_alpha=0.1, seed=0, eval_every=10, reduced=True,
-                 k_perturbations=1, jvp_clip=None, log=print):
+                 k_perturbations=1, jvp_clip=None, log=print,
+                 runtime=False, runtime_executor="serial",
+                 runtime_microbatch=None, over_select=1.0, deadline=None,
+                 dropout_rate=0.0, wire_dtype="fp32", wire_simulate=False):
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_config(cfg)
@@ -122,8 +125,6 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
     )
 
     rng = np.random.default_rng(seed)
-    parts = dirichlet_partition(y_tr, total_clients, dirichlet_alpha, seed=seed)
-    client_data = [ClientDataset(x_tr, y_tr, idx) for idx in parts]
 
     key = jax.random.PRNGKey(seed)
     model = get_model(cfg)
@@ -131,10 +132,43 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
     peft = init_peft(cfg, key, sc)
     state = init_state(base, peft)
 
-    step_fn, kind = build_round_step(cfg, sc, method)
-    step_fn = jax.jit(step_fn)
-    if kind == "zo":
-        state = init_zo_state(state)
+    engine = scheduler = None
+    if runtime:
+        # federation-runtime path: logical client population with lazy
+        # Dirichlet shards + cohort scheduler + message-level round engine
+        from repro.core.assignment import enumerate_units
+        from repro.fl.runtime import (
+            ClientPopulation, CohortScheduler, FederationEngine,
+            SerialExecutor, ShardedExecutor, WireConfig)
+        if method not in ("spry", "spry_periter"):
+            raise ValueError(f"--runtime supports spry/spry_periter, "
+                             f"not {method!r}")
+        comm_mode = "per_epoch" if method == "spry" else "per_iteration"
+        population = ClientPopulation(
+            x_tr, y_tr, n_clients=total_clients, alpha=dirichlet_alpha,
+            seed=seed)
+        scheduler = CohortScheduler(
+            population, clients_per_round, over_select=over_select,
+            deadline=deadline, dropout_rate=dropout_rate, seed=seed)
+        executor = (ShardedExecutor(microbatch=runtime_microbatch)
+                    if runtime_executor == "sharded"
+                    else SerialExecutor(microbatch=runtime_microbatch))
+        engine = FederationEngine(
+            cfg, sc, task="cls", comm_mode=comm_mode, executor=executor,
+            wire=WireConfig(dtype=wire_dtype, simulate=wire_simulate))
+        n_units = enumerate_units(state.peft).n_units
+        client_data = [ClientDataset(x_tr, y_tr, population.shard(c))
+                       for c in range(min(total_clients, 8))]
+    else:
+        parts = dirichlet_partition(y_tr, total_clients, dirichlet_alpha,
+                                    seed=seed)
+        client_data = [ClientDataset(x_tr, y_tr, idx) for idx in parts]
+
+    if engine is None:
+        step_fn, kind = build_round_step(cfg, sc, method)
+        step_fn = jax.jit(step_fn)
+        if kind == "zo":
+            state = init_zo_state(state)
 
     eval_logits = jax.jit(lambda st, xb: cls_logits(
         cfg, st.base, st.peft, {"tokens": xb}))
@@ -147,13 +181,23 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
         return personalized_accuracy(cfg, st, client_data, x_tr, y_tr, rng)
 
     history = []
+    bytes_up_total = bytes_down_total = 0
     t0 = time.time()
     for r in range(rounds):
-        chosen = sample_clients(rng, total_clients, clients_per_round)
-        bx, by = stack_client_batches([client_data[c] for c in chosen], rng,
-                                      batch_size)
-        state, metrics = step_fn(state, {"tokens": jnp.asarray(bx),
-                                         "labels": jnp.asarray(by)})
+        if engine is not None:
+            plan = scheduler.plan_round(r, n_units, sc.seed)
+            bx, by = scheduler.round_batch(plan, batch_size)
+            state, metrics, report = engine.run_round(
+                state, plan, {"tokens": jnp.asarray(bx),
+                              "labels": jnp.asarray(by)})
+            bytes_up_total += report.bytes_up
+            bytes_down_total += report.bytes_down
+        else:
+            chosen = sample_clients(rng, total_clients, clients_per_round)
+            bx, by = stack_client_batches([client_data[c] for c in chosen],
+                                          rng, batch_size)
+            state, metrics = step_fn(state, {"tokens": jnp.asarray(bx),
+                                             "labels": jnp.asarray(by)})
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             st = the_state(state)
             accs = []
@@ -162,11 +206,20 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                 accs.append(np.asarray(
                     accuracy_from_logits(lg, jnp.asarray(y_te[i:i + 64]))))
             acc = float(np.mean(accs))
-            history.append({"round": r + 1, "acc": acc,
-                            "loss": float(metrics["loss"]),
-                            "t": time.time() - t0})
+            entry = {"round": r + 1, "acc": acc,
+                     "loss": float(metrics["loss"]),
+                     "t": time.time() - t0}
+            extra = ""
+            if engine is not None:
+                entry["bytes_up"] = bytes_up_total
+                entry["bytes_down"] = bytes_down_total
+                extra = (f" up={bytes_up_total/1e6:.2f}MB "
+                         f"down={bytes_down_total/1e6:.2f}MB "
+                         f"survivors={report.n_survivors}/"
+                         f"{report.cohort_size}")
+            history.append(entry)
             log(f"[{method}] round {r+1:4d} loss={float(metrics['loss']):.4f} "
-                f"test_acc={acc:.4f} ({time.time()-t0:.0f}s)")
+                f"test_acc={acc:.4f} ({time.time()-t0:.0f}s){extra}")
     history[-1]["personalized_acc"] = eval_personalized()
     log(f"[{method}] personalized_acc={history[-1]['personalized_acc']:.4f}")
     return history
@@ -190,6 +243,22 @@ def main():
     ap.add_argument("--jvp-clip", type=float, default=None)
     ap.add_argument("--full-size", action="store_true",
                     help="use the full (unreduced) architecture")
+    ap.add_argument("--runtime", action="store_true",
+                    help="drive rounds through the federation runtime "
+                         "(fl/runtime: scheduler -> executor -> engine)")
+    ap.add_argument("--runtime-executor", default="serial",
+                    choices=("serial", "sharded"))
+    ap.add_argument("--runtime-microbatch", type=int, default=None,
+                    help="clients per executor vmap chunk (None = whole "
+                         "cohort; finite = streaming aggregation)")
+    ap.add_argument("--over-select", type=float, default=1.0)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="straggler cutoff seconds (None = 90%% quantile)")
+    ap.add_argument("--dropout-rate", type=float, default=0.0)
+    ap.add_argument("--wire-dtype", default="fp32",
+                    choices=("fp32", "bf16", "fp16"))
+    ap.add_argument("--wire-simulate", action="store_true",
+                    help="route every update through a serialized frame")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     hist = run_training(arch=args.arch, task=args.task, method=args.method,
@@ -199,7 +268,14 @@ def main():
                         local_iters=args.local_iters, local_lr=args.lr,
                         server_lr=args.server_lr, dirichlet_alpha=args.alpha,
                         seed=args.seed, reduced=not args.full_size,
-                        k_perturbations=args.k, jvp_clip=args.jvp_clip)
+                        k_perturbations=args.k, jvp_clip=args.jvp_clip,
+                        runtime=args.runtime,
+                        runtime_executor=args.runtime_executor,
+                        runtime_microbatch=args.runtime_microbatch,
+                        over_select=args.over_select, deadline=args.deadline,
+                        dropout_rate=args.dropout_rate,
+                        wire_dtype=args.wire_dtype,
+                        wire_simulate=args.wire_simulate)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(hist, f, indent=1)

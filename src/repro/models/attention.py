@@ -152,8 +152,11 @@ def qkv(cfg, p, x, peft_layer, lora_scale):
     return q, k, v
 
 
-def attn_block_prefill(cfg, p, x, peft_layer, lora_scale, *, is_global=True,
-                       positions=None, causal=True):
+def attn_block_prefill_kv(cfg, p, x, peft_layer, lora_scale, *,
+                          is_global=True, positions=None, causal=True):
+    """attn_block_prefill that additionally returns the roped (k, v) rows —
+    exactly what decode would have inserted into the KV cache for these
+    positions. Used by the fused-prefill serve path."""
     B, S, _ = x.shape
     q, k, v = qkv(cfg, p, x, peft_layer, lora_scale)
     if positions is None:
@@ -183,7 +186,17 @@ def attn_block_prefill(cfg, p, x, peft_layer, lora_scale, *, is_global=True,
         out = attend_prefill(q, k, v, window=window, causal=causal)
     out = constrain(out, "prefill_q")
     out = out.reshape(B, S, cfg.n_heads * cfg.hd)
-    return proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"), lora_scale)
+    out = proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"),
+               lora_scale)
+    return out, k, v
+
+
+def attn_block_prefill(cfg, p, x, peft_layer, lora_scale, *, is_global=True,
+                       positions=None, causal=True):
+    out, _, _ = attn_block_prefill_kv(cfg, p, x, peft_layer, lora_scale,
+                                      is_global=is_global,
+                                      positions=positions, causal=causal)
+    return out
 
 
 def attn_block_decode(cfg, p, x, peft_layer, lora_scale, k_cache, v_cache, pos,

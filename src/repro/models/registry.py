@@ -10,7 +10,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,10 @@ class ModelFns:
     unembed: Callable
     init_cache: Callable
     decode_step: Callable
+    # fused prompt ingestion: (cfg, base, peft, cache, tokens) ->
+    # (last-token logits, cache). None -> serve falls back to the
+    # token-by-token decode loop (hybrid/encdec families).
+    prefill: Optional[Callable] = None
 
 
 def _tf_forward(cfg, base, peft, batch, lora_scale=1.0):
@@ -51,13 +55,17 @@ def _encdec_forward(cfg, base, peft, batch, lora_scale=1.0):
 
 _FAMILIES = {
     "dense": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
-                      transformer.init_cache, transformer.decode_step),
+                      transformer.init_cache, transformer.decode_step,
+                      transformer.prefill),
     "moe": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
-                    transformer.init_cache, transformer.decode_step),
+                    transformer.init_cache, transformer.decode_step,
+                    transformer.prefill),
     "vlm": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
-                    transformer.init_cache, transformer.decode_step),
+                    transformer.init_cache, transformer.decode_step,
+                    transformer.prefill),
     "ssm": ModelFns(rwkv_model.init_base, _rwkv_forward, rwkv_model.unembed,
-                    rwkv_model.init_cache, rwkv_model.decode_step),
+                    rwkv_model.init_cache, rwkv_model.decode_step,
+                    rwkv_model.prefill),
     "hybrid": ModelFns(hybrid.init_base, _hybrid_forward, hybrid.unembed,
                        hybrid.init_cache, hybrid.decode_step),
     "audio": ModelFns(encdec.init_base, _encdec_forward, encdec.unembed,

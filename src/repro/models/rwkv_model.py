@@ -50,6 +50,36 @@ def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
     return h, jnp.float32(0.0)
 
 
+def prefill(cfg, base, peft, cache, tokens, lora_scale=1.0):
+    """Fused prompt ingestion: one full-sequence recurrence pass per layer
+    instead of P decode_step calls. The explicit state threading forces the
+    sequential-recurrence path (state is consumed), so the carried
+    (wkv, token-shift) states land exactly where the decode loop would have
+    left them. Returns (last-token logits (B,V), cache)."""
+    h = embed_tokens(cfg, base, tokens)                # (B,P,D)
+    peft_layers = (peft or {}).get("layers", {})
+
+    def body(h, xs):
+        lp, pl, wkv, s_tm, s_cm = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        tm, wkv, last_tm = rwkv6_time_mix(
+            cfg, lp["mix"], hn, pl or None, lora_scale,
+            state=wkv, shift_prev=s_tm)
+        h = h + tm
+        hn = apply_norm(cfg, h, lp["ln2"])
+        cm, last_cm = rwkv6_channel_mix(cfg, lp["mix"], hn, shift_prev=s_cm)
+        return h + cm, (wkv, last_tm.astype(s_tm.dtype),
+                        last_cm.astype(s_cm.dtype))
+
+    h, (wkvs, stms, scms) = jax.lax.scan(
+        body, h,
+        (base["layers"], peft_layers, cache["wkv"], cache["shift_tm"],
+         cache["shift_cm"]))
+    h = apply_norm(cfg, h, base["final_norm"])
+    logits = (h[:, -1, :] @ unembed(cfg, base)).astype(jnp.float32)
+    return logits, {"wkv": wkvs, "shift_tm": stms, "shift_cm": scms}
+
+
 def init_cache(cfg, batch: int, seq_len: int):
     hd = cfg.ssm.head_dim
     H = cfg.d_model // hd

@@ -119,6 +119,89 @@ def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
 
 
 # ---------------------------------------------------------------------------
+# Fused prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, base, peft, cache, tokens, lora_scale=1.0):
+    """Fused prompt ingestion: ONE chunked-attention pass over the whole
+    prompt instead of P decode_step calls. Returns (last-token logits (B,V),
+    cache) with the cache holding exactly the rows the token-by-token decode
+    loop would have written (ring-buffer aware: when the prompt is longer
+    than a sliding-window cache, each slot keeps its LAST occupant).
+
+    int8-KV caches are supported (rows are quantized on insert) but NOT
+    decode-loop equivalent: the loop attends to quantized history during
+    ingestion while this pass attends to exact K/V — launch/serve.py falls
+    back to the token loop for quantized caches.
+    """
+    B, P = tokens.shape
+    h = embed_tokens(cfg, base, tokens)
+    flags = _layer_flags(cfg)
+    mixed = _mixed_pattern(cfg)
+    peft_layers = (peft or {}).get("layers", {})
+
+    def attn_branch(is_global_static):
+        def run(lp, pl, hn):
+            return attn.attn_block_prefill_kv(
+                cfg, lp["attn"], hn, pl or None, lora_scale,
+                is_global=is_global_static)
+        return run
+
+    def body(h, xs):
+        lp, pl, is_global = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        if mixed:
+            a, k, v = jax.lax.cond(is_global,
+                                   lambda: attn_branch(True)(lp, pl, hn),
+                                   lambda: attn_branch(False)(lp, pl, hn))
+        else:
+            a, k, v = attn_branch(bool(cfg.is_global_layer(0)))(lp, pl, hn)
+        # NOTE: no BitFit _peft_bias here — decode_step does not apply the
+        # bias1/bias2 residual biases, and prefill must match the
+        # token-by-token decode loop exactly (tests/test_serve_prefill.py)
+        h = h + a
+        hn = apply_norm(cfg, h, lp["ln2"])
+        if cfg.moe is not None:
+            y, _ = moe_block(cfg, lp["moe"], hn)
+        else:
+            y = mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale)
+        return h + y, (k, v)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (base["layers"], peft_layers, flags))
+    h = apply_norm(cfg, h, base["final_norm"])
+    logits = (h[:, -1, :] @ unembed(cfg, base)).astype(jnp.float32)
+
+    # cache insert: slot s <- the LAST prompt position p < P with p % Sc == s
+    # (identity placement while P <= Sc; ring semantics beyond)
+    Sc = cache["k"].shape[2]
+    slots = np.arange(min(P, Sc))
+    last_pos = slots + Sc * ((P - 1 - slots) // Sc)   # static (P, Sc known)
+    gather = jnp.asarray(last_pos, jnp.int32)
+    k_rows = ks[:, :, gather]                          # (L,B,min(P,Sc),KV,hd)
+    v_rows = vs[:, :, gather]
+    quantized = "k_scale" in cache
+    if quantized:
+        kq, ksc = _quantize_kv(k_rows)
+        vq, vsc = _quantize_kv(v_rows)
+        cache = {
+            "k": cache["k"].at[:, :, : len(slots)].set(kq),
+            "v": cache["v"].at[:, :, : len(slots)].set(vq),
+            "k_scale": cache["k_scale"].at[:, :, : len(slots)].set(
+                ksc.astype(cache["k_scale"].dtype)),
+            "v_scale": cache["v_scale"].at[:, :, : len(slots)].set(
+                vsc.astype(cache["v_scale"].dtype)),
+        }
+    else:
+        cache = {
+            "k": cache["k"].at[:, :, : len(slots)].set(
+                k_rows.astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, :, : len(slots)].set(
+                v_rows.astype(cache["v"].dtype)),
+        }
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------
 

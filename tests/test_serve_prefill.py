@@ -1,0 +1,124 @@
+"""Fused prefill vs the token-by-token decode loop: identical decode output."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpryConfig, get_config, reduce_config
+from repro.launch.serve import greedy_generate, tokenwise_prefill
+from repro.models import get_model
+from repro.peft import init_peft
+
+
+def _setup(arch):
+    cfg = reduce_config(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig())
+    return cfg, model, base, peft, key
+
+
+# h2o-danube3 is pure sliding-window: P=70 > window=64 exercises the
+# ring-buffer slot mapping of the fused cache insert
+CASES = [("llama2-7b", 12, 6), ("rwkv6-1.6b", 12, 6),
+         ("gemma3-12b", 12, 6), ("h2o-danube-3-4b", 70, 5)]
+
+
+@pytest.mark.parametrize("arch,P,steps", CASES)
+def test_fused_prefill_decode_identical(arch, P, steps):
+    cfg, model, base, peft, key = _setup(arch)
+    prompt = jax.random.randint(key, (2, P), 0, cfg.vocab)
+    ids_fused = greedy_generate(cfg, base, peft, prompt, steps,
+                                fused_prefill=True)
+    ids_loop = greedy_generate(cfg, base, peft, prompt, steps,
+                               fused_prefill=False)
+    np.testing.assert_array_equal(np.asarray(ids_fused), np.asarray(ids_loop))
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "rwkv6-1.6b"])
+def test_fused_prefill_state_matches_tokenwise(arch):
+    """Logits and the post-prefill cache agree with the decode-loop oracle."""
+    cfg, model, base, peft, key = _setup(arch)
+    P, steps = 10, 4
+    prompt = jax.random.randint(key, (2, P), 0, cfg.vocab)
+    cache0 = model.init_cache(cfg, 2, P + steps)
+    lg_loop, cache_loop = tokenwise_prefill(cfg, model, base, peft, cache0,
+                                            prompt)
+    lg_fused, cache_fused = jax.jit(
+        lambda b, p, c, t: model.prefill(cfg, b, p, c, t))(
+        base, peft, cache0, prompt)
+    np.testing.assert_allclose(np.asarray(lg_loop), np.asarray(lg_fused),
+                               atol=2e-4, rtol=2e-4)
+    for (ka, a), (kb, b) in zip(
+            sorted(cache_loop.items()), sorted(cache_fused.items())):
+        assert ka == kb
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-4, rtol=2e-4, err_msg=ka)
+
+
+def test_fused_prefill_matches_loop_with_bitfit():
+    """BitFit biases are a decode-path no-op (decode_step never applies
+    bias1/bias2); the fused prefill must mirror that, not the train
+    forward."""
+    cfg = reduce_config(get_config("llama2-7b"))
+    key = jax.random.PRNGKey(0)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig(peft="bitfit"))
+    # make the biases decidedly nonzero so a mismatch would show
+    peft = jax.tree.map(
+        lambda x: x + 0.1 if x.ndim == 2 else x, peft)
+    prompt = jax.random.randint(key, (2, 10), 0, cfg.vocab)
+    a = greedy_generate(cfg, base, peft, prompt, 4, fused_prefill=True)
+    b = greedy_generate(cfg, base, peft, prompt, 4, fused_prefill=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch,P,steps,cache_len", [
+    ("gemma3-12b", 20, 3, 12),        # global layers + lossy ring
+    ("h2o-danube-3-4b", 40, 3, 32),   # pure swa but ring < window
+])
+def test_lossy_ring_falls_back_to_tokenwise(arch, P, steps, cache_len):
+    """cache_len < prompt with global layers (or a ring shorter than the
+    window) makes fused full/banded attention diverge from the lossy decode
+    loop — greedy_generate must fall back and stay identical."""
+    cfg, model, base, peft, key = _setup(arch)
+    prompt = jax.random.randint(key, (1, P), 0, cfg.vocab)
+    a = greedy_generate(cfg, base, peft, prompt, steps, cache_len=cache_len,
+                        fused_prefill=True)
+    b = greedy_generate(cfg, base, peft, prompt, steps, cache_len=cache_len,
+                        fused_prefill=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_int8_kv_cache_falls_back_to_tokenwise():
+    """Quantized caches make fused ingestion inequivalent (the loop attends
+    to quantized history) — greedy_generate must take the token loop and
+    stay identical to fused_prefill=False."""
+    cfg, model, base, peft, key = _setup("llama2-7b")
+    prompt = jax.random.randint(key, (2, 10), 0, cfg.vocab)
+    a = greedy_generate(cfg, base, peft, prompt, 4, fused_prefill=True,
+                        kv_int8=True)
+    b = greedy_generate(cfg, base, peft, prompt, 4, fused_prefill=False,
+                        kv_int8=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prefill_registered_per_family():
+    for arch, has in (("llama2-7b", True), ("qwen3-moe-235b-a22b", True),
+                      ("rwkv6-1.6b", True), ("zamba2-1.2b", False),
+                      ("whisper-tiny", False)):
+        cfg = reduce_config(get_config(arch))
+        assert (get_model(cfg).prefill is not None) == has, arch
+
+
+def test_fallback_families_still_generate():
+    """hybrid has no fused path yet — fused_prefill=True must silently fall
+    back to the token loop and produce the same ids as fused_prefill=False."""
+    cfg, model, base, peft, key = _setup("zamba2-1.2b")
+    prompt = jax.random.randint(key, (1, 6), 0, cfg.vocab)
+    a = greedy_generate(cfg, base, peft, prompt, 3, fused_prefill=True)
+    b = greedy_generate(cfg, base, peft, prompt, 3, fused_prefill=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
