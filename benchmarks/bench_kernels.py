@@ -20,21 +20,31 @@ jnp paths the dispatch layer routes to on CPU, and report:
                              invariant primal — reported, not assumed)
       batched_engine         the generic batched path (linearize + vmap):
                              one primal, K stacked tangents, materialized
-                             (K,M,N) tangent intermediates
-      batched_fused          the batched estimate through the multi-tangent
-                             fused contraction (kernels/lora_dual
-                             ``lora_dual_mt_jvps``): one primal pass and
-                             rank-r-sized per-tangent work, no (K,M,N)
-                             materialization — what the mt Pallas kernel
-                             does blockwise on TPU
+                             (K,M,N) tangent intermediates — the
+                             materialize-then-contract baseline
+      batched_fused          the batched estimate through the fused
+                             contraction route (``SplitLoss`` +
+                             ``forward_gradient(fused_contraction=True)``):
+                             the site's K tangent columns are contracted
+                             against the post-head cotangent — one primal
+                             pass, rank-r per-tangent work, no (K,M,N)
+                             materialization — the estimator-level mirror
+                             of what the ``*_mt_jvps`` Pallas epilogue
+                             kernels do blockwise on TPU
 
 The acceptance gate (ISSUE 1): batched_fused at K=8 < 0.5x the sequential
 wall time. ISSUE 2 adds ``fg_mixer_ksweep``: the same
 sequential-vs-batched estimator comparison THROUGH an RWKV6 recurrence and
 an SWA attention block (the dispatched sequence mixers) — the batched
 engine amortizes the mixer primal across K tangents, which is what the
-wkv6/swa multi-tangent Pallas kernels do blockwise on TPU. Results are
-written to BENCH_kernels.json by benchmarks/run.py.
+wkv6/swa multi-tangent Pallas kernels do blockwise on TPU. ISSUE 4 adds
+the fused-vs-materialized columns: per K, the peak-live-bytes of the
+traced-HLO program (buffer-assignment-style liveness walk,
+``launch/hlo_analysis.py::peak_live_bytes``) for the materializing batched
+engine vs the fused-contraction route, plus a fused column in the mixer
+sweep. Acceptance (ISSUE 4): fused K=8 records LOWER peak live bytes AND
+<= 1.0x the materialize-then-contract wall time. Results are written to
+BENCH_kernels.json by benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -44,14 +54,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.forward_grad import (
-    _combine,
-    forward_gradient,
-    stacked_perturbations,
-)
+from repro.core.forward_grad import SplitLoss, forward_gradient
 from repro.kernels.dispatch import lora_proj, swa_attend, wkv6_mix
-from repro.kernels.lora_dual import lora_dual_mt_jvps
 from repro.kernels.lora_dual.ref import lora_dual_ref
+from repro.launch.hlo_analysis import peak_live_bytes
 
 M, K_DIM, N, R = 1024, 1024, 1024, 8
 SCALE = 1.0
@@ -151,15 +157,14 @@ def _bench_fg_ksweep(x, w, peft, k_values, print_csv):
         batched = jax.jit(lambda k, p, K=K: forward_gradient(
             loss_of, p, k, k_perturbations=K))
 
-        # -- batched through the fused mt contraction --
-        @jax.jit
-        def batched_fused(key, p, K=K):
-            vs = stacked_perturbations(key, p, jnp.arange(K))
-            y = lora_proj(x, w, p["A"], p["B"], SCALE)
-            gy = (2.0 / y.size) * y
-            jvps = lora_dual_mt_jvps(x, w, p["A"], vs["A"], p["B"], vs["B"],
-                                     gy, scale=SCALE)
-            return jnp.mean(y * y), _combine(jvps, vs, K), jvps
+        # -- batched through the fused contraction route: the estimator
+        # reverses the tiny post-head once for gy and contracts the site's
+        # K tangent columns without materializing them --
+        split = SplitLoss(lambda p: ((x, w, p["A"], p["B"]), None), "lora",
+                          lambda y, ctx, p: jnp.mean(y * y), scale=SCALE,
+                          x_has_tangent=False)
+        batched_fused = jax.jit(lambda k, p, K=K: forward_gradient(
+            split, p, k, k_perturbations=K, fused_contraction=True))
 
         # correctness: all four produce the same estimate for this seed
         _, g_ref, j_ref = batched(key, peft)
@@ -174,6 +179,14 @@ def _bench_fg_ksweep(x, w, peft, k_values, print_csv):
         t_loop = _time(seq_loop, key, peft)
         t_bat = _time(batched, key, peft)
         t_fused = _time(batched_fused, key, peft)
+        # fused-vs-materialized peak-live-bytes of the compiled programs
+        # (buffer-assignment-style liveness walk over the traced HLO): the
+        # materializing engine carries the (K, M, N) tangent stack, the
+        # fused route never forms it
+        peak_mat = peak_live_bytes(
+            batched.lower(key, peft).compile().as_text())
+        peak_fused = peak_live_bytes(
+            batched_fused.lower(key, peft).compile().as_text())
         row = {
             "K": K,
             "sequential_columnwise_us": t_col * 1e6,
@@ -182,6 +195,10 @@ def _bench_fg_ksweep(x, w, peft, k_values, print_csv):
             "batched_fused_us": t_fused * 1e6,
             "ratio_fused_vs_columnwise": t_fused / t_col,
             "ratio_fused_vs_loop": t_fused / t_loop,
+            "ratio_fused_vs_engine": t_fused / t_bat,
+            "peak_live_mb_materialized": peak_mat / 1e6,
+            "peak_live_mb_fused": peak_fused / 1e6,
+            "ratio_peak_fused_vs_materialized": peak_fused / peak_mat,
             "jvp_rel_err_fused_vs_engine": jvp_err,
             "jvp_rel_err_columnwise_vs_engine": col_err,
         }
@@ -195,6 +212,10 @@ def _bench_fg_ksweep(x, w, peft, k_values, print_csv):
             print(f"kernel/fg_ksweep/K={K}/batched_fused,{t_fused*1e6:.0f},"
                   f"ratio_vs_columnwise={t_fused/t_col:.2f} "
                   f"ratio_vs_loop={t_fused/t_loop:.2f} jvp_err={jvp_err:.1e}")
+            print(f"kernel/fg_ksweep/K={K}/peak_live_bytes,0,"
+                  f"materialized={peak_mat/1e6:.1f}MB "
+                  f"fused={peak_fused/1e6:.1f}MB "
+                  f"ratio={peak_fused/peak_mat:.2f}")
     return rows
 
 
@@ -223,7 +244,18 @@ def _mixer_problem(mixer):
                            v.transpose(0, 2, 1, 3), 128)
         return jnp.mean(y * y)
 
-    return loss_of, peft
+    def pre(p):
+        r = lora_proj(x, wp[0], p["A"], p["B"], SCALE)
+        k = (x @ wp[1]).reshape(B, S, H, hd)
+        v = (x @ wp[2]).reshape(B, S, H, hd)
+        if mixer == "rwkv6":
+            return (r.reshape(B, S, H, hd), k, v, wdec, u), None
+        return (r.reshape(B, S, H, hd).transpose(0, 2, 1, 3),
+                k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)), None
+
+    split = SplitLoss(pre, "wkv6" if mixer == "rwkv6" else "swa",
+                      lambda y, ctx, p: jnp.mean(y * y), window=128)
+    return loss_of, split, peft
 
 
 def _bench_mixer_ksweep(k_values, print_csv):
@@ -246,7 +278,7 @@ def _bench_mixer_ksweep(k_values, print_csv):
     out = {}
     key = jax.random.PRNGKey(13)
     for mixer in ("rwkv6", "swa"):
-        loss_of, peft = _mixer_problem(mixer)
+        loss_of, split, peft = _mixer_problem(mixer)
 
         @jax.jit
         def one_col(i, key, p, loss_of=loss_of):
@@ -269,21 +301,37 @@ def _bench_mixer_ksweep(k_values, print_csv):
                 loss_of, p, k_, k_perturbations=K, tangent_batch=1))
             bat = jax.jit(lambda k_, p, K=K: forward_gradient(
                 loss_of, p, k_, k_perturbations=K))
+            fused = jax.jit(lambda k_, p, K=K: forward_gradient(
+                split, p, k_, k_perturbations=K, fused_contraction=True))
             _, _, j_c = columnwise(key, peft)
             _, _, j_b = bat(key, peft)
+            _, _, j_f = fused(key, peft)
             jvp_err = float(jnp.abs(j_c - j_b).max()
                             / (jnp.abs(j_c).max() + 1e-12))
+            fused_err = float(jnp.abs(j_f - j_b).max()
+                              / (jnp.abs(j_b).max() + 1e-12))
             t_col = _time(columnwise, key, peft)
             t_seq = _time(seq, key, peft)
             t_bat = _time(bat, key, peft)
+            t_fused = _time(fused, key, peft)
+            peak_mat = peak_live_bytes(
+                bat.lower(key, peft).compile().as_text())
+            peak_fused = peak_live_bytes(
+                fused.lower(key, peft).compile().as_text())
             rows.append({
                 "K": K,
                 "sequential_columnwise_us": t_col * 1e6,
                 "sequential_fused_loop_us": t_seq * 1e6,
                 "batched_engine_us": t_bat * 1e6,
+                "batched_fused_us": t_fused * 1e6,
                 "ratio_batched_vs_columnwise": t_bat / t_col,
                 "ratio_batched_vs_loop": t_bat / t_seq,
+                "ratio_fused_vs_engine": t_fused / t_bat,
+                "peak_live_mb_materialized": peak_mat / 1e6,
+                "peak_live_mb_fused": peak_fused / 1e6,
+                "ratio_peak_fused_vs_materialized": peak_fused / peak_mat,
                 "jvp_rel_err": jvp_err,
+                "jvp_rel_err_fused_vs_engine": fused_err,
             })
             if print_csv:
                 print(f"kernel/fg_mixer_ksweep/{mixer}/K={K}/"
@@ -294,6 +342,11 @@ def _bench_mixer_ksweep(k_values, print_csv):
                       f"{t_bat*1e6:.0f},ratio_vs_columnwise={t_bat/t_col:.2f}"
                       f" ratio_vs_loop={t_bat/t_seq:.2f} "
                       f"jvp_err={jvp_err:.1e}")
+                print(f"kernel/fg_mixer_ksweep/{mixer}/K={K}/batched_fused,"
+                      f"{t_fused*1e6:.0f},ratio_vs_engine={t_fused/t_bat:.2f}"
+                      f" peak_mat={peak_mat/1e6:.1f}MB "
+                      f"peak_fused={peak_fused/1e6:.1f}MB "
+                      f"jvp_err={fused_err:.1e}")
         out[mixer] = rows
     return out
 
@@ -321,6 +374,22 @@ def main(print_csv=True, quick=False, json_path=None):
             print(f"kernel/fg_ksweep/acceptance,0,"
                   f"K=8 fused/columnwise={k8['ratio_fused_vs_columnwise']:.2f}"
                   f" (<0.5 required) pass={result['acceptance']['pass']}")
+        result["fused_epilogue_acceptance"] = {
+            "criterion": ("fused K=8: lower peak live bytes AND <= 1.0x "
+                          "wall time vs the materialize-then-contract "
+                          "batched engine"),
+            "ratio_peak_fused_vs_materialized":
+                k8["ratio_peak_fused_vs_materialized"],
+            "ratio_time_fused_vs_engine": k8["ratio_fused_vs_engine"],
+            "pass": (k8["ratio_peak_fused_vs_materialized"] < 1.0
+                     and k8["ratio_fused_vs_engine"] <= 1.0),
+        }
+        if print_csv:
+            print(f"kernel/fg_ksweep/fused_epilogue_acceptance,0,"
+                  f"K=8 peak ratio="
+                  f"{k8['ratio_peak_fused_vs_materialized']:.2f} time ratio="
+                  f"{k8['ratio_fused_vs_engine']:.2f} "
+                  f"pass={result['fused_epilogue_acceptance']['pass']}")
     mixer_acc = {}
     for mixer, rows in result["fg_mixer_ksweep"].items():
         k8m = next((r for r in rows if r["K"] == 8), None)

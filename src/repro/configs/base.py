@@ -161,6 +161,12 @@ class SpryConfig:
                                          # pass (one primal); 1 = sequential
                                          # jvp per perturbation (seed path);
                                          # 1<b<K = chunked groups of b
+    fused_contraction: bool = False      # contract the final mixer site's K
+                                         # tangent outputs against the
+                                         # post-head cotangent in-kernel
+                                         # (takes effect when the task loss
+                                         # declares a fused site — see
+                                         # core/forward_grad.py::SplitLoss)
     local_lr: float = 1e-4               # eta_l
     server_lr: float = 1e-2              # eta
     server_opt: str = "fedyogi"          # fedyogi | fedadam | fedavg | fedsgd | fedadagrad

@@ -35,13 +35,35 @@ memory (each tangent-carrying activation is K× wider):
     1           the sequential fori_loop of full jax.jvp passes — zero
                 stacked tangents, primal recomputed per perturbation
                 (memory-constrained clients; the seed behaviour)
-    1<b<K       K/b groups evaluated sequentially, b tangents per pass
+    1<b<K       ceil(K/b) groups scanned sequentially, b tangents per pass;
+                K is padded to a multiple of b with masked-out tangents so
+                ONE scanned trace covers everything (no re-traced remainder
+                tail), and both the gradient accumulator and the jvp buffer
+                ride the scan carry — donated in-place by XLA, so only one
+                group of stacked tangents is ever live
+
+Fused contraction (cotangent-known epilogues)
+---------------------------------------------
+``fused_contraction=True`` with a ``SplitLoss`` — a loss that declares its
+final mixer site, ``loss(p) = post(site(*args), ctx, p)`` with
+``(args, ctx) = pre(p)`` — exploits that everything downstream of the site
+is cheap: the post-head is reversed ONCE (jax.vjp over the head only — no
+mixer activations stored) for the cotangents (gy, g_ctx, g_p), and each
+tangent's site contribution <gy, ydot_t> is computed by the dispatch
+layer's ``*_jvp_contract`` ops, whose custom-vmap lowering picks the
+``*_mt_jvps`` contraction-epilogue kernels — the K tangent outputs of the
+site are contracted blockwise in VMEM and NEVER written to HBM. The jvp
+scalars equal the standard route's up to float reassociation of the
+contraction.
 """
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.dispatch import forward_ad_region
 from repro.utils.pytree import normal_like
 
@@ -73,8 +95,114 @@ def _combine(jvps, vs, k_total):
         lambda v: jnp.tensordot(jvps, v, axes=[[0], [0]]) / k_total, vs)
 
 
+# ---------------------------------------------------------------------------
+# Split losses: a declared final mixer site for the fused-contraction route
+# ---------------------------------------------------------------------------
+
+class SplitLoss:
+    """A loss with a declared final ("epilogue-eligible") mixer site:
+
+        loss(p) = post(site(*site_args), ctx, p),  (site_args, ctx) = pre(p)
+
+    ``kind`` selects the site op and its tangent-contraction epilogue:
+
+        'lora'  site_args = (x, w, a, b), static ``scale``
+                -> dispatch.lora_proj / lora_jvp_contract
+        'wkv6'  site_args = (r, k, v, w, u)
+                -> dispatch.wkv6_mix / wkv6_jvp_contract
+        'swa'   site_args = (q, k, v), static ``window``
+                -> dispatch.swa_attend / swa_jvp_contract
+
+    ``ctx`` is any tangent-carrying side output of ``pre`` the post-head
+    also needs (residual streams, aux losses; None if none). Calling the
+    object evaluates the composition through the normally-dispatched site
+    op, so it is a drop-in ``loss_fn``; ``forward_gradient(...,
+    fused_contraction=True)`` additionally exploits the split (see module
+    docstring).
+
+    ``x_has_tangent=False`` (lora only) declares that x does NOT depend on
+    the trainable tree — the projection is the first perturbed unit — which
+    statically removes the input-tangent GEMMs from the epilogue kernel.
+    """
+
+    def __init__(self, pre: Callable, kind: str, post: Callable, *,
+                 scale: float = 1.0, window: Optional[int] = None,
+                 x_has_tangent: bool = True):
+        if kind not in ("lora", "wkv6", "swa"):
+            raise ValueError(f"unknown site kind {kind!r}")
+        self.pre = pre
+        self.kind = kind
+        self.post = post
+        self.scale = scale
+        self.window = window
+        self.x_has_tangent = x_has_tangent
+
+    def site(self, args):
+        if self.kind == "lora":
+            return dispatch.lora_proj(*args, self.scale)
+        if self.kind == "wkv6":
+            return dispatch.wkv6_mix(*args)
+        return dispatch.swa_attend(*args, self.window)
+
+    def __call__(self, p):
+        args, ctx = self.pre(p)
+        return self.post(self.site(args), ctx, p)
+
+
+def _tree_vdot(g, t):
+    """Σ_leaves <g, t> in fp32 (0.0 for empty trees)."""
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda a, b: jnp.vdot(a.astype(jnp.float32),
+                              b.astype(jnp.float32)), g, t))
+    return sum(leaves) if leaves else jnp.float32(0.0)
+
+
+def fused_linearize(loss_fn: SplitLoss, peft32):
+    """(loss, jvp_of) for the fused-contraction route.
+
+    Linearizes ``pre`` once (forward-mode, inside the kernel AD region),
+    runs the site primal, reverses the post-head ONCE for the cotangents,
+    and returns ``jvp_of(v)`` whose site term contracts in-kernel. Under
+    ``jax.vmap`` the K site contributions lower to ONE ``*_mt_jvps``
+    epilogue call — no (K, ..., N) tangent output exists at the site."""
+    with forward_ad_region():
+        (site_args, ctx), pre_lin = jax.linearize(loss_fn.pre, peft32)
+    y = loss_fn.site(site_args)
+    loss, post_vjp = jax.vjp(loss_fn.post, y, ctx, peft32)
+    gy, g_ctx, g_p = post_vjp(jnp.ones_like(loss))
+
+    zw = None
+    if loss_fn.kind == "lora":
+        # frozen-W completeness term <gy, x @ wd_t> = <xᵀgy, wd_t>: the
+        # (K_in, N) factor is primal-only, computed once outside the vmap
+        # (wd_t is exact zeros in SPRY — W is frozen — and folds away)
+        x, w = site_args[0], site_args[1]
+        zw = jnp.einsum("...k,...n->kn", x.astype(jnp.float32),
+                        gy.astype(jnp.float32))
+
+    def jvp_of(v):
+        argdots, ctxdot = pre_lin(v)
+        if loss_fn.kind == "lora":
+            x, w, a, b = site_args
+            xd, wd, ad, bd = argdots
+            val = dispatch.lora_jvp_contract(
+                gy, x, w, a, b, ad, bd,
+                xd=xd if loss_fn.x_has_tangent else None,
+                scale=loss_fn.scale)
+            val = val + _tree_vdot(zw, wd)
+        elif loss_fn.kind == "wkv6":
+            val = dispatch.wkv6_jvp_contract(gy, *site_args, *argdots)
+        else:
+            val = dispatch.swa_jvp_contract(gy, *site_args, *argdots,
+                                            loss_fn.window)
+        return val + _tree_vdot(g_ctx, ctxdot) + _tree_vdot(g_p, v)
+
+    return loss, jvp_of
+
+
 def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
-                     jvp_clip=None, tangent_batch=None):
+                     jvp_clip=None, tangent_batch=None,
+                     fused_contraction=False):
     """Forward-gradient estimate of ∇_peft loss_fn.
 
     Returns (loss, grad_estimate, jvps (K,)). ``loss_fn`` must be a function
@@ -84,6 +212,13 @@ def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
     sequential path are numerically equivalent per seed (same perturbations,
     same jvp values) up to float reassociation of the K-average.
 
+    ``fused_contraction`` — when True AND ``loss_fn`` is a ``SplitLoss``
+    (declares its final mixer site), the site's K tangent outputs are
+    contracted against the post-head cotangent inside the kernel instead of
+    being materialized (see module docstring). A plain callable loss_fn
+    silently keeps the standard route — the knob is a capability, not a
+    requirement.
+
     ``jvp_clip`` (beyond-paper stabiliser): clamp the jvp scalar to
     [-c, c] before forming jvp*v — bounds the update magnitude of outlier
     perturbations (a biased but much lower-variance estimator; off by
@@ -92,13 +227,14 @@ def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
     peft32 = jax.tree.map(lambda x: x.astype(jnp.float32), peft)
     K = int(k_perturbations)
     tb = K if tangent_batch is None else max(1, min(int(tangent_batch), K))
+    fused = fused_contraction and isinstance(loss_fn, SplitLoss)
 
     def clip(jvps):
         if jvp_clip is not None:
             return jnp.clip(jvps, -jvp_clip, jvp_clip)
         return jvps
 
-    if K == 1:
+    if K == 1 and not fused:
         # no tangent stacking needed — single dual-number pass
         v = masked_perturbation(jax.random.fold_in(key, 0), peft32, mask_tree)
         with forward_ad_region():
@@ -107,7 +243,7 @@ def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
         vs = jax.tree.map(lambda x: x[None], v)
         return loss, _combine(jvps, vs, 1), jvps
 
-    if tb == 1:
+    if tb == 1 and not fused:
         # sequential fallback: one full jax.jvp pass per perturbation — no
         # stacked tangents and in-loop g accumulation (bounded memory), the
         # primal recomputed K times (the seed behaviour)
@@ -133,43 +269,44 @@ def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
     # linear map with vmap — stacked-tangent jvp. (forward_ad_region lets
     # the dispatch layer lower LoRA tangents to the fused Pallas kernel —
     # the tangent jaxpr is fixed here at trace time, so later vmap replays
-    # of tangent_map inherit it.)
-    with forward_ad_region():
-        loss, tangent_map = jax.linearize(loss_fn, peft32)
+    # of tangent_map inherit it.) On the fused route the site tangents are
+    # contracted in-kernel against the post-head cotangent instead.
+    if fused:
+        loss, tangent_map = fused_linearize(loss_fn, peft32)
+    else:
+        with forward_ad_region():
+            loss, tangent_map = jax.linearize(loss_fn, peft32)
 
     if tb >= K:
         vs = stacked_perturbations(key, peft32, jnp.arange(K), mask_tree)
         jvps = clip(jax.vmap(tangent_map)(vs))
         return loss, _combine(jvps, vs, K), jvps
 
-    # chunked: groups of tb tangents, sequential over groups (bounds the
-    # stacked-tangent memory to tb× while still amortizing inside a group)
-    n_groups, rem = divmod(K, tb)
-
-    def group(start):
-        vs_g = stacked_perturbations(key, peft32, start + jnp.arange(tb),
-                                     mask_tree)
-        return clip(jax.vmap(tangent_map)(vs_g)), vs_g
-
-    # scan over full groups, accumulating the combine incrementally so the
-    # stacked vs of only one group are live at a time
+    # chunked: ceil(K/tb) groups of tb tangents, scanned sequentially
+    # (bounds the stacked-tangent memory to tb× while still amortizing
+    # inside a group). K is padded to a multiple of tb with masked-out
+    # tangents so ONE scanned trace covers everything — no re-traced
+    # remainder tail — and the padded lanes contribute exact zeros (their
+    # jvps are zeroed before the combine). Both accumulators ride the scan
+    # carry, which XLA donates in-place: only one group of stacked
+    # perturbations is ever live.
+    n_groups = -(-K // tb)
     g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), peft32)
 
-    def scan_body(g_acc, start):
-        jvps_g, vs_g = group(start)
+    def scan_body(carry, start):
+        g_acc, jvps_acc = carry
+        idx = start + jnp.arange(tb)
+        vs_g = stacked_perturbations(key, peft32, idx, mask_tree)
+        live = (idx < K).astype(jnp.float32)
+        jvps_g = clip(jax.vmap(tangent_map)(vs_g)) * live
         g_acc = jax.tree.map(jnp.add, g_acc, _combine(jvps_g, vs_g, K))
-        return g_acc, jvps_g
+        jvps_acc = jax.lax.dynamic_update_slice(jvps_acc, jvps_g, (start,))
+        return (g_acc, jvps_acc), None
 
-    g, jvps_groups = jax.lax.scan(
-        scan_body, g0, jnp.arange(n_groups) * tb)
-    jvps = jvps_groups.reshape(-1)
-    if rem:
-        vs_r = stacked_perturbations(
-            key, peft32, n_groups * tb + jnp.arange(rem), mask_tree)
-        jvps_r = clip(jax.vmap(tangent_map)(vs_r))
-        g = jax.tree.map(jnp.add, g, _combine(jvps_r, vs_r, K))
-        jvps = jnp.concatenate([jvps, jvps_r])
-    return loss, g, jvps
+    (g, jvps_pad), _ = jax.lax.scan(
+        scan_body, (g0, jnp.zeros((n_groups * tb,), jnp.float32)),
+        jnp.arange(n_groups) * tb)
+    return loss, g, jvps_pad[:K]
 
 
 def reconstruct_gradient(peft_template, key, jvps, mask_tree=None):

@@ -94,11 +94,11 @@ def make_client_update_fn(cfg, spry_cfg, task: str = "cls"):
                 def loss_of(p):
                     return loss_fn_kind(cfg, base, p, client_batch,
                                         lora_scale=spry_cfg.lora_alpha)
-                return forward_gradient(loss_of, peft_c, ikey,
-                                        k_perturbations=K,
-                                        mask_tree=mask_tree,
-                                        jvp_clip=spry_cfg.jvp_clip,
-                                        tangent_batch=spry_cfg.tangent_batch)
+                return forward_gradient(
+                    loss_of, peft_c, ikey, k_perturbations=K,
+                    mask_tree=mask_tree, jvp_clip=spry_cfg.jvp_clip,
+                    tangent_batch=spry_cfg.tangent_batch,
+                    fused_contraction=spry_cfg.fused_contraction)
             # gradient accumulation: scan over microbatches, fresh
             # perturbation per microbatch (each estimate is unbiased for
             # its microbatch gradient; the average is unbiased for the
@@ -118,7 +118,8 @@ def make_client_update_fn(cfg, spry_cfg, task: str = "cls"):
                     loss_of, peft_c, jax.random.fold_in(ikey, i),
                     k_perturbations=K, mask_tree=mask_tree,
                     jvp_clip=spry_cfg.jvp_clip,
-                    tangent_batch=spry_cfg.tangent_batch)
+                    tangent_batch=spry_cfg.tangent_batch,
+                    fused_contraction=spry_cfg.fused_contraction)
                 g_acc, loss_acc = acc
                 g_acc = jax.tree.map(lambda a, b: a + b / n_mb, g_acc, g)
                 return (g_acc, loss_acc + loss / n_mb), jvps
@@ -170,7 +171,8 @@ def make_client_jvp_fn(cfg, spry_cfg, task: str = "cls"):
         loss, _, jvps = forward_gradient(
             loss_of, peft, ikey, k_perturbations=K, mask_tree=mask_tree,
             jvp_clip=spry_cfg.jvp_clip,
-            tangent_batch=spry_cfg.tangent_batch)
+            tangent_batch=spry_cfg.tangent_batch,
+            fused_contraction=spry_cfg.fused_contraction)
         return loss, jvps
 
     return client_jvp

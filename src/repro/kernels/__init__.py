@@ -12,6 +12,13 @@ dispatch.py    backend routing for the fused LoRA projection: models'
 swa_attention/ sliding-window flash attention (gemma3 / h2o-danube / zamba2)
 wkv6_scan/     RWKV6 data-dependent-decay recurrence, block-parallel over
                (batch, heads)
+mamba2_scan/   Mamba2 state recurrence (zamba2 hybrid blocks), same
+               tangent-state-scratch design as wkv6_scan
+
+Every family also ships a ``*_mt_jvps`` contraction epilogue (lora / wkv6 /
+swa): when the estimator knows the site's output cotangent gy, the T
+tangent outputs are contracted against it blockwise in VMEM and never
+written to HBM — see dispatch.py "Cotangent-known route".
 
 Each kernel ships ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp
 oracle). Tests sweep shapes/dtypes in interpret mode (CPU) and assert

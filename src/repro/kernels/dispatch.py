@@ -3,8 +3,9 @@
 ``models/common.py::proj`` routes every LoRA-adapted projection through
 ``lora_proj`` below, whose custom-JVP rule evaluates the primal AND tangent
 with the fused dual kernel instead of the pure-jnp mirror; the sequence
-mixers route the same way — ``models/ssm.py`` (RWKV6) through ``wkv6_mix``
-and ``models/attention.py`` (SWA prefill) through ``swa_attend``:
+mixers route the same way — ``models/ssm.py`` (RWKV6) through ``wkv6_mix``,
+``models/ssm.py`` (Mamba2) through ``mamba2_mix`` and
+``models/attention.py`` (SWA prefill) through ``swa_attend``:
 
     backend 'pallas'     compiled Pallas TPU kernels (kernels/lora_dual,
                          kernels/wkv6_scan, kernels/swa_attention)
@@ -41,6 +42,20 @@ batching rule (which would re-grid the T=1 kernel over K and recompute the
 primal per tangent). Unexpected batching patterns (e.g. a batched primal)
 fall back to a sequential ``lax.map`` of the T=1 kernel, which is always
 correct.
+
+Cotangent-known route (contraction epilogues)
+---------------------------------------------
+When the estimator can supply the output cotangent ``gy`` of a site — the
+last-mixer / loss-head pattern, where everything downstream of the site is
+cheap enough to reverse once — the jvp contribution of the site collapses
+to the T scalars <gy, ydot_t>, and the ``*_jvp_contract`` ops below compute
+them WITHOUT ever materializing a (T, ..., N) tangent output: their
+custom-vmap lowering picks the ``*_mt_jvps`` contraction-epilogue kernel
+(per-tangent partials accumulated blockwise in VMEM; only per-block scalars
+reach HBM) instead of ``*_mt_tangents``. On the 'jnp' backend the lora
+route is the reassociated einsum mirror of the same math (still no
+(T, M, N) buffer); the wkv6/swa jnp mirrors materialize-and-contract and
+rely on XLA fusion — the memory claim is a kernel-backend property.
 """
 from __future__ import annotations
 
@@ -54,13 +69,23 @@ import jax.numpy as jnp
 from jax.custom_batching import custom_vmap
 from jax.custom_derivatives import SymbolicZero
 
-from repro.kernels.lora_dual.ops import lora_dual_mt_tangents
+from repro.kernels.lora_dual.ops import (
+    lora_dual_mt_jvps,
+    lora_dual_mt_tangents,
+)
+from repro.kernels.mamba2_scan import ops as mamba2_ops
+from repro.kernels.mamba2_scan.ref import mamba2_scan_ref
 from repro.kernels.swa_attention.ops import (
     swa_attention,
+    swa_attention_mt_jvps,
     swa_attention_mt_tangents,
 )
 from repro.kernels.swa_attention.ref import swa_attention_gqa_ref
-from repro.kernels.wkv6_scan.ops import wkv6_scan, wkv6_scan_mt_tangents
+from repro.kernels.wkv6_scan.ops import (
+    wkv6_scan,
+    wkv6_scan_mt_jvps,
+    wkv6_scan_mt_tangents,
+)
 from repro.kernels.wkv6_scan.ref import wkv6_scan_ref
 
 # Pallas calls have no transpose rule, so the kernel tangent route would
@@ -260,6 +285,30 @@ def _swa_tangent_fn(window, interpret: bool):
     return f
 
 
+@functools.lru_cache(maxsize=None)
+def _mamba2_tangent_fn(interpret: bool):
+    """Tangent-only Mamba2 jvp, custom-vmapped onto
+    ``mamba2_scan_mt_tangents`` (one primal state walk for all K
+    tangents)."""
+    def base(xdt, bm, cm, dec, xd, bd, cd, dd):
+        return mamba2_ops.mamba2_scan_mt_tangents(
+            xdt, bm, cm, dec, xd[None], bd[None], cd[None], dd[None],
+            interpret=interpret)[0]
+
+    f = custom_vmap(base)
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, xdt, bm, cm, dec, xd, bd, cd, dd):
+        pb, tb = in_batched[:4], in_batched[4:]
+        if not any(pb):
+            xd, bd, cd, dd = _stack_tangents(axis_size, (xd, bd, cd, dd), tb)
+            return mamba2_ops.mamba2_scan_mt_tangents(
+                xdt, bm, cm, dec, xd, bd, cd, dd, interpret=interpret), True
+        return _map_fallback(axis_size, in_batched,
+                             (xdt, bm, cm, dec, xd, bd, cd, dd), base)
+    return f
+
+
 # ---------------------------------------------------------------------------
 # LoRA projection
 # ---------------------------------------------------------------------------
@@ -379,6 +428,50 @@ def _wkv6_mix_jvp(primals, tangents):
 
 
 # ---------------------------------------------------------------------------
+# Mamba2 state recurrence (fresh-state training path)
+# ---------------------------------------------------------------------------
+
+@jax.custom_jvp
+def mamba2_mix(xdt, bmat, cmat, decay):
+    """y = Mamba2 recurrence from a fresh state — the training-path
+    sequence mixer. xdt: (B,S,H,hd) fp32 (the dt-premultiplied input
+    xh * dt); bmat,cmat: (B,S,N); decay: (B,S,H). The primal is the jnp
+    scan mirror (bit-identical to the scan inside models/ssm.py::
+    mamba2_mix); the JVP rule lowers tangents to
+    ``mamba2_scan_mt_tangents`` on kernel backends inside
+    ``forward_ad_region()``."""
+    return mamba2_scan_ref(xdt, bmat, cmat, decay)[0]
+
+
+@functools.partial(mamba2_mix.defjvp, symbolic_zeros=True)
+def _mamba2_mix_jvp(primals, tangents):
+    xdt, bm, cm, dec = primals
+    xd, bd, cd, dd = tangents
+    backend = get_backend()
+    if backend in ("pallas", "interpret") and in_forward_ad_region():
+        # primal (tangent-independent, so linearize still splits the rule):
+        # the compiled state-walk kernel on TPU — the jnp scan pays the
+        # per-token HBM round-trip of the (hd,N) state; under the
+        # interpreter keep the fast XLA scan (the kernel dataflow is
+        # already exercised by the tangent route)
+        if backend == "pallas":
+            y = mamba2_ops.mamba2_scan(xdt, bm, cm, dec, interpret=False)
+        else:
+            y = mamba2_scan_ref(xdt, bm, cm, dec)[0]
+        fn = _mamba2_tangent_fn(backend == "interpret")
+        return y, fn(xdt, bm, cm, dec, _materialize(xd, xdt),
+                     _materialize(bd, bm), _materialize(cd, cm),
+                     _materialize(dd, dec))
+
+    def f(x_, b_, c_, d_):
+        return mamba2_scan_ref(x_, b_, c_, d_)[0]
+
+    return jax.jvp(f, primals, (
+        _materialize(xd, xdt), _materialize(bd, bm), _materialize(cd, cm),
+        _materialize(dd, dec)))
+
+
+# ---------------------------------------------------------------------------
 # Sliding-window attention (prefill/training path)
 # ---------------------------------------------------------------------------
 
@@ -415,3 +508,173 @@ def _swa_attend_jvp(window, primals, tangents):
 
     return jax.jvp(f, primals, (
         _materialize(qd, q), _materialize(kd, k), _materialize(vd, v)))
+
+
+# ---------------------------------------------------------------------------
+# Cotangent-known contraction route: <gy, ydot_t> without tangent outputs
+# ---------------------------------------------------------------------------
+
+def _vdot32(a, b):
+    return jnp.vdot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+@functools.lru_cache(maxsize=None)
+def _lora_contract_fn(scale: float, has_xd: bool, backend: str):
+    """Single-tangent <gy, lora-ydot>, custom-vmapped so K stacked tangents
+    lower to ONE ``lora_dual_mt_jvps`` epilogue call (T=K) — the fused
+    contraction kernel on pallas/interpret backends, the reassociated
+    einsum mirror on 'jnp'. Neither ever materializes a (K, M, N) tangent
+    stack."""
+    kw = dict(scale=scale, impl="kernel" if backend in ("pallas", "interpret")
+              else "reassoc", interpret=backend == "interpret")
+    if has_xd:
+        def base(gy, x, w, a, b, xd, ad, bd):
+            return lora_dual_mt_jvps(x, w, a, ad[None], b, bd[None], gy,
+                                     xdots=xd[None], **kw)[0]
+
+        f = custom_vmap(base)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, gy, x, w, a, b, xd, ad, bd):
+            if not any(in_batched[:5]):
+                xd, ad, bd = _stack_tangents(axis_size, (xd, ad, bd),
+                                             in_batched[5:])
+                return lora_dual_mt_jvps(x, w, a, ad, b, bd, gy, xdots=xd,
+                                         **kw), True
+            return _map_fallback(axis_size, in_batched,
+                                 (gy, x, w, a, b, xd, ad, bd), base)
+    else:
+        def base(gy, x, w, a, b, ad, bd):
+            return lora_dual_mt_jvps(x, w, a, ad[None], b, bd[None], gy,
+                                     **kw)[0]
+
+        f = custom_vmap(base)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, gy, x, w, a, b, ad, bd):
+            if not any(in_batched[:5]):
+                ad, bd = _stack_tangents(axis_size, (ad, bd), in_batched[5:])
+                return lora_dual_mt_jvps(x, w, a, ad, b, bd, gy, **kw), True
+            return _map_fallback(axis_size, in_batched,
+                                 (gy, x, w, a, b, ad, bd), base)
+    return f
+
+
+def lora_jvp_contract(gy, x, w, a, b, ad, bd, xd=None, *, scale=1.0):
+    """jvp partial of a LoRA projection site against a known cotangent:
+    <gy, ydot> for tangents (xd, ad, bd) — ``xd=None`` statically removes
+    the input-tangent terms (the projection is the first perturbed unit).
+    Under the batched estimator's vmap this lowers to ONE ``_jvps``
+    epilogue kernel call with no (K, M, N) tangent output."""
+    fn = _lora_contract_fn(float(scale), xd is not None, get_backend())
+    if xd is not None:
+        return fn(gy, x, w, a, b, xd, ad, bd)
+    return fn(gy, x, w, a, b, ad, bd)
+
+
+@functools.lru_cache(maxsize=None)
+def _wkv6_contract_fn(has_ud: bool, backend: str):
+    """Single-tangent <gy, wkv6-ydot>, custom-vmapped onto
+    ``wkv6_scan_mt_jvps`` (per-token contraction inside the state walk) on
+    kernel backends; jnp mirror materializes-and-contracts (XLA fuses)."""
+    if backend not in ("pallas", "interpret"):
+        def jnp_base(gy, r, k, v, w, u, rd, kd, vd, wd, *maybe_ud):
+            tangents = (rd, kd, vd, wd,
+                        maybe_ud[0] if maybe_ud else jnp.zeros_like(u))
+            yd = jax.jvp(lambda *p: wkv6_scan_ref(*p)[0], (r, k, v, w, u),
+                         tangents)[1]
+            return _vdot32(gy, yd)
+        return jnp_base
+
+    interpret = backend == "interpret"
+    if has_ud:
+        def base(gy, r, k, v, w, u, rd, kd, vd, wd, ud):
+            return wkv6_scan_mt_jvps(r, k, v, w, u, rd[None], kd[None],
+                                     vd[None], wd[None], gy, ud[None],
+                                     interpret=interpret)[0]
+
+        f = custom_vmap(base)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, gy, r, k, v, w, u, rd, kd, vd, wd,
+                  ud):
+            if not any(in_batched[:6]):
+                rd, kd, vd, wd, ud = _stack_tangents(
+                    axis_size, (rd, kd, vd, wd, ud), in_batched[6:])
+                return wkv6_scan_mt_jvps(r, k, v, w, u, rd, kd, vd, wd, gy,
+                                         ud, interpret=interpret), True
+            return _map_fallback(axis_size, in_batched,
+                                 (gy, r, k, v, w, u, rd, kd, vd, wd, ud),
+                                 base)
+    else:
+        def base(gy, r, k, v, w, u, rd, kd, vd, wd):
+            return wkv6_scan_mt_jvps(r, k, v, w, u, rd[None], kd[None],
+                                     vd[None], wd[None], gy,
+                                     interpret=interpret)[0]
+
+        f = custom_vmap(base)
+
+        @f.def_vmap
+        def _rule(axis_size, in_batched, gy, r, k, v, w, u, rd, kd, vd, wd):
+            if not any(in_batched[:6]):
+                rd, kd, vd, wd = _stack_tangents(
+                    axis_size, (rd, kd, vd, wd), in_batched[6:])
+                return wkv6_scan_mt_jvps(r, k, v, w, u, rd, kd, vd, wd, gy,
+                                         interpret=interpret), True
+            return _map_fallback(axis_size, in_batched,
+                                 (gy, r, k, v, w, u, rd, kd, vd, wd), base)
+    return f
+
+
+def wkv6_jvp_contract(gy, r, k, v, w, u, rd, kd, vd, wd, ud=None):
+    """jvp partial of a WKV6 mixer site against a known cotangent:
+    <gy, ydot>. Batched tangents lower to ONE ``wkv6_scan_mt_jvps``
+    epilogue call — no (K, B, S, H, hd) tangent output."""
+    fn = _wkv6_contract_fn(ud is not None, get_backend())
+    args = (gy, r, k, v, w, u, rd, kd, vd, wd)
+    if ud is not None:
+        args += (ud,)
+    return fn(*args)
+
+
+@functools.lru_cache(maxsize=None)
+def _swa_contract_fn(window, backend: str):
+    """Single-tangent <gy, swa-outd>, custom-vmapped onto
+    ``swa_attention_mt_jvps`` (per-query-block contraction at the end of
+    the online-softmax walk) on kernel backends."""
+    if backend not in ("pallas", "interpret"):
+        def jnp_base(gy, q, k, v, qd, kd, vd):
+            outd = jax.jvp(
+                lambda q_, k_, v_: swa_attention_gqa_ref(q_, k_, v_,
+                                                         window=window),
+                (q, k, v), (qd, kd, vd))[1]
+            return _vdot32(gy, outd)
+        return jnp_base
+
+    interpret = backend == "interpret"
+
+    def base(gy, q, k, v, qd, kd, vd):
+        return swa_attention_mt_jvps(q, k, v, qd[None], kd[None], vd[None],
+                                     gy, window=window,
+                                     interpret=interpret)[0]
+
+    f = custom_vmap(base)
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, gy, q, k, v, qd, kd, vd):
+        if not any(in_batched[:4]):
+            qd, kd, vd = _stack_tangents(axis_size, (qd, kd, vd),
+                                         in_batched[4:])
+            return swa_attention_mt_jvps(q, k, v, qd, kd, vd, gy,
+                                         window=window,
+                                         interpret=interpret), True
+        return _map_fallback(axis_size, in_batched,
+                             (gy, q, k, v, qd, kd, vd), base)
+    return f
+
+
+def swa_jvp_contract(gy, q, k, v, qd, kd, vd, window):
+    """jvp partial of an SWA attention site against a known cotangent:
+    <gy, outd>. Batched tangents lower to ONE ``swa_attention_mt_jvps``
+    epilogue call — no (K, B, H, S, hd) tangent output."""
+    return _swa_contract_fn(window, get_backend())(gy, q, k, v, qd, kd, vd)

@@ -2,6 +2,7 @@ from repro.kernels.lora_dual.ops import (
     lora_dual,
     lora_dual_mt,
     lora_dual_mt_jvps,
+    lora_dual_mt_tangents,
 )
 from repro.kernels.lora_dual.ref import (
     lora_dual_mt_jvps_ref,

@@ -158,6 +158,130 @@ def lora_dual_mt_kernel(x, xdots, w, a, adots, b, bdots, *, scale: float,
     return outs if emit_primal else outs[0]
 
 
+def _mt_jvps_kernel(*refs, scale: float, n_k: int, n_t: int, has_xdot: bool):
+    """Contraction epilogue: per-(i, j) tile jvp partials <gy, ydot_t>
+    without ever forming a ydot tile.
+
+    The k-reduction reuses the mt accumulators (u / per-tangent udots); the
+    frozen-weight term is contracted INCREMENTALLY — zw = gy @ w_kᵀ is
+    computed once per k step (one frozen-W GEMM shared by all T tangents)
+    and dotted against each xdot tile into a (T, 1) jvp-partial accumulator
+    in VMEM — so neither a (T, bm, bn) tangent tile nor a (T, bm, bn)
+    scratch ever exists. At the last k step the LoRA terms collapse to
+    rank-r contractions (z1 = gy @ bᵀ against udots, z2 = uᵀ @ gy against
+    bdots) and the (1, 1, T) per-block partials are written out — the only
+    HBM the epilogue writes is one scalar per tangent per grid tile.
+    """
+    refs = list(refs)
+    x_ref = refs.pop(0)
+    xd_ref = refs.pop(0) if has_xdot else None
+    w_ref, a_ref, ad_ref, b_ref, bd_ref, gy_ref = refs[:6]
+    refs = refs[6:]
+    out_ref = refs.pop(0)
+    acc_u, acc_ud = refs[:2]
+    acc_j = refs[2] if has_xdot else None
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_u[...] = jnp.zeros_like(acc_u)
+        acc_ud[...] = jnp.zeros_like(acc_ud)
+        if has_xdot:
+            acc_j[...] = jnp.zeros_like(acc_j)
+
+    x = x_ref[...]
+    a = a_ref[...]
+    acc_u[...] += jnp.dot(x, a, preferred_element_type=jnp.float32)
+    if has_xdot:
+        gy = gy_ref[...].astype(jnp.float32)
+        # ONE frozen-weight GEMM per k step, shared across all T tangents:
+        # <gy, xd_t @ w_k> = <gy @ w_kᵀ, xd_t>
+        zw = jnp.dot(gy, w_ref[...].T, preferred_element_type=jnp.float32)
+    for t in range(n_t):  # static unroll over the tangent axis
+        acc_ud[t] += jnp.dot(x, ad_ref[t],
+                             preferred_element_type=jnp.float32)
+        if has_xdot:
+            xd_t = xd_ref[t]
+            acc_ud[t] += jnp.dot(xd_t, a, preferred_element_type=jnp.float32)
+            acc_j[t, 0] += jnp.sum(zw * xd_t.astype(jnp.float32))
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        gy = gy_ref[...].astype(jnp.float32)
+        b = b_ref[...].astype(jnp.float32)
+        u = acc_u[...]
+        z1 = jnp.dot(gy, b.T, preferred_element_type=jnp.float32)    # (bm, r)
+        z2 = jnp.dot(u.T, gy, preferred_element_type=jnp.float32)    # (r, bn)
+        parts = []
+        for t in range(n_t):
+            bd_t = bd_ref[t].astype(jnp.float32)
+            part = scale * (jnp.sum(z1 * acc_ud[t]) + jnp.sum(z2 * bd_t))
+            if has_xdot:
+                part = part + acc_j[t, 0]
+            parts.append(part)
+        out_ref[0, 0, :] = jnp.stack(parts)
+
+
+def lora_dual_mt_jvps_kernel(x, xdots, w, a, adots, b, bdots, gy, *,
+                             scale: float, block_m: int = 128,
+                             block_n: int = 128, block_k: int = 128,
+                             interpret: bool = True):
+    """In-kernel fused jvp contraction: all T scalars <gy, ydot_t> with NO
+    (T, M, N) tangent output — the HBM side of the epilogue is one (T,)
+    partial per (i, j) grid tile, summed by the caller (ops.py).
+
+    x: (M,K); xdots: (T,M,K) or None; w: (K,N); a/adots: (K,r)/(T,K,r);
+    b/bdots: (r,N)/(T,r,N); gy: (M,N) -> per-block partials
+    (M/bm, N/bn, T) fp32."""
+    M, K = x.shape
+    N = w.shape[1]
+    r = a.shape[1]
+    T = adots.shape[0]
+    has_xdot = xdots is not None
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "caller (ops.py) must pad to block multiples")
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+
+    kernel = functools.partial(_mt_jvps_kernel, scale=scale, n_k=n_k, n_t=T,
+                               has_xdot=has_xdot)
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),       # x
+    ]
+    operands = [x]
+    if has_xdot:
+        in_specs.append(
+            pl.BlockSpec((T, block_m, block_k), lambda i, j, k: (0, i, k)))
+        operands.append(xdots)
+    in_specs += [
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),       # w
+        pl.BlockSpec((block_k, r), lambda i, j, k: (k, 0)),             # a
+        pl.BlockSpec((T, block_k, r), lambda i, j, k: (0, k, 0)),       # adots
+        pl.BlockSpec((r, block_n), lambda i, j, k: (0, j)),             # b
+        pl.BlockSpec((T, r, block_n), lambda i, j, k: (0, 0, j)),       # bdots
+        pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),       # gy
+    ]
+    operands += [w, a, adots, b, bdots, gy]
+    scratch = [
+        pltpu.VMEM((block_m, r), jnp.float32),
+        pltpu.VMEM((T, block_m, r), jnp.float32),
+    ]
+    if has_xdot:
+        scratch.append(pltpu.VMEM((T, 1), jnp.float32))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, T), lambda i, j, k: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((M // block_m, N // block_n, T),
+                                       jnp.float32),
+        scratch_shapes=scratch,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+
+
 def lora_dual_kernel(x, xdot, w, a, adot, b, bdot, *, scale: float,
                      block_m: int = 128, block_n: int = 128,
                      block_k: int = 128, interpret: bool = True):

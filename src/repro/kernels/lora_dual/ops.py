@@ -4,11 +4,16 @@ call the Pallas kernel, unpad.
 ``lora_dual``      single-tangent fused pass (y, ydot)
 ``lora_dual_mt``   multi-tangent fused pass (y, ydots (T, ...)) — one read
                    of x/W serves the primal and all T tangents
-``lora_dual_mt_jvps``  contraction-reassociated forward-gradient estimate:
-                   all T jvp scalars <gy, ydot_t> WITHOUT materializing any
-                   (T, M, N) tangent output — the cheap path when the
-                   projection output feeds a known cotangent (benchmarks,
-                   last-layer estimates)
+``lora_dual_mt_jvps``  fused jvp-contraction epilogue: all T jvp scalars
+                   <gy, ydot_t> WITHOUT materializing any (T, M, N) tangent
+                   output — the cheap path when the projection output feeds
+                   a known cotangent (last-mixer / loss-head sites,
+                   benchmarks). ``impl='kernel'`` runs the in-kernel
+                   blockwise epilogue (``lora_dual_mt_jvps_kernel``: the
+                   per-tangent partials accumulate in VMEM and only one
+                   scalar per tangent per grid tile reaches HBM);
+                   ``impl='reassoc'`` is the jnp mirror of the same
+                   reassociated math (the fast XLA-fused CPU path).
 """
 from __future__ import annotations
 
@@ -17,7 +22,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.lora_dual.kernel import lora_dual_kernel, lora_dual_mt_kernel
+from repro.kernels.lora_dual.kernel import (
+    lora_dual_kernel,
+    lora_dual_mt_jvps_kernel,
+    lora_dual_mt_kernel,
+)
 
 
 def _pad_to(x, mult, axis):
@@ -105,17 +114,50 @@ def lora_dual_mt_tangents(x, xdots, w, a, adots, b, bdots, scale: float = 1.0,
     return yds[:, :M, :N].reshape((T,) + batch_shape + (N,))
 
 
-@functools.partial(jax.jit, static_argnames=("scale",))
+@functools.partial(jax.jit, static_argnames=("scale", "impl", "block_m",
+                                             "block_n", "block_k",
+                                             "interpret"))
 def lora_dual_mt_jvps(x, w, a, adots, b, bdots, gy, scale: float = 1.0,
-                      xdots=None):
-    """All T jvp scalars <gy, ydot_t> via contraction reassociation.
+                      xdots=None, impl: str = "reassoc",
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = True):
+    """All T jvp scalars <gy, ydot_t> via the fused contraction epilogue.
 
     Never materializes a (T, M, N) tangent stack: the frozen-weight GEMM
     appears at most once (gy@Wᵀ, only when ``xdots`` is given) and every
     per-tangent term is rank-r sized. Equivalent (up to float reassociation)
     to contracting ``gy`` with ``lora_dual_mt``'s ydots — the oracle is
     ``ref.lora_dual_mt_jvps_ref``.
+
+    ``impl='kernel'`` runs the blockwise Pallas epilogue
+    (``lora_dual_mt_jvps_kernel``); ``impl='reassoc'`` is the whole-array
+    jnp mirror of the same math (the fast CPU path the dispatch layer picks
+    on the 'jnp' backend).
     """
+    T = adots.shape[0]
+    if impl == "kernel":
+        x2 = x.reshape(-1, x.shape[-1])
+        M, K = x2.shape
+        N = w.shape[1]
+        x2 = _pad_to(_pad_to(x2, block_m, 0), block_k, 1)
+        if xdots is not None:
+            xd2 = _pad_to(_pad_to(xdots.reshape(T, -1, K), block_m, 1),
+                          block_k, 2)
+        else:
+            xd2 = None
+        wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+        ap = _pad_to(a, block_k, 0)
+        adp = _pad_to(adots, block_k, 1)
+        bp = _pad_to(b, block_n, 1)
+        bdp = _pad_to(bdots, block_n, 2)
+        # zero-padded gy rows/cols contribute exactly 0 to every partial
+        gy2 = _pad_to(_pad_to(gy.reshape(-1, N), block_m, 0), block_n, 1)
+        parts = lora_dual_mt_jvps_kernel(
+            x2, xd2, wp, ap, adp, bp, bdp, gy2, scale=scale,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret)
+        return parts.sum(axis=(0, 1))
+
     x = x.reshape(-1, x.shape[-1])
     gy = gy.reshape(-1, gy.shape[-1]).astype(jnp.float32)
     u = x @ a                                       # (M, r)

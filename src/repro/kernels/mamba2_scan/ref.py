@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the Mamba2 state recurrence (matches the scan inside
+repro.models.ssm.mamba2_mix with the dt multiplication hoisted out):
+
+    h_t = decay_t * h_{t-1} + xdt_t ⊗ B_t        (per head, h in R^{hd x N})
+    y_t = h_t C_t
+
+``xdt`` is the pre-multiplied input xh * dt (the hoist is an exact
+elementwise identity, so this reference is bit-identical to the in-scan
+multiply the model used before the kernel existed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_scan_ref(xdt, bmat, cmat, decay, state=None):
+    """xdt: (B,S,H,hd); bmat,cmat: (B,S,N); decay: (B,S,H);
+    state: (B,H,hd,N) or None. Returns (y (B,S,H,hd), final_state)."""
+    B, S, H, hd = xdt.shape
+    N = bmat.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, hd, N), jnp.float32)
+
+    def step(h, xs):
+        xt, bt, ct, dct = xs          # (B,H,hd), (B,N), (B,N), (B,H)
+        upd = jnp.einsum("bhi,bn->bhin", xt, bt)
+        h = dct[..., None, None] * h + upd
+        yt = jnp.einsum("bhin,bn->bhi", h, ct)
+        return h, yt
+
+    xs = (xdt.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2), decay.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def mamba2_scan_mt_ref(xdt, bmat, cmat, decay, xdtds, bds, cds, decayds):
+    """Multi-tangent oracle: (y, ydots) via T independent ``jax.jvp`` calls
+    of the single-tangent reference — the column-by-column semantics the mt
+    kernel fuses. Tangents carry a leading T axis."""
+    y, _ = mamba2_scan_ref(xdt, bmat, cmat, decay)
+
+    def f(x_, b_, c_, d_):
+        return mamba2_scan_ref(x_, b_, c_, d_)[0]
+
+    def one(tangents):
+        xd, bd, cd, dd = tangents
+        return jax.jvp(f, (xdt, bmat, cmat, decay), (xd, bd, cd, dd))[1]
+
+    yds = jax.vmap(one)((xdtds, bds, cds, decayds))
+    return y, yds

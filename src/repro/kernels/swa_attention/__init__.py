@@ -1,10 +1,12 @@
 from repro.kernels.swa_attention.ops import (
     swa_attention,
     swa_attention_mt,
+    swa_attention_mt_jvps,
     swa_attention_mt_tangents,
 )
 from repro.kernels.swa_attention.ref import (
     swa_attention_gqa_ref,
+    swa_attention_mt_jvps_ref,
     swa_attention_mt_ref,
     swa_attention_ref,
 )

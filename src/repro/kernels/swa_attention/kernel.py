@@ -246,6 +246,122 @@ def _mt_kernel(q_ref, k_ref, v_ref, qd_ref, kd_ref, vd_ref, *rest,
             od_ref[tau] = outd.astype(od_ref.dtype)[None]
 
 
+def _mt_jvps_kernel(q_ref, k_ref, v_ref, qd_ref, kd_ref, vd_ref, gy_ref,
+                    out_ref, m_scr, l_scr, acc_scr, mu_d_scr, acc_d_scr,
+                    *, block_q, block_k, window, n_kv_steps, n_k_total,
+                    scale, banded, n_t):
+    """Contraction epilogue: the same online-softmax walk (primal + T
+    tangent accumulators) as ``_mt_kernel``, but the per-query-block outd_t
+    tiles are contracted against the incoming gy tile at the final kv step
+    instead of being written out — only (1, 1, T) per-block partials reach
+    HBM."""
+    qi = pl.program_id(1)
+    step = pl.program_id(2)
+
+    @pl.when(step == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        mu_d_scr[...] = jnp.zeros_like(mu_d_scr)
+        acc_d_scr[...] = jnp.zeros_like(acc_d_scr)
+
+    q = q_ref[0]                                       # (block_q, hd)
+    k = k_ref[0]                                       # (block_k, hd)
+    v = v_ref[0]
+
+    keep = _keep_mask(qi, step, block_q=block_q, block_k=block_k,
+                      window=window, n_k_total=n_k_total, banded=banded)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_scr[...]                                # (block_q, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(keep, jnp.exp(s - m_new), 0.0)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    for tau in range(n_t):                             # static unroll over T
+        qd = qd_ref[tau, 0]
+        kd = kd_ref[tau, 0]
+        vd = vd_ref[tau, 0]
+        sd = (jnp.dot(qd, k.T, preferred_element_type=jnp.float32)
+              + jnp.dot(q, kd.T, preferred_element_type=jnp.float32)) * scale
+        psd = p * sd
+        mu_d_scr[tau] = mu_d_scr[tau] * alpha + psd.sum(axis=-1, keepdims=True)
+        acc_d_scr[tau] = acc_d_scr[tau] * alpha + (
+            jnp.dot(psd.astype(v.dtype), v, preferred_element_type=jnp.float32)
+            + jnp.dot(p.astype(vd.dtype), vd,
+                      preferred_element_type=jnp.float32))
+
+    @pl.when(step == n_kv_steps - 1)
+    def _finish():
+        gy = gy_ref[0].astype(jnp.float32)             # (block_q, hd)
+        l = jnp.maximum(l_scr[...], 1e-30)
+        out = acc_scr[...] / l
+        parts = []
+        for tau in range(n_t):
+            outd = acc_d_scr[tau] / l - (mu_d_scr[tau] / l) * out
+            parts.append(jnp.sum(gy * outd))           # contract, never store
+        out_ref[0, 0, :] = jnp.stack(parts)
+
+
+def swa_attention_mt_jvps_kernel(q, k, v, qds, kds, vds, gy, *, window,
+                                 block_q=128, block_k=128, interpret=True,
+                                 scale=None, n_heads=None, kv_groups=1):
+    """Fused jvp-contraction epilogue of multi-tangent flash SWA: all T
+    scalars <gy, outd_t> with NO (T, B*H, S, hd) tangent output. Same
+    operand contract as ``swa_attention_mt_kernel`` plus gy: (B*H, S, hd);
+    returns per-block partials (B*H, S/block_q, T) fp32, summed by the
+    caller (ops.py)."""
+    BH, S, hd = q.shape
+    T = qds.shape[0]
+    assert S % block_q == 0 and S % block_k == 0
+    n_heads = BH if n_heads is None else n_heads
+    n_k_total, n_kv_steps, banded, scale = _plan(S, hd, window, block_q,
+                                                 block_k, scale)
+
+    grid = (BH, S // block_q, n_kv_steps)
+    kv_map = functools.partial(_kv_block_index, block_q=block_q,
+                               block_k=block_k, window=window,
+                               n_k_total=n_k_total, banded=banded)
+    kv_head = functools.partial(_kv_head_index, n_heads=n_heads,
+                                kv_groups=kv_groups)
+    kernel = functools.partial(_mt_jvps_kernel, block_q=block_q,
+                               block_k=block_k, window=window,
+                               n_kv_steps=n_kv_steps, n_k_total=n_k_total,
+                               scale=scale, banded=banded, n_t=T)
+    q_spec = pl.BlockSpec((1, block_q, hd), lambda b, i, s: (b, i, 0))
+    kv_spec = pl.BlockSpec((1, block_k, hd),
+                           lambda b, i, s: (kv_head(b), kv_map(i, s), 0))
+    qd_spec = pl.BlockSpec((T, 1, block_q, hd), lambda b, i, s: (0, b, i, 0))
+    kvd_spec = pl.BlockSpec(
+        (T, 1, block_k, hd),
+        lambda b, i, s: (0, kv_head(b), kv_map(i, s), 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, qd_spec, kvd_spec, kvd_spec,
+                  q_spec],
+        out_specs=pl.BlockSpec((1, 1, T), lambda b, i, s: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S // block_q, T), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((T, block_q, 1), jnp.float32),
+            pltpu.VMEM((T, block_q, hd), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, qds, kds, vds, gy)
+
+
 def swa_attention_mt_kernel(q, k, v, qds, kds, vds, *, window, block_q=128,
                             block_k=128, interpret=True, scale=None,
                             n_heads=None, kv_groups=1, emit_primal=True):

@@ -14,6 +14,11 @@ both q and k are padded — and the softmax scale keeps the original hd).
 ``swa_attention_mt`` / ``swa_attention_mt_tangents``: tangents carry a
 leading T axis ((T,B,H,S,hd) for qds, (T,B,KV,S,hd) for kds/vds); one pass
 over the primal q/k/v produces out plus all T outdots.
+
+``swa_attention_mt_jvps``: fused contraction epilogue — all T scalars
+<gy, outd_t> (gy: (B,H,S,hd)); the tangent outputs are contracted against
+gy inside the kernel and never written to HBM (cotangent-known estimator
+route).
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.kernels.swa_attention.kernel import (
     swa_attention_kernel,
+    swa_attention_mt_jvps_kernel,
     swa_attention_mt_kernel,
 )
 
@@ -131,3 +137,29 @@ def swa_attention_mt_tangents(q, k, v, qds, kds, vds, window=None,
         scale=1.0 / float(hd) ** 0.5, n_heads=H, kv_groups=H // KV,
         emit_primal=False)
     return outds.reshape(T, B, H, S + pad_s, hd + pad_hd)[..., :S, :hd]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret", "force_pad_hd"))
+def swa_attention_mt_jvps(q, k, v, qds, kds, vds, gy, window=None,
+                          block_q=128, block_k=128, interpret=True,
+                          force_pad_hd=False):
+    """Fused jvp-contraction epilogue -> jvps (T,) fp32 = <gy, outd_t>.
+
+    Same operand contract as ``swa_attention_mt`` plus the output cotangent
+    gy: (B,H,S,hd); the T tangent outputs are contracted inside the kernel
+    and never reach HBM (only (B*H, S/bq, T) per-block partials do).
+    Zero-padded gy rows/lanes contribute exactly 0 to every partial."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    bq, bk, pad_s = _block_plan(S, block_q, block_k)
+    pad_hd = _pad_plan(hd, interpret, force_pad_hd)
+    qb, kb, vb, qdb, kdb, vdb, (B, H, KV, S, hd, T) = _mt_layout(
+        q, k, v, qds, kds, vds, pad_hd, pad_s)
+    gyb = _pad_last(_pad_seq(gy, pad_s), pad_hd).reshape(
+        B * H, S + pad_s, hd + pad_hd)
+    parts = swa_attention_mt_jvps_kernel(
+        qb, kb, vb, qdb, kdb, vdb, gyb, window=window, block_q=bq,
+        block_k=bk, interpret=interpret,
+        scale=1.0 / float(hd) ** 0.5, n_heads=H, kv_groups=H // KV)
+    return parts.sum(axis=(0, 1))

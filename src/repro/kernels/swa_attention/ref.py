@@ -58,3 +58,12 @@ def swa_attention_mt_ref(q, k, v, qds, kds, vds, window=None):
 
     outds = jax.vmap(one)((qds, kds, vds))
     return out, outds
+
+
+def swa_attention_mt_jvps_ref(q, k, v, qds, kds, vds, gy, window=None):
+    """Oracle for the fused jvp-contraction epilogue: materializes all T
+    outdots via ``swa_attention_mt_ref`` and contracts them against the
+    output cotangent ``gy`` (B,H,S,hd) -> (T,) fp32."""
+    _, outds = swa_attention_mt_ref(q, k, v, qds, kds, vds, window=window)
+    return jnp.einsum("bhsd,tbhsd->t", gy.astype(jnp.float32),
+                      outds.astype(jnp.float32))

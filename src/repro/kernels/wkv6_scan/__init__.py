@@ -1,6 +1,11 @@
 from repro.kernels.wkv6_scan.ops import (
     wkv6_scan,
     wkv6_scan_mt,
+    wkv6_scan_mt_jvps,
     wkv6_scan_mt_tangents,
 )
-from repro.kernels.wkv6_scan.ref import wkv6_scan_mt_ref, wkv6_scan_ref
+from repro.kernels.wkv6_scan.ref import (
+    wkv6_scan_mt_jvps_ref,
+    wkv6_scan_mt_ref,
+    wkv6_scan_ref,
+)

@@ -123,6 +123,103 @@ def _mt_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, rd_ref, kd_ref, vd_ref,
     jax.lax.fori_loop(0, block_s, step, ())
 
 
+def _mt_jvps_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, rd_ref, kd_ref,
+                    vd_ref, wd_ref, *rest, block_s: int, n_s: int, n_t: int,
+                    has_ud: bool):
+    """Contraction epilogue: the same primal-state / tangent-state walk as
+    ``_mt_kernel``, but each per-token ydot_t is contracted against the
+    incoming gy token on the spot — accumulated into a (T, hd) VMEM partial
+    — instead of being written to HBM. Only a (1, T) per-row partial leaves
+    the kernel at the last sequence block."""
+    rest = list(rest)
+    ud_ref = rest.pop(0) if has_ud else None
+    gy_ref = rest.pop(0)
+    out_ref = rest.pop(0)
+    state_scr, state_d_scr, acc_j = rest
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+        state_d_scr[...] = jnp.zeros_like(state_d_scr)
+        acc_j[...] = jnp.zeros_like(acc_j)
+
+    u = u_ref[0]                                    # (hd,)
+
+    def step(t, _):
+        rt = r_ref[0, t, :]                         # (hd,)
+        kt = k_ref[0, t, :]
+        vt = v_ref[0, t, :]
+        wt = w_ref[0, t, :]
+        gt = gy_ref[0, t, :].astype(jnp.float32)
+        s = state_scr[...]                          # (hd, hd)
+        kv = kt[:, None] * vt[None, :]
+        for tau in range(n_t):                      # static unroll over T
+            rdt = rd_ref[tau, 0, t, :]
+            kdt = kd_ref[tau, 0, t, :]
+            vdt = vd_ref[tau, 0, t, :]
+            wdt = wd_ref[tau, 0, t, :]
+            sd = state_d_scr[tau]                   # (hd, hd)
+            kvd = kdt[:, None] * vt[None, :] + kt[:, None] * vdt[None, :]
+            bonus_d = u[:, None] * kvd
+            if has_ud:
+                bonus_d = bonus_d + ud_ref[tau, 0][:, None] * kv
+            ydt = (((sd + bonus_d) * rt[:, None]).sum(axis=0)
+                   + ((s + u[:, None] * kv) * rdt[:, None]).sum(axis=0))
+            state_d_scr[tau] = wdt[:, None] * s + wt[:, None] * sd + kvd
+            acc_j[tau] += gt * ydt                  # contract, never store
+        state_scr[...] = wt[:, None] * s + kv
+        return ()
+
+    jax.lax.fori_loop(0, block_s, step, ())
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        out_ref[0, :] = acc_j[...].sum(axis=1)
+
+
+def wkv6_scan_mt_jvps_kernel(r, k, v, w, u, rds, kds, vds, wds, gy, uds=None,
+                             *, block_s: int = 64, interpret=True):
+    """Fused jvp-contraction epilogue of the multi-tangent WKV recurrence:
+    all T scalars <gy, ydot_t> with NO (T, BH, S, hd) tangent output — the
+    per-token ydots are contracted against gy in VMEM as the state walk
+    produces them. Returns per-row partials (BH, T) fp32, summed by the
+    caller (ops.py). Same operand contract as ``wkv6_scan_mt_kernel`` plus
+    gy: (BH, S, hd)."""
+    BH, S, hd = r.shape
+    T = rds.shape[0]
+    assert S % block_s == 0
+    has_ud = uds is not None
+    n_s = S // block_s
+    grid = (BH, n_s)
+    kernel = functools.partial(_mt_jvps_kernel, block_s=block_s, n_s=n_s,
+                               n_t=T, has_ud=has_ud)
+    seq_spec = pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0))
+    seq_spec_t = pl.BlockSpec((T, 1, block_s, hd), lambda b, s: (0, b, s, 0))
+    in_specs = [seq_spec] * 4 + [
+        pl.BlockSpec((1, hd), lambda b, s: (b, 0)),
+    ] + [seq_spec_t] * 4
+    operands = [r, k, v, w, u, rds, kds, vds, wds]
+    if has_ud:
+        in_specs.append(pl.BlockSpec((T, 1, hd), lambda b, s: (0, b, 0)))
+        operands.append(uds)
+    in_specs.append(seq_spec)                       # gy
+    operands.append(gy)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, T), lambda b, s: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32),
+                        pltpu.VMEM((T, hd, hd), jnp.float32),
+                        pltpu.VMEM((T, hd), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+
+
 def wkv6_scan_mt_kernel(r, k, v, w, u, rds, kds, vds, wds, uds=None, *,
                         block_s: int = 64, interpret=True,
                         emit_primal: bool = True):

@@ -6,6 +6,10 @@
 ``wkv6_scan_mt_tangents`` tangent-only variant (the AD dispatch route; its
                           primal output must come from the jnp mirror so
                           jax.linearize can split the custom-JVP rule)
+``wkv6_scan_mt_jvps``     fused contraction epilogue: all T scalars
+                          <gy, ydot_t> — per-token ydots are contracted
+                          against gy inside the kernel and never written to
+                          HBM (the cotangent-known estimator route)
 
 Tangent-axis contract: tangents carry a leading T axis — rds/kds/vds/wds are
 (T, B, S, H, hd) and uds (when the per-head bonus u carries a tangent) is
@@ -18,7 +22,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.wkv6_scan.kernel import wkv6_scan_kernel, wkv6_scan_mt_kernel
+from repro.kernels.wkv6_scan.kernel import (
+    wkv6_scan_kernel,
+    wkv6_scan_mt_jvps_kernel,
+    wkv6_scan_mt_kernel,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
@@ -111,3 +119,25 @@ def wkv6_scan_mt_tangents(r, k, v, w, u, rds, kds, vds, wds, uds=None,
                               block_s=bs, interpret=interpret,
                               emit_primal=False)
     return yds[:, :, :S].reshape(T, B, H, S, hd).transpose(0, 1, 3, 2, 4)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def wkv6_scan_mt_jvps(r, k, v, w, u, rds, kds, vds, wds, gy, uds=None,
+                      block_s: int = 64, interpret: bool = True):
+    """Fused jvp-contraction epilogue -> jvps (T,) fp32 = <gy, ydot_t>.
+
+    Same operand contract as ``wkv6_scan_mt`` plus the output cotangent
+    gy: (B,S,H,hd); the T tangent outputs are contracted inside the kernel
+    and never reach HBM (only (BH, T) per-row partials do)."""
+    ops, (B, S, H, hd, T, bs) = _mt_layout(r, k, v, w, u, rds, kds, vds, wds,
+                                           uds, block_s)
+    rb, kb, vb, wb, ub, rdb, kdb, vdb, wdb, udb = ops
+    # zero-padded gy rows contribute exactly 0 to every partial
+    gyb = gy.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    pad = (-S) % bs
+    if pad:
+        gyb = jnp.pad(gyb, ((0, 0), (0, pad), (0, 0)))
+    parts = wkv6_scan_mt_jvps_kernel(rb, kb, vb, wb, ub, rdb, kdb, vdb, wdb,
+                                     gyb, udb, block_s=bs,
+                                     interpret=interpret)
+    return parts.sum(axis=0)

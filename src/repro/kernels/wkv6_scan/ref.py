@@ -46,3 +46,12 @@ def wkv6_scan_mt_ref(r, k, v, w, u, rds, kds, vds, wds, uds=None):
     uds_ = uds if uds is not None else jnp.zeros((T,) + u.shape, jnp.float32)
     yds = jax.vmap(one)((rds, kds, vds, wds, uds_))
     return y, yds
+
+
+def wkv6_scan_mt_jvps_ref(r, k, v, w, u, rds, kds, vds, wds, gy, uds=None):
+    """Oracle for the fused jvp-contraction epilogue: materializes all T
+    ydots via ``wkv6_scan_mt_ref`` and contracts them against the output
+    cotangent ``gy`` (B,S,H,hd) -> (T,) fp32."""
+    _, yds = wkv6_scan_mt_ref(r, k, v, w, u, rds, kds, vds, wds, uds)
+    return jnp.einsum("bshd,tbshd->t", gy.astype(jnp.float32),
+                      yds.astype(jnp.float32))

@@ -299,6 +299,85 @@ def bf16_upcast_bytes(hlo_text, min_bytes=50_000_000) -> float:
     return total
 
 
+def _buffer_bytes(shape_str):
+    """Bytes of one op's output allocation (tuple shapes sum elements)."""
+    if shape_str.startswith("("):
+        return float(sum(_shape_bytes(s.strip())
+                         for s in _split_top(shape_str[1:-1]) if "[" in s))
+    return float(_shape_bytes(shape_str))
+
+
+def peak_live_bytes(hlo_text, include_params: bool = False) -> float:
+    """Peak sum of live buffer bytes over a program-order walk of the ENTRY
+    computation — a buffer-assignment-style liveness proxy for the compiled
+    program's temp memory.
+
+    Model: every entry-level op allocates its output buffer (fusion/call
+    intermediates live in registers — only the fusion OUTPUT allocates,
+    which matches XLA's one-buffer-per-entry-op assignment); an operand is
+    freed after its last entry-level use; a while op additionally holds its
+    body's peak while it runs (multiplied by 1 — iterations reuse the same
+    body buffers); conditionals take the max over branches. Buffer
+    aliasing/reuse by the real assigner makes this an upper-bound-flavoured
+    proxy, exact on straight-line programs — see tests/test_hlo_analysis.py.
+
+    ``include_params=True`` also counts entry parameters as live from the
+    start until their last use.
+    """
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        return 0.0
+    cache = {}
+    return _peak_live(entry, comps, cache, include_params)
+
+
+def _peak_live(name, comps, cache, include_params=False):
+    key = (name, include_params)
+    if key in cache:
+        return cache[key]
+    comp = comps.get(name)
+    if comp is None:
+        cache[key] = 0.0
+        return 0.0
+    ops = comp["ops"]
+    last_use = {}
+    op_operands = []
+    for i, op in enumerate(ops):
+        names = [n for n in _operands(op.raw) if n]
+        op_operands.append(names)
+        for n in names:
+            last_use[n] = i
+    sizes = {}
+    live = 0.0
+    if include_params:
+        for pname, pshape in comp["params"].items():
+            sizes[pname] = _buffer_bytes(pshape)
+            live += sizes[pname]
+    peak = live
+    for i, op in enumerate(ops):
+        out_b = _buffer_bytes(op.shape)
+        sizes[op.name] = out_b
+        live += out_b
+        inner = 0.0
+        if op.opcode == "while":
+            for b in (_called_comps(op.raw, "body")
+                      + _called_comps(op.raw, "condition")):
+                inner = max(inner, _peak_live(b, comps, cache))
+        elif op.opcode == "conditional":
+            branches = _called_comps(op.raw, "branch_computations")
+            if not branches:
+                branches = (_called_comps(op.raw, "true_computation")
+                            + _called_comps(op.raw, "false_computation"))
+            for b in branches:
+                inner = max(inner, _peak_live(b, comps, cache))
+        peak = max(peak, live + inner)
+        for n in op_operands[i]:
+            if last_use.get(n) == i and n in sizes:
+                live -= sizes.pop(n)
+    cache[key] = peak
+    return peak
+
+
 def analyse_hlo(hlo_text) -> Totals:
     comps, entry = parse_computations(hlo_text)
     if entry is None:

@@ -92,7 +92,8 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                  rounds=100, clients_per_round=8, total_clients=32,
                  batch_size=8, local_iters=1, local_lr=None, server_lr=None,
                  dirichlet_alpha=0.1, seed=0, eval_every=10, reduced=True,
-                 k_perturbations=1, jvp_clip=None, log=print,
+                 k_perturbations=1, jvp_clip=None, tangent_batch=None,
+                 fused_contraction=False, log=print,
                  runtime=False, runtime_executor="serial",
                  runtime_microbatch=None, over_select=1.0, deadline=None,
                  dropout_rate=0.0, wire_dtype="fp32", wire_simulate=False):
@@ -118,6 +119,8 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
         server_lr=server_lr if server_lr is not None else d_slr,
         k_perturbations=k_perturbations,
         jvp_clip=jvp_clip,
+        tangent_batch=tangent_batch,
+        fused_contraction=fused_contraction,
         dirichlet_alpha=dirichlet_alpha,
         server_opt="fedavg" if method in ("fedavg", "fedsgd", "fedavgsplit")
         else "fedyogi",
@@ -241,6 +244,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--jvp-clip", type=float, default=None)
+    ap.add_argument("--tangent-batch", type=int, default=None,
+                    help="tangents per batched estimator pass (None = all "
+                         "K; 1 = sequential; 1<b<K = scanned groups of b)")
+    ap.add_argument("--fused-contraction", action="store_true",
+                    help="contract final-mixer-site tangents against the "
+                         "post-head cotangent in-kernel (effective for "
+                         "losses that declare a fused site)")
     ap.add_argument("--full-size", action="store_true",
                     help="use the full (unreduced) architecture")
     ap.add_argument("--runtime", action="store_true",
@@ -269,6 +279,8 @@ def main():
                         server_lr=args.server_lr, dirichlet_alpha=args.alpha,
                         seed=args.seed, reduced=not args.full_size,
                         k_perturbations=args.k, jvp_clip=args.jvp_clip,
+                        tangent_batch=args.tangent_batch,
+                        fused_contraction=args.fused_contraction,
                         runtime=args.runtime,
                         runtime_executor=args.runtime_executor,
                         runtime_microbatch=args.runtime_microbatch,

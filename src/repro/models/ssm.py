@@ -183,7 +183,10 @@ def _causal_depthwise_conv(x, w, conv_state=None):
 
 def mamba2_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
                conv_state=None):
-    """x: (B,S,D). state: (B,H,hd,N). Returns (out, state, conv_state)."""
+    """x: (B,S,D). state: (B,H,hd,N) or None (zeros). Returns
+    (out, state, conv_state). On the dispatched forward-gradient fast path
+    (fresh state inside ``dispatch.use_kernel_mixers()``) state is None —
+    the estimator's loss closures never consume it."""
     B, S, D = x.shape
     s = cfg.ssm
     d_inner = s.expand * D
@@ -204,21 +207,31 @@ def mamba2_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
     cmat = (x @ p["w_c"]).astype(jnp.float32)                  # (B,S,N)
     xh = xb.reshape(B, S, H, hd).astype(jnp.float32)
 
-    if state is None:
-        state = jnp.zeros((B, H, hd, N), jnp.float32)
+    if state is None and dispatch.use_kernel_mixers():
+        # forward-gradient fast path (fresh state): the dispatched op lowers
+        # K stacked tangents to the multi-tangent mamba2 Pallas kernel — one
+        # primal state walk for all K perturbations. The dt multiplication
+        # is hoisted out of the scan (exact elementwise identity); the
+        # estimator's loss closures discard the carried state, so none is
+        # produced here.
+        y = dispatch.mamba2_mix(xh * dt[..., None], bmat, cmat, decay)
+        state = None
+    else:
+        if state is None:
+            state = jnp.zeros((B, H, hd, N), jnp.float32)
 
-    def step(h, xs):
-        xt, bt, ct, dct, dtt = xs        # (B,H,hd), (B,N), (B,N), (B,H), (B,H)
-        upd = jnp.einsum("bhi,bn->bhin", xt * dtt[..., None], bt)
-        h = dct[..., None, None] * h + upd
-        yt = jnp.einsum("bhin,bn->bhi", h, ct)
-        return h, yt
+        def step(h, xs):
+            xt, bt, ct, dct, dtt = xs    # (B,H,hd), (B,N), (B,N), (B,H), (B,H)
+            upd = jnp.einsum("bhi,bn->bhin", xt * dtt[..., None], bt)
+            h = dct[..., None, None] * h + upd
+            yt = jnp.einsum("bhin,bn->bhi", h, ct)
+            return h, yt
 
-    xs = (xh.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
-          cmat.transpose(1, 0, 2), decay.transpose(1, 0, 2),
-          dt.transpose(1, 0, 2))
-    state, ys = jax.lax.scan(step, state, xs)
-    y = ys.transpose(1, 0, 2, 3)                               # (B,S,H,hd)
+        xs = (xh.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
+              cmat.transpose(1, 0, 2), decay.transpose(1, 0, 2),
+              dt.transpose(1, 0, 2))
+        state, ys = jax.lax.scan(step, state, xs)
+        y = ys.transpose(1, 0, 2, 3)                           # (B,S,H,hd)
     y = y + p["d_skip"][None, None, :, None] * xh
     y = (y.reshape(B, S, d_inner) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     out = proj(y, p["out_proj"], lora=maybe_lora(peft_layer, "out_proj"),

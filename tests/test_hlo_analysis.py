@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.hlo_analysis import analyse_hlo
+from repro.launch.hlo_analysis import analyse_hlo, peak_live_bytes
 
 
 def _compile(f, *specs):
@@ -65,3 +65,72 @@ def test_dot_bytes_accounts_operands_and_output():
     t = analyse_hlo(_compile(f, a, b).as_text())
     expected = 4 * (32 * 64 + 64 * 128 + 32 * 128)
     assert t.dot_bytes == expected
+
+
+# ---------------------------------------------------------------------------
+# peak_live_bytes: buffer-assignment-style liveness walk (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+_SYNTH_HLO = """\
+HloModule synth
+
+ENTRY %main (p0: f32[100,100], p1: f32[100,100]) -> f32[100,100] {
+  %p0 = f32[100,100]{1,0} parameter(0)
+  %p1 = f32[100,100]{1,0} parameter(1)
+  %dot.0 = f32[100,100]{1,0} dot(f32[100,100]{1,0} %p0, f32[100,100]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %dot.1 = f32[100,100]{1,0} dot(f32[100,100]{1,0} %dot.0, f32[100,100]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %add.0 = f32[100,100]{1,0} add(f32[100,100]{1,0} %dot.1, f32[100,100]{1,0} %dot.0)
+}
+"""
+
+
+def test_peak_live_bytes_synthetic_exact():
+    """Hand-built straight-line HLO: dot.0 (40kB) stays live through add.0
+    (its last use), so the peak is dot.0 + dot.1 + add.0 = 120kB of temps;
+    with params, + 80kB."""
+    buf = 4 * 100 * 100
+    assert peak_live_bytes(_SYNTH_HLO) == 3 * buf
+    assert peak_live_bytes(_SYNTH_HLO, include_params=True) == 5 * buf
+
+
+def test_peak_live_bytes_frees_dead_buffers():
+    """A chain a->b->c frees each link after its last use: peak is two live
+    links, not the whole chain."""
+    hlo = """\
+HloModule chain
+
+ENTRY %main (p0: f32[100,100]) -> f32[100,100] {
+  %p0 = f32[100,100]{1,0} parameter(0)
+  %dot.0 = f32[100,100]{1,0} dot(f32[100,100]{1,0} %p0, f32[100,100]{1,0} %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %dot.1 = f32[100,100]{1,0} dot(f32[100,100]{1,0} %dot.0, f32[100,100]{1,0} %dot.0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %dot.2 = f32[100,100]{1,0} dot(f32[100,100]{1,0} %dot.1, f32[100,100]{1,0} %dot.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    assert peak_live_bytes(hlo) == 2 * 4 * 100 * 100
+
+
+def test_peak_live_bytes_fused_contraction_below_materialized():
+    """The property the bench records: a K-stacked tangent contraction that
+    materializes the (K, M, N) stack must peak strictly above the
+    reassociated contraction of the same estimate."""
+    K, M, N, r = 8, 64, 64, 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (M, M))
+    w = jax.random.normal(ks[1], (M, N))
+    gy = jax.random.normal(ks[2], (M, N))
+    ads = jax.random.normal(ks[3], (K, M, r))
+    bds = jax.random.normal(ks[4], (K, r, N))
+
+    def materialized(ads, bds):
+        ydots = (x @ ads) @ bds                       # (K, M, N)
+        return jnp.einsum("mn,kmn->k", gy, ydots)
+
+    def fused(ads, bds):
+        z1 = gy @ jnp.swapaxes(bds, 1, 2)             # (K, M, r)
+        return jnp.einsum("kmr,kmr->k", z1, x @ ads)
+
+    pm = peak_live_bytes(
+        jax.jit(materialized).lower(ads, bds).compile().as_text())
+    pf = peak_live_bytes(
+        jax.jit(fused).lower(ads, bds).compile().as_text())
+    assert pf < pm, (pf, pm)
