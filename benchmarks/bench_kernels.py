@@ -351,6 +351,72 @@ def _bench_mixer_ksweep(k_values, print_csv):
     return out
 
 
+def _bench_fullmodel_ksweep(k_values, print_csv):
+    """FULL-model fused-vs-standard sweep (ISSUE 5): the registry lm/cls
+    training losses — whose final mixer site now sits OUTSIDE the layer
+    scan (split-forward refactor) — estimated with and without
+    ``fused_contraction``. Reports wall time and the compiled program's
+    peak-live-bytes for both routes; the fused route reverses the post-head
+    once and contracts the site's K tangent columns without materializing
+    them (nor pushing K stacked tangents through the loss head)."""
+    from repro.configs import SpryConfig, get_config, reduce_config
+    from repro.models.registry import get_loss_fn, get_model
+    from repro.peft import init_peft
+
+    out = {}
+    B, S = 2, 64
+    for arch, task in (("llama2-7b", "cls"), ("llama2-7b", "lm"),
+                       ("rwkv6-1.6b", "lm")):
+        cfg = reduce_config(get_config(arch))
+        key = jax.random.PRNGKey(3)
+        model = get_model(cfg)
+        base = model.init_base(cfg, key)
+        peft = jax.tree.map(lambda x: x.astype(jnp.float32),
+                            init_peft(cfg, key, SpryConfig()))
+        batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+                 "labels": jax.random.randint(key, (B,), 0, cfg.n_classes)}
+
+        def plain(p, batch=batch, cfg=cfg, base=base, task=task):
+            return get_loss_fn(task)(cfg, base, p, batch)
+
+        split = get_loss_fn(task, split=True)(cfg, base, batch)
+        rows = []
+        for K in k_values:
+            std = jax.jit(lambda k_, p, K=K: forward_gradient(
+                plain, p, k_, k_perturbations=K))
+            fused = jax.jit(lambda k_, p, K=K, split=split: forward_gradient(
+                split, p, k_, k_perturbations=K, fused_contraction=True))
+            _, _, j_s = std(key, peft)
+            _, _, j_f = fused(key, peft)
+            jvp_err = float(jnp.abs(j_f - j_s).max()
+                            / (jnp.abs(j_s).max() + 1e-12))
+            t_std = _time(std, key, peft)
+            t_fused = _time(fused, key, peft)
+            peak_std = peak_live_bytes(
+                std.lower(key, peft).compile().as_text())
+            peak_fused = peak_live_bytes(
+                fused.lower(key, peft).compile().as_text())
+            rows.append({
+                "K": K,
+                "standard_us": t_std * 1e6,
+                "fused_us": t_fused * 1e6,
+                "ratio_time_fused_vs_standard": t_fused / t_std,
+                "peak_live_mb_standard": peak_std / 1e6,
+                "peak_live_mb_fused": peak_fused / 1e6,
+                "ratio_peak_fused_vs_standard": peak_fused / peak_std,
+                "jvp_rel_err": jvp_err,
+            })
+            if print_csv:
+                print(f"kernel/fg_fullmodel/{arch}/{task}/K={K},"
+                      f"{t_fused*1e6:.0f},time_ratio={t_fused/t_std:.2f} "
+                      f"peak_std={peak_std/1e6:.1f}MB "
+                      f"peak_fused={peak_fused/1e6:.1f}MB "
+                      f"peak_ratio={peak_fused/peak_std:.2f} "
+                      f"jvp_err={jvp_err:.1e}")
+        out[f"{arch}/{task}"] = rows
+    return out
+
+
 def main(print_csv=True, quick=False, json_path=None):
     x, w, peft = _problem()
     result = {
@@ -361,6 +427,8 @@ def main(print_csv=True, quick=False, json_path=None):
         "mixer_shapes": {"B": MB, "S": MS, "H": MH, "hd": MHD},
         "fg_mixer_ksweep": _bench_mixer_ksweep(
             (1, 8) if quick else (1, 2, 4, 8), print_csv),
+        "fg_fullmodel": _bench_fullmodel_ksweep(
+            (1, 8) if quick else (1, 4, 8), print_csv),
     }
     k8 = next((r for r in result["fg_ksweep"] if r["K"] == 8), None)
     if k8 is not None:
@@ -408,6 +476,31 @@ def main(print_csv=True, quick=False, json_path=None):
                       f"required) pass={mixer_acc[mixer]['pass']}")
     if mixer_acc:
         result["mixer_acceptance"] = mixer_acc
+    # CPU-mirror scope: the swa 'jnp' contract materializes-and-contracts
+    # (the no-tangent-stack property of the swa epilogue is kernel-backend
+    # only — see kernels/dispatch.py), so the dense rows are informational;
+    # the wkv6 mirror realizes the reduction on CPU too and gates the
+    # acceptance. On TPU all site families run the in-kernel epilogues.
+    rows_rwkv = result["fg_fullmodel"].get("rwkv6-1.6b/lm", [])
+    k8f = next((r for r in rows_rwkv if r["K"] == 8), None)
+    if k8f is not None:
+        result["fullmodel_acceptance"] = {
+            "criterion": ("full-model (registry lm_loss, split forward) "
+                          "fused K=8 records lower peak live bytes than "
+                          "the materializing engine (CPU mirrors; wkv6 "
+                          "family — the swa jnp mirror "
+                          "materializes-and-contracts by design)"),
+            "ratio_peak_fused_vs_standard":
+                k8f["ratio_peak_fused_vs_standard"],
+            "ratio_time_fused_vs_standard":
+                k8f["ratio_time_fused_vs_standard"],
+            "pass": k8f["ratio_peak_fused_vs_standard"] < 1.0,
+        }
+        if print_csv:
+            print(f"kernel/fg_fullmodel/acceptance,0,"
+                  f"rwkv6 lm K=8 peak_ratio="
+                  f"{k8f['ratio_peak_fused_vs_standard']:.2f} (<1 required)"
+                  f" pass={result['fullmodel_acceptance']['pass']}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(result, f, indent=2)

@@ -1,0 +1,113 @@
+"""Validate the machine-readable BENCH JSON artifacts against their schemas.
+
+The CI bench job generates BENCH_kernels.json / BENCH_round.json on every PR
+(quick tiny-shape sweeps) and runs this checker so artifact breakage — a
+renamed key, a dropped sweep, a sweep that silently produced no rows — is
+caught at PR time instead of by the weekly FULL job's consumers.
+
+    PYTHONPATH=src python -m benchmarks.check_schemas \
+        [BENCH_kernels.json] [BENCH_round.json]
+
+Exit code 0 iff both files conform. Schemas are minimal-required: extra keys
+are always allowed (sweeps grow), missing ones fail.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+_KERNEL_KSWEEP_ROW = {
+    "K", "sequential_columnwise_us", "sequential_fused_loop_us",
+    "batched_engine_us", "batched_fused_us", "peak_live_mb_materialized",
+    "peak_live_mb_fused", "ratio_peak_fused_vs_materialized",
+}
+
+_MIXER_ROW = {
+    "K", "sequential_columnwise_us", "batched_engine_us", "batched_fused_us",
+    "ratio_batched_vs_columnwise", "peak_live_mb_materialized",
+    "peak_live_mb_fused", "jvp_rel_err",
+}
+
+_FULLMODEL_ROW = {
+    "K", "standard_us", "fused_us", "ratio_time_fused_vs_standard",
+    "peak_live_mb_standard", "peak_live_mb_fused",
+    "ratio_peak_fused_vs_standard", "jvp_rel_err",
+}
+
+_ROUND_RESULT_ROW = {
+    "comm_mode", "executor", "n_devices", "wire", "cohort", "rounds_per_sec",
+    "sec_per_round", "bytes_up", "bytes_down",
+}
+
+
+def _require(cond, msg, errors):
+    if not cond:
+        errors.append(msg)
+
+
+def _check_rows(rows, required, where, errors):
+    _require(isinstance(rows, list) and rows, f"{where}: empty or not a list",
+             errors)
+    for i, row in enumerate(rows or []):
+        missing = required - set(row)
+        _require(not missing, f"{where}[{i}]: missing keys {sorted(missing)}",
+                 errors)
+
+
+def check_kernels(doc) -> list:
+    errors = []
+    for key in ("shapes", "jvp_vs_forward", "fg_ksweep", "fg_mixer_ksweep",
+                "fg_fullmodel"):
+        _require(key in doc, f"BENCH_kernels: missing top-level {key!r}",
+                 errors)
+    _check_rows(doc.get("fg_ksweep", []), _KERNEL_KSWEEP_ROW, "fg_ksweep",
+                errors)
+    mixers = doc.get("fg_mixer_ksweep", {})
+    _require(isinstance(mixers, dict) and {"rwkv6", "swa"} <= set(mixers),
+             "fg_mixer_ksweep: must cover rwkv6 and swa", errors)
+    for mixer, rows in (mixers or {}).items():
+        _check_rows(rows, _MIXER_ROW, f"fg_mixer_ksweep[{mixer}]", errors)
+    fullmodel = doc.get("fg_fullmodel", {})
+    _require(isinstance(fullmodel, dict) and fullmodel,
+             "fg_fullmodel: must be a non-empty dict of arch/task sweeps",
+             errors)
+    for name, rows in (fullmodel or {}).items():
+        _check_rows(rows, _FULLMODEL_ROW, f"fg_fullmodel[{name}]", errors)
+    return errors
+
+
+def check_round(doc) -> list:
+    errors = []
+    _require("round_bench" in doc, "BENCH_round: missing 'round_bench'",
+             errors)
+    benches = doc.get("round_bench", [])
+    _require(isinstance(benches, list) and benches,
+             "round_bench: empty or not a list", errors)
+    for i, bench in enumerate(benches or []):
+        for key in ("arch", "peft_params", "k_perturbations", "results"):
+            _require(key in bench, f"round_bench[{i}]: missing {key!r}",
+                     errors)
+        _check_rows(bench.get("results", []), _ROUND_RESULT_ROW,
+                    f"round_bench[{i}].results", errors)
+    return errors
+
+
+def main(kernels_path="BENCH_kernels.json", round_path="BENCH_round.json"):
+    errors = []
+    try:
+        errors += check_kernels(json.load(open(kernels_path)))
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"{kernels_path}: unreadable ({e})")
+    try:
+        errors += check_round(json.load(open(round_path)))
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"{round_path}: unreadable ({e})")
+    for err in errors:
+        print(f"SCHEMA ERROR: {err}")
+    if not errors:
+        print(f"ok: {kernels_path} and {round_path} conform")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

@@ -22,6 +22,7 @@ from repro.core.assignment import (
 from repro.core.spry import (
     SpryState,
     aggregate_payloads,
+    estimator_route,
     init_state,
     make_client_jvp_fn,
     make_client_update_fn,
@@ -29,4 +30,5 @@ from repro.core.spry import (
     make_rebuild_fn,
     make_round_step,
     make_round_step_per_iteration,
+    make_task_loss,
 )

@@ -58,6 +58,7 @@ contraction.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -106,12 +107,14 @@ class SplitLoss:
 
     ``kind`` selects the site op and its tangent-contraction epilogue:
 
-        'lora'  site_args = (x, w, a, b), static ``scale``
-                -> dispatch.lora_proj / lora_jvp_contract
-        'wkv6'  site_args = (r, k, v, w, u)
-                -> dispatch.wkv6_mix / wkv6_jvp_contract
-        'swa'   site_args = (q, k, v), static ``window``
-                -> dispatch.swa_attend / swa_jvp_contract
+        'lora'    site_args = (x, w, a, b), static ``scale``
+                  -> dispatch.lora_proj / lora_jvp_contract
+        'wkv6'    site_args = (r, k, v, w, u)
+                  -> dispatch.wkv6_mix / wkv6_jvp_contract
+        'swa'     site_args = (q, k, v), static ``window``
+                  -> dispatch.swa_attend / swa_jvp_contract
+        'mamba2'  site_args = (xdt, bmat, cmat, decay)
+                  -> dispatch.mamba2_mix / mamba2_jvp_contract
 
     ``ctx`` is any tangent-carrying side output of ``pre`` the post-head
     also needs (residual streams, aux losses; None if none). Calling the
@@ -123,12 +126,18 @@ class SplitLoss:
     ``x_has_tangent=False`` (lora only) declares that x does NOT depend on
     the trainable tree — the projection is the first perturbed unit — which
     statically removes the input-tangent GEMMs from the epilogue kernel.
+
+    ``site_fn`` optionally overrides the kind-based site PRIMAL (the
+    contraction epilogue is still selected by ``kind``): the registry's
+    full-model split losses pass the family's backend-gated mixer here so
+    the SplitLoss traces exactly the same program as the plain loss closure
+    (bitwise-equal values on every backend).
     """
 
     def __init__(self, pre: Callable, kind: str, post: Callable, *,
                  scale: float = 1.0, window: Optional[int] = None,
-                 x_has_tangent: bool = True):
-        if kind not in ("lora", "wkv6", "swa"):
+                 x_has_tangent: bool = True, site_fn: Optional[Callable] = None):
+        if kind not in ("lora", "wkv6", "swa", "mamba2"):
             raise ValueError(f"unknown site kind {kind!r}")
         self.pre = pre
         self.kind = kind
@@ -136,12 +145,17 @@ class SplitLoss:
         self.scale = scale
         self.window = window
         self.x_has_tangent = x_has_tangent
+        self.site_fn = site_fn
 
     def site(self, args):
+        if self.site_fn is not None:
+            return self.site_fn(args)
         if self.kind == "lora":
             return dispatch.lora_proj(*args, self.scale)
         if self.kind == "wkv6":
             return dispatch.wkv6_mix(*args)
+        if self.kind == "mamba2":
+            return dispatch.mamba2_mix(*args)
         return dispatch.swa_attend(*args, self.window)
 
     def __call__(self, p):
@@ -167,7 +181,10 @@ def fused_linearize(loss_fn: SplitLoss, peft32):
     epilogue call — no (K, ..., N) tangent output exists at the site."""
     with forward_ad_region():
         (site_args, ctx), pre_lin = jax.linearize(loss_fn.pre, peft32)
-    y = loss_fn.site(site_args)
+        # site primal evaluated in the SAME trace context as the standard
+        # route's linearize, so backend-gated site_fns (the registry's
+        # model mixers) pick the same branch on both routes — loss bitwise
+        y = loss_fn.site(site_args)
     loss, post_vjp = jax.vjp(loss_fn.post, y, ctx, peft32)
     gy, g_ctx, g_p = post_vjp(jnp.ones_like(loss))
 
@@ -192,12 +209,46 @@ def fused_linearize(loss_fn: SplitLoss, peft32):
             val = val + _tree_vdot(zw, wd)
         elif loss_fn.kind == "wkv6":
             val = dispatch.wkv6_jvp_contract(gy, *site_args, *argdots)
+        elif loss_fn.kind == "mamba2":
+            val = dispatch.mamba2_jvp_contract(gy, *site_args, *argdots)
         else:
             val = dispatch.swa_jvp_contract(gy, *site_args, *argdots,
                                             loss_fn.window)
         return val + _tree_vdot(g_ctx, ctxdot) + _tree_vdot(g_p, v)
 
     return loss, jvp_of
+
+
+# losses already warned about once when fused_contraction was requested but
+# the loss declares no final mixer site. Keyed by the function's definition
+# site (code object location), not its __name__: distinct lambdas/partials
+# each warn once, while per-trace re-creations of the same closure do not.
+_warned_unsplit_losses: set = set()
+
+
+def _unsplit_key(loss_fn):
+    fn = getattr(loss_fn, "func", loss_fn)       # unwrap functools.partial
+    code = getattr(fn, "__code__", None)
+    if code is not None:
+        return (code.co_filename, code.co_firstlineno)
+    return (type(fn).__module__, type(fn).__qualname__)
+
+
+def _warn_unsplit_fallback(loss_fn):
+    fn = getattr(loss_fn, "func", loss_fn)
+    name = (getattr(fn, "__name__", None) or getattr(loss_fn, "__name__", None)
+            or type(loss_fn).__name__)
+    key = _unsplit_key(loss_fn)
+    if key in _warned_unsplit_losses:
+        return
+    _warned_unsplit_losses.add(key)
+    warnings.warn(
+        f"fused_contraction=True was requested but loss {name!r} does not "
+        f"declare a final mixer site (not a SplitLoss); taking the standard "
+        f"materializing tangent route instead. Build the loss with "
+        f"repro.models.registry.get_loss_fn(task, split=True) to run the "
+        f"fused jvp-contraction epilogues.",
+        stacklevel=3)
 
 
 def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
@@ -216,8 +267,9 @@ def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
     (declares its final mixer site), the site's K tangent outputs are
     contracted against the post-head cotangent inside the kernel instead of
     being materialized (see module docstring). A plain callable loss_fn
-    silently keeps the standard route — the knob is a capability, not a
-    requirement.
+    keeps the standard route with a one-time ``UserWarning`` naming the
+    loss and the route taken (the registry's ``get_loss_fn(task,
+    split=True)`` builders produce fused-capable losses for every family).
 
     ``jvp_clip`` (beyond-paper stabiliser): clamp the jvp scalar to
     [-c, c] before forming jvp*v — bounds the update magnitude of outlier
@@ -228,6 +280,8 @@ def forward_gradient(loss_fn, peft, key, k_perturbations=1, mask_tree=None,
     K = int(k_perturbations)
     tb = K if tangent_batch is None else max(1, min(int(tangent_batch), K))
     fused = fused_contraction and isinstance(loss_fn, SplitLoss)
+    if fused_contraction and not fused:
+        _warn_unsplit_fallback(loss_fn)
 
     def clip(jvps):
         if jvp_clip is not None:

@@ -69,6 +69,31 @@ def init_state(base, peft) -> SpryState:
 # Client-side pieces
 # ---------------------------------------------------------------------------
 
+def make_task_loss(cfg, spry_cfg, task, base, batch):
+    """The client objective as a function of the peft tree only. With
+    ``spry_cfg.fused_contraction`` the registry's SplitLoss builder is used
+    (the final mixer site is declared, so the estimator runs the in-kernel
+    jvp-contraction epilogues); otherwise the plain closure. Both trace the
+    identical loss program — the split is a capability, not a numerics
+    change."""
+    if spry_cfg.fused_contraction:
+        return get_loss_fn(task, split=True)(
+            cfg, base, batch, lora_scale=spry_cfg.lora_alpha)
+    loss_fn_kind = get_loss_fn(task)
+
+    def loss_of(p):
+        return loss_fn_kind(cfg, base, p, batch,
+                            lora_scale=spry_cfg.lora_alpha)
+    return loss_of
+
+
+def estimator_route(spry_cfg) -> str:
+    """The gradient-estimator route the client fns take ('fused' = in-kernel
+    jvp-contraction at the final mixer site; 'standard' = materialize tangent
+    outputs then contract). Surfaced in round metrics / train-loop logs."""
+    return "fused" if spry_cfg.fused_contraction else "standard"
+
+
 def make_client_update_fn(cfg, spry_cfg, task: str = "cls"):
     """Per-epoch client computation (paper Alg. 1 lines 6-13).
 
@@ -79,7 +104,6 @@ def make_client_update_fn(cfg, spry_cfg, task: str = "cls"):
     is the client's position in the round (the fold_in chain the server
     shares), ``delta`` the masked weight change — the per-epoch wire payload.
     """
-    loss_fn_kind = get_loss_fn(task)
     K = spry_cfg.k_perturbations
     lr_l = spry_cfg.local_lr
 
@@ -91,9 +115,8 @@ def make_client_update_fn(cfg, spry_cfg, task: str = "cls"):
 
         def grad_of(peft_c, ikey):
             if mb is None or mb >= client_batch["tokens"].shape[0]:
-                def loss_of(p):
-                    return loss_fn_kind(cfg, base, p, client_batch,
-                                        lora_scale=spry_cfg.lora_alpha)
+                loss_of = make_task_loss(cfg, spry_cfg, task, base,
+                                         client_batch)
                 return forward_gradient(
                     loss_of, peft_c, ikey, k_perturbations=K,
                     mask_tree=mask_tree, jvp_clip=spry_cfg.jvp_clip,
@@ -111,9 +134,7 @@ def make_client_update_fn(cfg, spry_cfg, task: str = "cls"):
 
             def mb_step(acc, xs):
                 i, one = xs
-                def loss_of(p):
-                    return loss_fn_kind(cfg, base, p, one,
-                                        lora_scale=spry_cfg.lora_alpha)
+                loss_of = make_task_loss(cfg, spry_cfg, task, base, one)
                 loss, g, jvps = forward_gradient(
                     loss_of, peft_c, jax.random.fold_in(ikey, i),
                     k_perturbations=K, mask_tree=mask_tree,
@@ -155,7 +176,6 @@ def make_client_jvp_fn(cfg, spry_cfg, task: str = "cls"):
     Returns ``client_jvp(base, peft, round_key, seed_id, mask_row,
     client_batch) -> (loss, jvps)``.
     """
-    loss_fn_kind = get_loss_fn(task)
     K = spry_cfg.k_perturbations
 
     def client_jvp(base, peft, round_key, seed_id, mask_row, client_batch):
@@ -163,10 +183,7 @@ def make_client_jvp_fn(cfg, spry_cfg, task: str = "cls"):
         mask_tree = build_mask_tree(peft, index, mask_row)
         ckey = jax.random.fold_in(round_key, seed_id)
         ikey = jax.random.fold_in(ckey, 0)
-
-        def loss_of(p):
-            return loss_fn_kind(cfg, base, p, client_batch,
-                                lora_scale=spry_cfg.lora_alpha)
+        loss_of = make_task_loss(cfg, spry_cfg, task, base, client_batch)
 
         loss, _, jvps = forward_gradient(
             loss_of, peft, ikey, k_perturbations=K, mask_tree=mask_tree,
@@ -262,6 +279,9 @@ def make_round_step(cfg, spry_cfg, task: str = "cls", split: bool = True):
             "loss": losses.mean(),
             "jvp_abs_mean": jnp.abs(jvps).mean(),
             "delta_norm": jnp.sqrt(sum(jnp.sum(d * d) for d in jax.tree.leaves(delta))),
+            # active estimator route (1.0 = fused jvp-contraction epilogues
+            # at the final mixer site, 0.0 = standard materializing route)
+            "fused_route": jnp.float32(spry_cfg.fused_contraction),
         }
         return SpryState(base, new_peft, server, state.round_idx + 1), metrics
 
@@ -305,7 +325,8 @@ def make_round_step_per_iteration(cfg, spry_cfg, task: str = "cls"):
         new_peft, server = server_update(
             spry_cfg.server_opt, peft, delta, state.server,
             lr=spry_cfg.server_lr)
-        metrics = {"loss": losses.mean(), "jvp_abs_mean": jnp.abs(jvps).mean()}
+        metrics = {"loss": losses.mean(), "jvp_abs_mean": jnp.abs(jvps).mean(),
+                   "fused_route": jnp.float32(spry_cfg.fused_contraction)}
         return SpryState(base, new_peft, server, state.round_idx + 1), metrics
 
     return round_step

@@ -165,6 +165,9 @@ class FederationEngine:
             "loss": (losses * keep).sum() / n_kept,
             "jvp_abs_mean": (jnp.abs(jvps_flat) * keep[:, None]).sum()
             / (n_kept * jvps_flat.shape[-1]),
+            # active estimator route (matches make_round_step's metrics so
+            # the ideal-round bit-identity contract extends to telemetry)
+            "fused_route": jnp.float32(self.spry_cfg.fused_contraction),
         }
         if self.comm_mode == "per_epoch":
             metrics["delta_norm"] = jnp.sqrt(

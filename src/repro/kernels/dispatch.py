@@ -638,6 +638,48 @@ def wkv6_jvp_contract(gy, r, k, v, w, u, rd, kd, vd, wd, ud=None):
 
 
 @functools.lru_cache(maxsize=None)
+def _mamba2_contract_fn(backend: str):
+    """Single-tangent <gy, mamba2-ydot>, custom-vmapped onto
+    ``mamba2_scan_mt_jvps`` (per-token contraction inside the state walk) on
+    kernel backends; jnp mirror materializes-and-contracts (XLA fuses)."""
+    if backend not in ("pallas", "interpret"):
+        def jnp_base(gy, xdt, bm, cm, dec, xd, bd, cd, dd):
+            yd = jax.jvp(lambda *p: mamba2_scan_ref(*p)[0],
+                         (xdt, bm, cm, dec), (xd, bd, cd, dd))[1]
+            return _vdot32(gy, yd)
+        return jnp_base
+
+    interpret = backend == "interpret"
+
+    def base(gy, xdt, bm, cm, dec, xd, bd, cd, dd):
+        return mamba2_ops.mamba2_scan_mt_jvps(
+            xdt, bm, cm, dec, xd[None], bd[None], cd[None], dd[None], gy,
+            interpret=interpret)[0]
+
+    f = custom_vmap(base)
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, gy, xdt, bm, cm, dec, xd, bd, cd, dd):
+        if not any(in_batched[:5]):
+            xd, bd, cd, dd = _stack_tangents(axis_size, (xd, bd, cd, dd),
+                                             in_batched[5:])
+            return mamba2_ops.mamba2_scan_mt_jvps(
+                xdt, bm, cm, dec, xd, bd, cd, dd, gy,
+                interpret=interpret), True
+        return _map_fallback(axis_size, in_batched,
+                             (gy, xdt, bm, cm, dec, xd, bd, cd, dd), base)
+    return f
+
+
+def mamba2_jvp_contract(gy, xdt, bm, cm, dec, xd, bd, cd, dd):
+    """jvp partial of a Mamba2 mixer site against a known cotangent:
+    <gy, ydot>. Batched tangents lower to ONE ``mamba2_scan_mt_jvps``
+    epilogue call — no (K, B, S, H, hd) tangent output."""
+    return _mamba2_contract_fn(get_backend())(gy, xdt, bm, cm, dec, xd, bd,
+                                              cd, dd)
+
+
+@functools.lru_cache(maxsize=None)
 def _swa_contract_fn(window, backend: str):
     """Single-tangent <gy, swa-outd>, custom-vmapped onto
     ``swa_attention_mt_jvps`` (per-query-block contraction at the end of

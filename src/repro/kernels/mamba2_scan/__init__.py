@@ -1,6 +1,11 @@
 from repro.kernels.mamba2_scan.ops import (
     mamba2_scan,
     mamba2_scan_mt,
+    mamba2_scan_mt_jvps,
     mamba2_scan_mt_tangents,
 )
-from repro.kernels.mamba2_scan.ref import mamba2_scan_mt_ref, mamba2_scan_ref
+from repro.kernels.mamba2_scan.ref import (
+    mamba2_scan_mt_jvps_ref,
+    mamba2_scan_mt_ref,
+    mamba2_scan_ref,
+)

@@ -125,6 +125,100 @@ def _mt_kernel(x_ref, b_ref, c_ref, d_ref, xd_ref, bd_ref, cd_ref, dd_ref,
     jax.lax.fori_loop(0, block_s, step, ())
 
 
+def _mt_jvps_kernel(x_ref, b_ref, c_ref, d_ref, xd_ref, bd_ref, cd_ref,
+                    dd_ref, gy_ref, out_ref, state_scr, state_d_scr, acc_j,
+                    *, block_s: int, n_s: int, n_t: int):
+    """Contraction epilogue: the same primal-state / tangent-state walk as
+    ``_mt_kernel``, but each per-token ydot_t is contracted against the
+    incoming gy token on the spot — accumulated into a (T, hd) VMEM partial
+    — instead of being written to HBM. Only a (1, T) per-row partial leaves
+    the kernel at the last sequence block."""
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+        state_d_scr[...] = jnp.zeros_like(state_d_scr)
+        acc_j[...] = jnp.zeros_like(acc_j)
+
+    def step(t, _):
+        xt = x_ref[0, t, :]                         # (hd,)
+        bt = b_ref[0, t, :]                         # (N,)
+        ct = c_ref[0, t, :]
+        dct = d_ref[0, t]
+        gt = gy_ref[0, t, :].astype(jnp.float32)
+        s = state_scr[...]                          # (hd, N)
+        h = dct * s + xt[:, None] * bt[None, :]
+        # each tangent lane re-reads the pre-update state s and runs the
+        # exact op sequence of the T=1 slice on its own scratch row ->
+        # stacked partials are bitwise-equal to T single-tangent passes
+        for tau in range(n_t):                      # static unroll over T
+            xdt_t = xd_ref[tau, 0, t, :]
+            bdt = bd_ref[tau, 0, t, :]
+            cdt = cd_ref[tau, 0, t, :]
+            ddt = dd_ref[tau, 0, t]
+            sd = state_d_scr[tau]                   # (hd, N)
+            hd_t = (ddt * s + dct * sd + xdt_t[:, None] * bt[None, :]
+                    + xt[:, None] * bdt[None, :])
+            ydt = ((hd_t * ct[None, :]).sum(axis=1)
+                   + (h * cdt[None, :]).sum(axis=1))
+            state_d_scr[tau] = hd_t
+            acc_j[tau] += gt * ydt                  # contract, never store
+        state_scr[...] = h
+        return ()
+
+    jax.lax.fori_loop(0, block_s, step, ())
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        out_ref[0, :] = acc_j[...].sum(axis=1)
+
+
+def mamba2_scan_mt_jvps_kernel(xdt, bmat, cmat, decay, xdtds, bds, cds,
+                               decayds, gy, *, n_heads: int, block_s: int = 64,
+                               interpret=True):
+    """Fused jvp-contraction epilogue of the multi-tangent Mamba2
+    recurrence: all T scalars <gy, ydot_t> with NO (T, BH, S, hd) tangent
+    output — the per-token ydots are contracted against gy in VMEM as the
+    state walk produces them. Returns per-row partials (BH, T) fp32, summed
+    by the caller (ops.py). Same operand contract as
+    ``mamba2_scan_mt_kernel`` plus gy: (BH, S, hd)."""
+    BH, S, hd = xdt.shape
+    N = bmat.shape[-1]
+    T = xdtds.shape[0]
+    assert S % block_s == 0
+    n_s = S // block_s
+    grid = (BH, n_s)
+    kernel = functools.partial(_mt_jvps_kernel, block_s=block_s, n_s=n_s,
+                               n_t=T)
+    seq_spec = pl.BlockSpec((1, block_s, hd), lambda b, s: (b, s, 0))
+    seq_spec_t = pl.BlockSpec((T, 1, block_s, hd), lambda b, s: (0, b, s, 0))
+    bc_spec = pl.BlockSpec((1, block_s, N),
+                           lambda b, s: (b // n_heads, s, 0))
+    bcd_spec = pl.BlockSpec((T, 1, block_s, N),
+                            lambda b, s: (0, b // n_heads, s, 0))
+    in_specs = [
+        seq_spec, bc_spec, bc_spec,
+        pl.BlockSpec((1, block_s), lambda b, s: (b, s)),
+        seq_spec_t, bcd_spec, bcd_spec,
+        pl.BlockSpec((T, 1, block_s), lambda b, s: (0, b, s)),
+        seq_spec,                                   # gy
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, T), lambda b, s: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32),
+                        pltpu.VMEM((T, hd, N), jnp.float32),
+                        pltpu.VMEM((T, hd), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xdt, bmat, cmat, decay, xdtds, bds, cds, decayds, gy)
+
+
 def mamba2_scan_mt_kernel(xdt, bmat, cmat, decay, xdtds, bds, cds, decayds,
                           *, n_heads: int, block_s: int = 64, interpret=True,
                           emit_primal: bool = True):

@@ -7,6 +7,10 @@
 ``mamba2_scan_mt_tangents`` tangent-only variant (the AD dispatch route;
                             its primal output must come from the jnp mirror
                             so jax.linearize can split the custom-JVP rule)
+``mamba2_scan_mt_jvps``     fused contraction epilogue: all T scalars
+                            <gy, ydot_t> — per-token ydots are contracted
+                            against gy inside the kernel and never written
+                            to HBM (the cotangent-known estimator route)
 
 Tangent-axis contract: tangents carry a leading T axis — xdtds is
 (T, B, S, H, hd), bds/cds are (T, B, S, N), decayds is (T, B, S, H);
@@ -22,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.kernels.mamba2_scan.kernel import (
     mamba2_scan_kernel,
+    mamba2_scan_mt_jvps_kernel,
     mamba2_scan_mt_kernel,
 )
 
@@ -107,3 +112,26 @@ def mamba2_scan_mt_tangents(xdt, bmat, cmat, decay, xdtds, bds, cds, decayds,
                                 n_heads=H, block_s=bs, interpret=interpret,
                                 emit_primal=False)
     return yds[:, :, :S].reshape(T, B, H, S, hd).transpose(0, 1, 3, 2, 4)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def mamba2_scan_mt_jvps(xdt, bmat, cmat, decay, xdtds, bds, cds, decayds, gy,
+                        block_s: int = 64, interpret: bool = True):
+    """Fused jvp-contraction epilogue -> jvps (T,) fp32 = <gy, ydot_t>.
+
+    Same operand contract as ``mamba2_scan_mt`` plus the output cotangent
+    gy: (B,S,H,hd); the T tangent outputs are contracted inside the kernel
+    and never reach HBM (only (BH, T) per-row partials do)."""
+    T = xdtds.shape[0]
+    (xb, bb, cb, db), (B, S, H, hd, bs, pad) = _layout(
+        xdt, bmat, cmat, decay, block_s)
+    xdb, bdb, cdb, ddb = _layout_t(xdtds, bds, cds, decayds, T, B, S, H, hd,
+                                   pad)
+    # zero-padded gy rows contribute exactly 0 to every partial
+    gyb = gy.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    if pad:
+        gyb = jnp.pad(gyb, ((0, 0), (0, pad), (0, 0)))
+    parts = mamba2_scan_mt_jvps_kernel(xb, bb, cb, db, xdb, bdb, cdb, ddb,
+                                       gyb, n_heads=H, block_s=bs,
+                                       interpret=interpret)
+    return parts.sum(axis=0)

@@ -50,3 +50,14 @@ def mamba2_scan_mt_ref(xdt, bmat, cmat, decay, xdtds, bds, cds, decayds):
 
     yds = jax.vmap(one)((xdtds, bds, cds, decayds))
     return y, yds
+
+
+def mamba2_scan_mt_jvps_ref(xdt, bmat, cmat, decay, xdtds, bds, cds, decayds,
+                            gy):
+    """Oracle for the fused jvp-contraction epilogue: materializes all T
+    ydots via ``mamba2_scan_mt_ref`` and contracts them against the output
+    cotangent ``gy`` (B,S,H,hd) -> (T,) fp32."""
+    _, yds = mamba2_scan_mt_ref(xdt, bmat, cmat, decay, xdtds, bds, cds,
+                                decayds)
+    return jnp.einsum("bshd,tbshd->t", gy.astype(jnp.float32),
+                      yds.astype(jnp.float32))

@@ -20,7 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SpryConfig, get_config, reduce_config
-from repro.core import init_state, make_round_step, make_round_step_per_iteration
+from repro.core import (
+    estimator_route,
+    init_state,
+    make_round_step,
+    make_round_step_per_iteration,
+)
 from repro.core.baselines import make_backprop_round_step, make_zeroorder_round_step
 from repro.core.baselines.zeroorder import ZOState, init_zo_state
 from repro.data import make_task
@@ -127,6 +132,16 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
         seed=seed,
     )
 
+    route = estimator_route(sc)
+    if method in ("spry", "spry_periter", "fedfgd"):
+        # surface the active gradient-estimator route (satellite of the
+        # split-forward refactor: --fused-contraction no longer falls back
+        # silently — the registry split losses serve every family, and the
+        # estimator warns if it still receives an unsplittable loss)
+        log(f"[{method}] estimator route: {route}"
+            + (" (in-kernel jvp-contraction at the final mixer site)"
+               if route == "fused" else ""))
+
     rng = np.random.default_rng(seed)
 
     key = jax.random.PRNGKey(seed)
@@ -212,6 +227,9 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
             entry = {"round": r + 1, "acc": acc,
                      "loss": float(metrics["loss"]),
                      "t": time.time() - t0}
+            if "fused_route" in metrics:
+                entry["route"] = ("fused" if float(metrics["fused_route"])
+                                  else "standard")
             extra = ""
             if engine is not None:
                 entry["bytes_up"] = bytes_up_total

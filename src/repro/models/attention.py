@@ -152,18 +152,22 @@ def qkv(cfg, p, x, peft_layer, lora_scale):
     return q, k, v
 
 
-def attn_block_prefill_kv(cfg, p, x, peft_layer, lora_scale, *,
-                          is_global=True, positions=None, causal=True):
-    """attn_block_prefill that additionally returns the roped (k, v) rows —
-    exactly what decode would have inserted into the KV cache for these
-    positions. Used by the fused-prefill serve path."""
-    B, S, _ = x.shape
+def attn_site_qkv(cfg, p, x, peft_layer, lora_scale, *, positions=None,
+                  rope_cs=None):
+    """Roped + sharding-constrained (q, k, v) in model layout (B,S,H,hd) —
+    ``attn_block_prefill`` up to the sequence mixer. Shared by the prefill
+    block below and the split forwards (the mixer is the declared
+    fused-contraction site there). ``rope_cs``: precomputed rope tables
+    shared across layers (see ``common.rope_tables``)."""
+    S = x.shape[1]
     q, k, v = qkv(cfg, p, x, peft_layer, lora_scale)
-    if positions is None:
+    if positions is not None:
+        rope_cs = None   # precomputed tables encode positions 0..S-1 only
+    else:
         positions = jnp.arange(S)[None, :]
     if cfg.rope_theta:
-        q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
+        q = rope(q, positions, cfg.rope_theta, tables=rope_cs)
+        k = rope(k, positions, cfg.rope_theta, tables=rope_cs)
     # context-parallel hint: when the head count does not divide the model
     # axis (llama4: H=40, whisper: H=6), GSPMD falls back to sharding the
     # contraction (hd) dim and ALL-REDUCES the full score tensor per chunk
@@ -173,29 +177,65 @@ def attn_block_prefill_kv(cfg, p, x, peft_layer, lora_scale, *,
     q = constrain(q, "prefill_q")
     k = constrain(k, "prefill_kv")
     v = constrain(v, "prefill_kv")
-    window = None if is_global else cfg.window
-    if causal and dispatch.use_kernel_mixers():
-        # forward-gradient fast path: the dispatched op lowers K stacked
-        # tangents to the multi-tangent SWA Pallas kernel — one online-
-        # softmax walk over the primal q/k/v for all K perturbations. K/V
-        # stay at KV-head width (contiguous groups, no repeat).
-        out = dispatch.swa_attend(
-            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-            v.transpose(0, 2, 1, 3), window).transpose(0, 2, 1, 3)
-    else:
-        out = attend_prefill(q, k, v, window=window, causal=causal)
+    return q, k, v
+
+
+def swa_mixer_site(cfg, args, window):
+    """Causal GQA mixer on kernel-layout args (q (B,H,S,hd); k,v
+    (B,KV,S,hd)) with the model's backend gating: the dispatched op
+    (multi-tangent Pallas kernels inside the estimator's forward-AD region)
+    on kernel backends, the chunked/banded ``attend_prefill`` otherwise —
+    exactly the ops ``attn_block_prefill`` runs. The split forwards declare
+    this call as their fused-contraction site."""
+    q, k, v = args
+    if dispatch.use_kernel_mixers():
+        return dispatch.swa_attend(q, k, v, window)
+    out = attend_prefill(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), window=window, causal=True)
+    return out.transpose(0, 2, 1, 3)
+
+
+def attn_finish(cfg, p, out, peft_layer, lora_scale):
+    """Mixer output (B,S,H,hd) -> output projection (B,S,D) — the tail of
+    ``attn_block_prefill`` after the sequence mixer (the split forwards'
+    post side)."""
+    B, S = out.shape[:2]
     out = constrain(out, "prefill_q")
     out = out.reshape(B, S, cfg.n_heads * cfg.hd)
-    out = proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"),
-               lora_scale)
+    return proj(out, p["wo"], p.get("wo_b"), maybe_lora(peft_layer, "wo"),
+                lora_scale)
+
+
+def attn_block_prefill_kv(cfg, p, x, peft_layer, lora_scale, *,
+                          is_global=True, positions=None, causal=True,
+                          rope_cs=None):
+    """attn_block_prefill that additionally returns the roped (k, v) rows —
+    exactly what decode would have inserted into the KV cache for these
+    positions. Used by the fused-prefill serve path."""
+    q, k, v = attn_site_qkv(cfg, p, x, peft_layer, lora_scale,
+                            positions=positions, rope_cs=rope_cs)
+    window = None if is_global else cfg.window
+    if causal:
+        # the gated mixer site: the dispatched op lowers K stacked tangents
+        # to the multi-tangent SWA Pallas kernel on kernel backends — one
+        # online-softmax walk over the primal q/k/v for all K perturbations
+        # (K/V stay at KV-head width: contiguous groups, no repeat) — and
+        # the chunked jnp path otherwise
+        out = swa_mixer_site(
+            cfg, (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                  v.transpose(0, 2, 1, 3)), window).transpose(0, 2, 1, 3)
+    else:
+        out = attend_prefill(q, k, v, window=window, causal=causal)
+    out = attn_finish(cfg, p, out, peft_layer, lora_scale)
     return out, k, v
 
 
 def attn_block_prefill(cfg, p, x, peft_layer, lora_scale, *, is_global=True,
-                       positions=None, causal=True):
+                       positions=None, causal=True, rope_cs=None):
     out, _, _ = attn_block_prefill_kv(cfg, p, x, peft_layer, lora_scale,
                                       is_global=is_global,
-                                      positions=positions, causal=causal)
+                                      positions=positions, causal=causal,
+                                      rope_cs=rope_cs)
     return out
 
 

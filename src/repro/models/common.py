@@ -71,16 +71,47 @@ def activation(cfg, x):
 # RoPE
 # ---------------------------------------------------------------------------
 
-def rope(x, positions, theta):
-    """Rotary embedding. x: (..., S, H, hd); positions: (..., S) or scalar."""
+def rope(x, positions, theta, tables=None):
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S) or scalar.
+
+    ``tables``: optional precomputed (cos, sin) pair from ``rope_tables``
+    (positions are ignored then) — used by the train forwards so the scan
+    body and the split forwards' unrolled final layer share ONE table (see
+    ``rope_tables``)."""
     hd = x.shape[-1]
-    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
-    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, hd/2)
-    cos = jnp.cos(ang)[..., None, :]                                 # (..., S, 1, hd/2)
-    sin = jnp.sin(ang)[..., None, :]
+    if tables is None:
+        freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+        ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, hd/2)
+        cos = jnp.cos(ang)[..., None, :]                             # (..., S, 1, hd/2)
+        sin = jnp.sin(ang)[..., None, :]
+    else:
+        cos, sin = tables                                            # (S, hd/2)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return out.astype(x.dtype)
+
+
+def rope_tables(theta, seq, hd):
+    """(cos, sin) rope tables ((S, hd/2) fp32) for constant positions
+    0..S-1, computed ONCE per forward and shared by every layer. XLA
+    constant-folds transcendentals of constant operands with a different
+    code path than the runtime kernels, so computing cos/sin inside a scan
+    body AND inline (the split forwards' unrolled final layer) yields
+    ulp-different values — one shared table keeps the split forward
+    bitwise-equal to the fully-scanned one."""
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs        # (S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_tables_for(cfg, h):
+    """Forward-wide rope tables for hidden stream h (B,S,D), or None when
+    the config uses no rope (whisper's sinusoidal positions)."""
+    if not cfg.rope_theta:
+        return None
+    return rope_tables(cfg.rope_theta, h.shape[1], cfg.hd)
 
 
 def sinusoidal_positions(seq, d):
@@ -89,6 +120,34 @@ def sinusoidal_positions(seq, d):
     ang = pos / np.power(10000.0, 2 * dim / d)
     return jnp.asarray(
         np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Split forward: scan prefix + unrolled final layer
+# ---------------------------------------------------------------------------
+
+def scan_prefix_unroll_tail(body, init, xs, n_layers):
+    """Scan ``body`` over the first ``n_layers - 1`` stacked layer slices of
+    ``xs`` and hand the final layer back unrolled: returns
+    (carry_after_prefix, tail_slice) with ``tail_slice =
+    tree.map(lambda t: t[n_layers - 1], xs)``.
+
+    This is the shared skeleton of every family's split forward (registry
+    ``split_lm_loss`` / ``split_cls_loss``): the caller finishes the final
+    layer explicitly, exposing its sequence-mixer site to the estimator's
+    fused jvp-contraction route. Running the SAME scan ``body`` over the
+    prefix keeps the composition bitwise-identical to the full ``lax.scan``
+    over all layers (the body applies identical ops per layer either way).
+    """
+    head = jax.tree.map(lambda t: t[: n_layers - 1], xs)
+    tail = jax.tree.map(lambda t: t[n_layers - 1], xs)
+    carry, _ = jax.lax.scan(body, init, head)
+    return carry, tail
+
+
+def layer_slice(tree, i):
+    """Per-layer slice of a stacked parameter tree ({} stays {})."""
+    return jax.tree.map(lambda t: t[i], tree)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,9 @@ from repro.models import attention as attn
 from repro.models.common import (
     apply_norm,
     dense_init,
+    layer_slice,
     norm_params,
+    scan_prefix_unroll_tail,
     sinusoidal_positions,
 )
 from repro.models.mlp import mlp_block, mlp_params
@@ -67,15 +69,9 @@ def encode(cfg, base, frames, peft=None, lora_scale=1.0):
     return apply_norm(cfg, h, base["enc_norm"])
 
 
-def forward(cfg, base, peft, tokens, frames=None, lora_scale=1.0, memory=None):
-    """Teacher-forced decoder pass. Returns (hidden (B,S,D), aux)."""
-    if memory is None:
-        memory = encode(cfg, base, frames, peft, lora_scale)
-    S = tokens.shape[1]
-    h = jnp.take(base["embed"], tokens, axis=0)
-    h = h + sinusoidal_positions(S, cfg.d_model).astype(h.dtype)
-    peft_layers = (peft or {}).get("layers", {})
-
+def _decoder_body(cfg, memory, lora_scale):
+    """One full decoder layer as a scan body — shared by ``forward`` (all L
+    layers) and ``split_forward`` (the first L-1)."""
     def body(h, xs):
         lp, pl = xs
         hn = apply_norm(cfg, h, lp["ln1"])
@@ -87,8 +83,90 @@ def forward(cfg, base, peft, tokens, frames=None, lora_scale=1.0, memory=None):
         hn = apply_norm(cfg, h, lp["ln3"])
         h = h + mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale)
         return constrain(h, "prefill_h"), None
+    return body
 
-    h, _ = jax.lax.scan(body, h, (base["layers"], peft_layers))
+
+def _decoder_embed(cfg, base, tokens):
+    S = tokens.shape[1]
+    h = jnp.take(base["embed"], tokens, axis=0)
+    return h + sinusoidal_positions(S, cfg.d_model).astype(h.dtype)
+
+
+def forward_scanned(cfg, base, peft, tokens, frames=None, lora_scale=1.0,
+                    memory=None):
+    """Reference train forward: ONE ``lax.scan`` over all L decoder layers
+    (see ``transformer.forward_scanned`` for the ulp caveat vs
+    ``forward``)."""
+    if memory is None:
+        memory = encode(cfg, base, frames, peft, lora_scale)
+    h = _decoder_embed(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+    h, _ = jax.lax.scan(_decoder_body(cfg, memory, lora_scale), h,
+                        (base["layers"], peft_layers))
+    return apply_norm(cfg, h, base["final_norm"]), jnp.float32(0.0)
+
+
+def forward(cfg, base, peft, tokens, frames=None, lora_scale=1.0):
+    """Teacher-forced decoder pass as the split composition (scan L-1
+    decoder layers, unroll the final one around its self-attention mixer)
+    — identical program to the registry split losses. Returns
+    (hidden (B,S,D), aux)."""
+    site_args, ctx = split_forward(cfg, base, peft, tokens, frames=frames,
+                                   lora_scale=lora_scale)
+    y = mixer_site(cfg, site_args)
+    return split_post(cfg, base, y, ctx, peft, lora_scale=lora_scale)
+
+
+# ---------------------------------------------------------------------------
+# Split forward: scan L-1 decoder layers, unroll the final one up to its
+# self-attention mixer (cross-attn + MLP tail live in the post-head)
+# ---------------------------------------------------------------------------
+
+def split_site(cfg):
+    return "swa", {"window": None}
+
+
+def mixer_site(cfg, site_args):
+    """The final decoder layer's causal self-attention mixer on the split
+    site args (backend-gated; see ``attention.swa_mixer_site``)."""
+    return attn.swa_mixer_site(cfg, site_args, None)
+
+
+def split_forward(cfg, base, peft, tokens, frames=None, lora_scale=1.0):
+    """Split (train) forward: encoder + first L-1 decoder layers scanned,
+    final decoder layer unrolled up to its causal self-attention mixer.
+    Returns (site_args, ctx); the pre->site->post composition is
+    bitwise-identical to ``forward``."""
+    memory = encode(cfg, base, frames, peft, lora_scale)
+    h = _decoder_embed(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+    h, (lp, pl) = scan_prefix_unroll_tail(
+        _decoder_body(cfg, memory, lora_scale), h,
+        (base["layers"], peft_layers), cfg.n_layers)
+    hn = apply_norm(cfg, h, lp["ln1"])
+    q, k, v = attn.attn_site_qkv(cfg, lp["self_attn"], hn, pl or None,
+                                 lora_scale)
+    site_args = (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                 v.transpose(0, 2, 1, 3))
+    return site_args, {"h": h, "memory": memory}
+
+
+def split_post(cfg, base, y, ctx, peft, lora_scale=1.0):
+    """Post-head of the split forward: self-attn mixer output (B,H,S,hd) ->
+    (final hidden, aux). The final layer's cross-attention + MLP tail are
+    reversed once here by the fused estimator."""
+    lp = layer_slice(base["layers"], cfg.n_layers - 1)
+    pl = layer_slice((peft or {}).get("layers", {}), cfg.n_layers - 1)
+    h, memory = ctx["h"], ctx["memory"]
+    a = attn.attn_finish(cfg, lp["self_attn"], y.transpose(0, 2, 1, 3),
+                         pl or None, lora_scale)
+    h = h + a
+    hn = apply_norm(cfg, h, lp["ln2"])
+    h = h + attn.cross_attn_block(cfg, lp["cross_attn"], hn, memory,
+                                  pl or None, lora_scale)
+    hn = apply_norm(cfg, h, lp["ln3"])
+    h = h + mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale)
+    h = constrain(h, "prefill_h")
     return apply_norm(cfg, h, base["final_norm"]), jnp.float32(0.0)
 
 

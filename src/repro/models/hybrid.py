@@ -11,10 +11,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
-from repro.models.common import apply_norm, dense_init, norm_params
+from repro.models.common import (
+    apply_norm,
+    dense_init,
+    layer_slice,
+    norm_params,
+    rope_tables_for,
+    scan_prefix_unroll_tail,
+)
 from repro.models.mlp import mlp_block, mlp_params
 from repro.models.partitioning import constrain
-from repro.models.ssm import mamba2_mix, mamba2_params
+from repro.models.ssm import (
+    mamba2_finish,
+    mamba2_mix,
+    mamba2_mixer_site,
+    mamba2_params,
+    mamba2_preamble,
+)
 
 
 def n_attn_sites(cfg) -> int:
@@ -49,20 +62,20 @@ def unembed(cfg, base):
     return base["lm_head"]
 
 
-def _shared_block_prefill(cfg, shared, shared_peft, h, lora_scale):
+def _shared_block_prefill(cfg, shared, shared_peft, h, lora_scale,
+                          rope_cs=None):
     hn = apply_norm(cfg, h, shared["ln1"])
     h = h + attn.attn_block_prefill(cfg, shared["attn"], hn, shared_peft,
-                                    lora_scale, is_global=False)
+                                    lora_scale, is_global=False,
+                                    rope_cs=rope_cs)
     hn = apply_norm(cfg, h, shared["ln2"])
     return h + mlp_block(cfg, shared["mlp"], hn)
 
 
-def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
-    h = embed_tokens(cfg, base, tokens)
-    peft_layers = (peft or {}).get("layers", {})
-    shared_peft = (peft or {}).get("shared") or None
+def _train_body(cfg, base, shared_peft, lora_scale, rope_cs):
+    """One full hybrid layer as a scan body — shared by ``forward`` (all L
+    layers) and ``split_forward`` (the first L-1)."""
     every = cfg.hybrid_attn_every
-    idxs = jnp.arange(cfg.n_layers)
 
     def body(h, xs):
         lp, pl, idx = xs
@@ -72,12 +85,112 @@ def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
         h = jax.lax.cond(
             (idx % every) == (every - 1),
             lambda hh: _shared_block_prefill(cfg, base["shared"], shared_peft,
-                                             hh, lora_scale),
+                                             hh, lora_scale, rope_cs),
             lambda hh: hh,
             h)
         return constrain(h, "prefill_h"), None
+    return body
 
+
+def forward_scanned(cfg, base, peft, tokens, extra_embeds=None,
+                    lora_scale=1.0):
+    """Reference train forward: ONE ``lax.scan`` over all L layers (see
+    ``transformer.forward_scanned`` for the ulp caveat vs ``forward``)."""
+    h = embed_tokens(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+    shared_peft = (peft or {}).get("shared") or None
+    idxs = jnp.arange(cfg.n_layers)
+    body = _train_body(cfg, base, shared_peft, lora_scale,
+                       rope_tables_for(cfg, h))
     h, _ = jax.lax.scan(body, h, (base["layers"], peft_layers, idxs))
+    h = apply_norm(cfg, h, base["final_norm"])
+    return h, jnp.float32(0.0)
+
+
+def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    """Train forward as the split composition (scan L-1 layers, unroll the
+    final layer around its LAST mixer — shared attention or mamba2) —
+    identical program to the registry split losses."""
+    site_args, ctx = split_forward(cfg, base, peft, tokens,
+                                   lora_scale=lora_scale)
+    y = mixer_site(cfg, site_args)
+    return split_post(cfg, base, y, ctx, peft, lora_scale=lora_scale)
+
+
+# ---------------------------------------------------------------------------
+# Split forward: scan L-1 layers, unroll the final layer up to its mixer
+# ---------------------------------------------------------------------------
+
+def _final_is_attn(cfg) -> bool:
+    """True when the final layer ends with the shared attention block — its
+    mixer is then the swa site; otherwise the mamba2 recurrence is."""
+    every = cfg.hybrid_attn_every
+    return ((cfg.n_layers - 1) % every) == (every - 1)
+
+
+def split_site(cfg):
+    if _final_is_attn(cfg):
+        return "swa", {"window": cfg.window}
+    return "mamba2", {}
+
+
+def mixer_site(cfg, site_args):
+    """The final layer's last mixer on the split site args (backend-gated;
+    see ``attention.swa_mixer_site`` / ``ssm.mamba2_mixer_site``)."""
+    if _final_is_attn(cfg):
+        return attn.swa_mixer_site(cfg, site_args, cfg.window)
+    return mamba2_mixer_site(site_args)
+
+
+def split_forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    """Split (train) forward: scan the first L-1 layers, unroll the final
+    layer up to its LAST mixer — the shared attention block when the final
+    layer is an application site ((L-1) % every == every-1), the mamba2
+    recurrence otherwise. The pre->site->post composition is
+    bitwise-identical to ``forward``."""
+    h = embed_tokens(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+    shared_peft = (peft or {}).get("shared") or None
+    idxs = jnp.arange(cfg.n_layers)
+    rope_cs = rope_tables_for(cfg, h)
+    body = _train_body(cfg, base, shared_peft, lora_scale, rope_cs)
+    h, (lp, pl, _) = scan_prefix_unroll_tail(
+        body, h, (base["layers"], peft_layers, idxs), cfg.n_layers)
+    hn = apply_norm(cfg, h, lp["ln1"])
+    if _final_is_attn(cfg):
+        mix, _, _ = mamba2_mix(cfg, lp["mix"], hn, pl or None, lora_scale)
+        h = h + mix
+        hn = apply_norm(cfg, h, base["shared"]["ln1"])
+        q, k, v = attn.attn_site_qkv(cfg, base["shared"]["attn"], hn,
+                                     shared_peft, lora_scale,
+                                     rope_cs=rope_cs)
+        site_args = (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                     v.transpose(0, 2, 1, 3))
+        return site_args, {"h": h}
+    xh, dt, bmat, cmat, decay, z, _ = mamba2_preamble(
+        cfg, lp["mix"], hn, pl or None, lora_scale)
+    site_args = (xh * dt[..., None], bmat, cmat, decay)
+    return site_args, {"h": h, "z": z, "xh": xh}
+
+
+def split_post(cfg, base, y, ctx, peft, lora_scale=1.0):
+    """Post-head of the split forward: final mixer output -> (final hidden,
+    aux)."""
+    lp = layer_slice(base["layers"], cfg.n_layers - 1)
+    pl = layer_slice((peft or {}).get("layers", {}), cfg.n_layers - 1)
+    shared_peft = (peft or {}).get("shared") or None
+    h = ctx["h"]
+    if _final_is_attn(cfg):
+        a = attn.attn_finish(cfg, base["shared"]["attn"],
+                             y.transpose(0, 2, 1, 3), shared_peft, lora_scale)
+        h = h + a
+        hn = apply_norm(cfg, h, base["shared"]["ln2"])
+        h = h + mlp_block(cfg, base["shared"]["mlp"], hn)
+    else:
+        mix = mamba2_finish(cfg, lp["mix"], y, ctx["z"], ctx["xh"], h.dtype,
+                            pl or None, lora_scale)
+        h = h + mix
+    h = constrain(h, "prefill_h")
     h = apply_norm(cfg, h, base["final_norm"])
     return h, jnp.float32(0.0)
 

@@ -30,6 +30,18 @@ class ModelFns:
     # (last-token logits, cache). None -> serve falls back to the
     # token-by-token decode loop (hybrid/encdec families).
     prefill: Optional[Callable] = None
+    # split forward (scan L-1 layers, unroll the final one up to its
+    # sequence mixer — the fused jvp-contraction site):
+    #   split_forward (cfg, base, peft, batch, lora_scale) -> (site_args, ctx)
+    #   split_post    (cfg, base, y, ctx, peft, batch, lora_scale) -> (h, aux)
+    #   split_site    cfg -> (site kind, static site kwargs)
+    #   mixer_site    (cfg, site_args) -> y   (the backend-gated site primal)
+    # ``forward`` IS the composition pre -> mixer_site -> post, so the
+    # registry split losses trace the identical program (bitwise-equal).
+    split_forward: Optional[Callable] = None
+    split_post: Optional[Callable] = None
+    split_site: Optional[Callable] = None
+    mixer_site: Optional[Callable] = None
 
 
 def _tf_forward(cfg, base, peft, batch, lora_scale=1.0):
@@ -38,9 +50,30 @@ def _tf_forward(cfg, base, peft, batch, lora_scale=1.0):
                                lora_scale=lora_scale)
 
 
+def _tf_split_forward(cfg, base, peft, batch, lora_scale=1.0):
+    return transformer.split_forward(cfg, base, peft, batch["tokens"],
+                                     extra_embeds=batch.get("patch_embeds"),
+                                     lora_scale=lora_scale)
+
+
+def _tf_split_post(cfg, base, y, ctx, peft, batch, lora_scale=1.0):
+    return transformer.split_post(cfg, base, y, ctx, peft,
+                                  lora_scale=lora_scale)
+
+
 def _rwkv_forward(cfg, base, peft, batch, lora_scale=1.0):
     return rwkv_model.forward(cfg, base, peft, batch["tokens"],
                               lora_scale=lora_scale)
+
+
+def _rwkv_split_forward(cfg, base, peft, batch, lora_scale=1.0):
+    return rwkv_model.split_forward(cfg, base, peft, batch["tokens"],
+                                    lora_scale=lora_scale)
+
+
+def _rwkv_split_post(cfg, base, y, ctx, peft, batch, lora_scale=1.0):
+    return rwkv_model.split_post(cfg, base, y, ctx, peft,
+                                 lora_scale=lora_scale)
 
 
 def _hybrid_forward(cfg, base, peft, batch, lora_scale=1.0):
@@ -48,28 +81,63 @@ def _hybrid_forward(cfg, base, peft, batch, lora_scale=1.0):
                           lora_scale=lora_scale)
 
 
+def _hybrid_split_forward(cfg, base, peft, batch, lora_scale=1.0):
+    return hybrid.split_forward(cfg, base, peft, batch["tokens"],
+                                lora_scale=lora_scale)
+
+
+def _hybrid_split_post(cfg, base, y, ctx, peft, batch, lora_scale=1.0):
+    return hybrid.split_post(cfg, base, y, ctx, peft, lora_scale=lora_scale)
+
+
 def _encdec_forward(cfg, base, peft, batch, lora_scale=1.0):
     return encdec.forward(cfg, base, peft, batch["tokens"],
                           frames=batch["frames"], lora_scale=lora_scale)
 
 
+def _encdec_split_forward(cfg, base, peft, batch, lora_scale=1.0):
+    return encdec.split_forward(cfg, base, peft, batch["tokens"],
+                                frames=batch["frames"],
+                                lora_scale=lora_scale)
+
+
+def _encdec_split_post(cfg, base, y, ctx, peft, batch, lora_scale=1.0):
+    return encdec.split_post(cfg, base, y, ctx, peft, lora_scale=lora_scale)
+
+
+_TF_SPLIT = dict(split_forward=_tf_split_forward, split_post=_tf_split_post,
+                 split_site=transformer.split_site,
+                 mixer_site=transformer.mixer_site)
+
 _FAMILIES = {
     "dense": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
                       transformer.init_cache, transformer.decode_step,
-                      transformer.prefill),
+                      transformer.prefill, **_TF_SPLIT),
     "moe": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
                     transformer.init_cache, transformer.decode_step,
-                    transformer.prefill),
+                    transformer.prefill, **_TF_SPLIT),
     "vlm": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
                     transformer.init_cache, transformer.decode_step,
-                    transformer.prefill),
+                    transformer.prefill, **_TF_SPLIT),
     "ssm": ModelFns(rwkv_model.init_base, _rwkv_forward, rwkv_model.unembed,
                     rwkv_model.init_cache, rwkv_model.decode_step,
-                    rwkv_model.prefill),
+                    rwkv_model.prefill,
+                    split_forward=_rwkv_split_forward,
+                    split_post=_rwkv_split_post,
+                    split_site=rwkv_model.split_site,
+                    mixer_site=rwkv_model.mixer_site),
     "hybrid": ModelFns(hybrid.init_base, _hybrid_forward, hybrid.unembed,
-                       hybrid.init_cache, hybrid.decode_step),
+                       hybrid.init_cache, hybrid.decode_step,
+                       split_forward=_hybrid_split_forward,
+                       split_post=_hybrid_split_post,
+                       split_site=hybrid.split_site,
+                       mixer_site=hybrid.mixer_site),
     "audio": ModelFns(encdec.init_base, _encdec_forward, encdec.unembed,
-                      encdec.init_cache, encdec.decode_step),
+                      encdec.init_cache, encdec.decode_step,
+                      split_forward=_encdec_split_forward,
+                      split_post=_encdec_split_post,
+                      split_site=encdec.split_site,
+                      mixer_site=encdec.mixer_site),
 }
 
 
@@ -85,13 +153,7 @@ def lm_loss(cfg, base, peft, batch, lora_scale=1.0):
     """Causal-LM next-token loss (billion-scale configs / dry-run)."""
     model = get_model(cfg)
     h, aux = model.forward(cfg, base, peft, batch, lora_scale=lora_scale)
-    tokens = batch["tokens"]
-    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
-    valid = jnp.ones_like(targets, jnp.float32).at[:, -1].set(0.0)
-    if "patch_embeds" in batch and batch["patch_embeds"] is not None:
-        h = h[:, batch["patch_embeds"].shape[1]:, :]   # loss on text only
-    loss = chunked_lm_loss(h, model.unembed(cfg, base), targets, valid)
-    return loss + 0.01 * aux
+    return _lm_head(cfg, base, model, h, aux, batch)
 
 
 def cls_loss(cfg, base, peft, batch, lora_scale=1.0):
@@ -110,5 +172,72 @@ def cls_logits(cfg, base, peft, batch, lora_scale=1.0):
     return (pooled @ peft["head"]["w"] + peft["head"]["b"]).astype(jnp.float32)
 
 
-def get_loss_fn(task: str):
+# ---------------------------------------------------------------------------
+# Split losses — the same objectives with the final mixer site exposed, so
+# forward_gradient(..., fused_contraction=True) runs the in-kernel
+# jvp-contraction epilogue for FULL-model training losses
+# ---------------------------------------------------------------------------
+
+def _lm_head(cfg, base, model, h, aux, batch):
+    tokens = batch["tokens"]
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    valid = jnp.ones_like(targets, jnp.float32).at[:, -1].set(0.0)
+    if "patch_embeds" in batch and batch["patch_embeds"] is not None:
+        h = h[:, batch["patch_embeds"].shape[1]:, :]   # loss on text only
+    loss = chunked_lm_loss(h, model.unembed(cfg, base), targets, valid)
+    return loss + 0.01 * aux
+
+
+def _split_loss(cfg, base, batch, head_fn, lora_scale):
+    from repro.core.forward_grad import SplitLoss
+    model = get_model(cfg)
+    if model.split_forward is None:
+        raise ValueError(
+            f"family {cfg.family!r} has no split forward; use the plain "
+            f"loss closure (get_loss_fn(task))")
+    kind, site_kwargs = model.split_site(cfg)
+
+    def pre(p):
+        return model.split_forward(cfg, base, p, batch,
+                                   lora_scale=lora_scale)
+
+    def post(y, ctx, p):
+        h, aux = model.split_post(cfg, base, y, ctx, p, batch,
+                                  lora_scale=lora_scale)
+        return head_fn(cfg, base, model, h, aux, batch, p)
+
+    # the model's backend-gated mixer as the site primal: the SplitLoss
+    # traces exactly the program ``model.forward`` (= the plain loss) does
+    return SplitLoss(pre, kind, post,
+                     site_fn=lambda args: model.mixer_site(cfg, args),
+                     **site_kwargs)
+
+
+def split_lm_loss(cfg, base, batch, lora_scale=1.0):
+    """``lm_loss`` as a ``SplitLoss``: a function of the peft tree only,
+    bitwise-equal to the plain closure, whose final-mixer site runs the
+    fused jvp-contraction route under ``fused_contraction=True``."""
+    def head(cfg_, base_, model, h, aux, batch_, p):
+        return _lm_head(cfg_, base_, model, h, aux, batch_)
+    return _split_loss(cfg, base, batch, head, lora_scale)
+
+
+def split_cls_loss(cfg, base, batch, lora_scale=1.0):
+    """``cls_loss`` as a ``SplitLoss`` (trainable head read from the peft
+    tree inside the reversed-once post-head)."""
+    def head(cfg_, base_, model, h, aux, batch_, p):
+        loss, _ = classification_loss(h, p["head"], batch_["labels"])
+        return loss + 0.01 * aux
+    return _split_loss(cfg, base, batch, head, lora_scale)
+
+
+def get_loss_fn(task: str, split: bool = False):
+    """Plain loss closures (split=False; byte-identical to the historical
+    behaviour) or the split-loss builders (split=True): ``builder(cfg,
+    base, batch, lora_scale=...) -> SplitLoss``. The SplitLoss value equals
+    the plain loss bitwise on every family; under ``forward_gradient(...,
+    fused_contraction=True)`` its final mixer site contracts the K tangent
+    outputs in-kernel instead of materializing them."""
+    if split:
+        return {"lm": split_lm_loss, "cls": split_cls_loss}[task]
     return {"lm": lm_loss, "cls": cls_loss}[task]

@@ -4,9 +4,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import apply_norm, dense_init, norm_params
+from repro.models.common import (
+    apply_norm,
+    dense_init,
+    layer_slice,
+    norm_params,
+    scan_prefix_unroll_tail,
+)
 from repro.models.partitioning import constrain
-from repro.models.ssm import rwkv6_channel_mix, rwkv6_params, rwkv6_time_mix
+from repro.models.ssm import (
+    rwkv6_channel_mix,
+    rwkv6_finish,
+    rwkv6_params,
+    rwkv6_site_args,
+    rwkv6_time_mix,
+    wkv6_mixer_site,
+)
 
 
 def init_base(cfg, key):
@@ -32,10 +45,9 @@ def unembed(cfg, base):
     return base["lm_head"]
 
 
-def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
-    h = embed_tokens(cfg, base, tokens)
-    peft_layers = (peft or {}).get("layers", {})
-
+def _train_body(cfg, lora_scale):
+    """One full RWKV6 layer as a scan body — shared by ``forward`` (all L
+    layers) and ``split_forward`` (the first L-1)."""
     def body(h, xs):
         lp, pl = xs
         hn = apply_norm(cfg, h, lp["ln1"])
@@ -44,8 +56,72 @@ def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
         hn = apply_norm(cfg, h, lp["ln2"])
         cm, _ = rwkv6_channel_mix(cfg, lp["mix"], hn)
         return constrain(h + cm, "prefill_h"), None
+    return body
 
-    h, _ = jax.lax.scan(body, h, (base["layers"], peft_layers))
+
+def forward_scanned(cfg, base, peft, tokens, extra_embeds=None,
+                    lora_scale=1.0):
+    """Reference train forward: ONE ``lax.scan`` over all L layers (see
+    ``transformer.forward_scanned`` for the ulp caveat vs ``forward``)."""
+    h = embed_tokens(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+    h, _ = jax.lax.scan(_train_body(cfg, lora_scale), h,
+                        (base["layers"], peft_layers))
+    h = apply_norm(cfg, h, base["final_norm"])
+    return h, jnp.float32(0.0)
+
+
+def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    """Train forward as the split composition (scan L-1 layers, unroll the
+    final layer around its WKV6 recurrence) — identical program to the
+    registry split losses."""
+    site_args, ctx = split_forward(cfg, base, peft, tokens,
+                                   lora_scale=lora_scale)
+    y = mixer_site(cfg, site_args)
+    return split_post(cfg, base, y, ctx, peft, lora_scale=lora_scale)
+
+
+# ---------------------------------------------------------------------------
+# Split forward: scan L-1 layers, unroll the final layer up to its mixer
+# ---------------------------------------------------------------------------
+
+def split_site(cfg):
+    return "wkv6", {}
+
+
+def mixer_site(cfg, site_args):
+    """The final layer's WKV6 recurrence on the split site args
+    (backend-gated; see ``ssm.wkv6_mixer_site``)."""
+    return wkv6_mixer_site(site_args)
+
+
+def split_forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    """Split (train) forward: scan the first L-1 layers, unroll the final
+    layer up to its WKV6 recurrence. Returns (site_args, ctx) with
+    site_args = (r, k, v, w, u) and ctx carrying the residual stream + gate
+    the post-mixer tail needs; the pre->site->post composition is
+    bitwise-identical to ``forward``."""
+    h = embed_tokens(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+    h, (lp, pl) = scan_prefix_unroll_tail(
+        _train_body(cfg, lora_scale), h, (base["layers"], peft_layers),
+        cfg.n_layers)
+    hn = apply_norm(cfg, h, lp["ln1"])
+    site_args, g = rwkv6_site_args(cfg, lp["mix"], hn, pl or None, lora_scale)
+    return site_args, {"h": h, "g": g}
+
+
+def split_post(cfg, base, y, ctx, peft, lora_scale=1.0):
+    """Post-head of the split forward: WKV6 mixer output (B,S,H,hd) fp32 ->
+    (final hidden, aux)."""
+    lp = layer_slice(base["layers"], cfg.n_layers - 1)
+    pl = layer_slice((peft or {}).get("layers", {}), cfg.n_layers - 1)
+    h, g = ctx["h"], ctx["g"]
+    tm = rwkv6_finish(cfg, lp["mix"], y, g, h.dtype, pl or None, lora_scale)
+    h = h + tm
+    hn = apply_norm(cfg, h, lp["ln2"])
+    cm, _ = rwkv6_channel_mix(cfg, lp["mix"], hn)
+    h = constrain(h + cm, "prefill_h")
     h = apply_norm(cfg, h, base["final_norm"])
     return h, jnp.float32(0.0)
 

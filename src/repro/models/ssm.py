@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
+from repro.kernels.mamba2_scan.ref import mamba2_scan_ref
 from repro.models.common import dense_init, maybe_lora, proj
 
 
@@ -85,12 +86,13 @@ def wkv6_recurrence(r, k, v, w, u, state):
     return ys.transpose(1, 0, 2, 3), state
 
 
-def rwkv6_time_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
-                   shift_prev=None):
-    """x: (B,S,D). state: (B,H,hd,hd) or None (zeros). Returns
-    (out, new_state, last_x). On the dispatched forward-gradient fast path
-    (fresh state inside ``dispatch.use_kernel_mixers()``) new_state is None —
-    the estimator's loss closures never consume it."""
+def rwkv6_site_args(cfg, p, x, peft_layer=None, lora_scale=1.0,
+                    shift_prev=None):
+    """Time-mix projections up to the WKV recurrence: the mixer-site
+    operands ((r, k, v, w) (B,S,H,hd) fp32 + u (H,hd)) plus the gate stream
+    ``g`` the post-mixer tail needs. Shared by ``rwkv6_time_mix`` and the
+    rwkv split forward (the recurrence is the declared fused-contraction
+    site there)."""
     B, S, D = x.shape
     hd = cfg.ssm.head_dim
     H = D // hd
@@ -110,29 +112,62 @@ def rwkv6_time_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
     w = jnp.exp(-jnp.exp(p["w0"] + dw.astype(jnp.float32)))   # (B,S,D)
 
     hsplit = lambda t: t.reshape(B, S, H, hd)
+    return (hsplit(r).astype(jnp.float32), hsplit(k).astype(jnp.float32),
+            hsplit(v).astype(jnp.float32), hsplit(w), p["u"]), g
+
+
+def rwkv6_finish(cfg, p, y, g, out_dtype, peft_layer=None, lora_scale=1.0):
+    """Group-norm + gate + output projection on the mixer output y
+    ((B,S,H,hd) fp32) — the time-mix tail after the WKV recurrence (the
+    split forwards' post side)."""
+    B, S, H, hd = y.shape
+    D = H * hd
+    # group-norm per head then gate
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = ((y - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D)
+    y = (y * p["ln_w"] + p["ln_b"]).astype(out_dtype) * jax.nn.silu(g)
+    return proj(y, p["wo"], lora=maybe_lora(peft_layer, "wo"),
+                lora_scale=lora_scale)
+
+
+def wkv6_mixer_site(args):
+    """Fresh-state WKV6 recurrence on the ``rwkv6_site_args`` operands with
+    the model's backend gating: the dispatched op (multi-tangent kernels
+    inside the estimator's forward-AD region) on kernel backends, the exact
+    sequential jnp recurrence otherwise. The rwkv split forward declares
+    this call as its fused-contraction site."""
+    r, k, v, w, u = args
+    if dispatch.use_kernel_mixers():
+        return dispatch.wkv6_mix(r, k, v, w, u)
+    B, _, H, hd = r.shape
+    state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    return wkv6_recurrence(r, k, v, w, u, state)[0]
+
+
+def rwkv6_time_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
+                   shift_prev=None):
+    """x: (B,S,D). state: (B,H,hd,hd) or None (zeros). Returns
+    (out, new_state, last_x). On the dispatched forward-gradient fast path
+    (fresh state inside ``dispatch.use_kernel_mixers()``) new_state is None —
+    the estimator's loss closures never consume it."""
+    B, S, D = x.shape
+    hd = cfg.ssm.head_dim
+    H = D // hd
+    (r, k, v, w, u), g = rwkv6_site_args(cfg, p, x, peft_layer, lora_scale,
+                                         shift_prev)
     if state is None and dispatch.use_kernel_mixers():
         # forward-gradient fast path (fresh state): the dispatched op lowers
         # K stacked tangents to the multi-tangent wkv6 Pallas kernel — one
         # primal state walk for all K perturbations. The estimator's loss
         # closures discard the carried state, so none is produced here.
-        y = dispatch.wkv6_mix(
-            hsplit(r).astype(jnp.float32), hsplit(k).astype(jnp.float32),
-            hsplit(v).astype(jnp.float32), hsplit(w), p["u"])
+        y = dispatch.wkv6_mix(r, k, v, w, u)
         state = None
     else:
         if state is None:
             state = jnp.zeros((B, H, hd, hd), jnp.float32)
-        y, state = wkv6_recurrence(
-            hsplit(r).astype(jnp.float32), hsplit(k).astype(jnp.float32),
-            hsplit(v).astype(jnp.float32), hsplit(w), p["u"], state)
-    y = y.reshape(B, S, D)
-    # group-norm per head then gate
-    y = y.reshape(B, S, H, hd)
-    mean = y.mean(-1, keepdims=True)
-    var = y.var(-1, keepdims=True)
-    y = ((y - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D)
-    y = (y * p["ln_w"] + p["ln_b"]).astype(x.dtype) * jax.nn.silu(g)
-    out = proj(y, p["wo"], lora=maybe_lora(peft_layer, "wo"), lora_scale=lora_scale)
+        y, state = wkv6_recurrence(r, k, v, w, u, state)
+    out = rwkv6_finish(cfg, p, y, g, x.dtype, peft_layer, lora_scale)
     return out, state, x[:, -1:, :]
 
 
@@ -181,18 +216,18 @@ def _causal_depthwise_conv(x, w, conv_state=None):
     return y, xp[:, -(K - 1):]
 
 
-def mamba2_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
-               conv_state=None):
-    """x: (B,S,D). state: (B,H,hd,N) or None (zeros). Returns
-    (out, state, conv_state). On the dispatched forward-gradient fast path
-    (fresh state inside ``dispatch.use_kernel_mixers()``) state is None —
-    the estimator's loss closures never consume it."""
+def mamba2_preamble(cfg, p, x, peft_layer=None, lora_scale=1.0,
+                    conv_state=None):
+    """in_proj + depthwise conv + dt/B/C/decay streams — ``mamba2_mix`` up
+    to the state recurrence. Returns (xh, dt, bmat, cmat, decay, z,
+    conv_state). Shared by ``mamba2_mix`` and the hybrid split forward (the
+    recurrence over the dt-premultiplied input ``xh * dt`` is the declared
+    fused-contraction site there)."""
     B, S, D = x.shape
     s = cfg.ssm
     d_inner = s.expand * D
     hd = s.head_dim
     H = d_inner // hd
-    N = s.state_dim
 
     zx = proj(x, p["in_proj"], lora=maybe_lora(peft_layer, "in_proj"),
               lora_scale=lora_scale)
@@ -206,6 +241,50 @@ def mamba2_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
     bmat = (x @ p["w_b"]).astype(jnp.float32)                  # (B,S,N)
     cmat = (x @ p["w_c"]).astype(jnp.float32)                  # (B,S,N)
     xh = xb.reshape(B, S, H, hd).astype(jnp.float32)
+    return xh, dt, bmat, cmat, decay, z, conv_state
+
+
+def mamba2_finish(cfg, p, y, z, xh, out_dtype, peft_layer=None,
+                  lora_scale=1.0):
+    """Skip connection + gate + output projection on the mixer output y
+    ((B,S,H,hd) fp32) — the mamba2 tail after the state recurrence (the
+    split forwards' post side)."""
+    B, S, H, hd = y.shape
+    d_inner = H * hd
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = (y.reshape(B, S, d_inner) * jax.nn.silu(z.astype(jnp.float32))).astype(out_dtype)
+    return proj(y, p["out_proj"], lora=maybe_lora(peft_layer, "out_proj"),
+                lora_scale=lora_scale)
+
+
+def mamba2_mixer_site(args):
+    """Fresh-state Mamba2 recurrence on (xdt, bmat, cmat, decay) with the
+    model's backend gating: the dispatched op on kernel backends, the exact
+    jnp scan mirror otherwise (the dt hoist is an exact elementwise
+    identity — bit-identical to the in-scan multiply). The hybrid split
+    forward declares this call as its fused-contraction site when the final
+    layer's last mixer is the mamba2 recurrence."""
+    xdt, bmat, cmat, decay = args
+    if dispatch.use_kernel_mixers():
+        return dispatch.mamba2_mix(xdt, bmat, cmat, decay)
+    return mamba2_scan_ref(xdt, bmat, cmat, decay)[0]
+
+
+def mamba2_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
+               conv_state=None):
+    """x: (B,S,D). state: (B,H,hd,N) or None (zeros). Returns
+    (out, state, conv_state). On the dispatched forward-gradient fast path
+    (fresh state inside ``dispatch.use_kernel_mixers()``) state is None —
+    the estimator's loss closures never consume it."""
+    B, S, D = x.shape
+    s = cfg.ssm
+    d_inner = s.expand * D
+    hd = s.head_dim
+    H = d_inner // hd
+    N = s.state_dim
+
+    xh, dt, bmat, cmat, decay, z, conv_state = mamba2_preamble(
+        cfg, p, x, peft_layer, lora_scale, conv_state)
 
     if state is None and dispatch.use_kernel_mixers():
         # forward-gradient fast path (fresh state): the dispatched op lowers
@@ -232,8 +311,5 @@ def mamba2_mix(cfg, p, x, peft_layer=None, lora_scale=1.0, state=None,
               dt.transpose(1, 0, 2))
         state, ys = jax.lax.scan(step, state, xs)
         y = ys.transpose(1, 0, 2, 3)                           # (B,S,H,hd)
-    y = y + p["d_skip"][None, None, :, None] * xh
-    y = (y.reshape(B, S, d_inner) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = proj(y, p["out_proj"], lora=maybe_lora(peft_layer, "out_proj"),
-               lora_scale=lora_scale)
+    out = mamba2_finish(cfg, p, y, z, xh, x.dtype, peft_layer, lora_scale)
     return out, state, conv_state

@@ -15,7 +15,10 @@ from repro.models import attention as attn
 from repro.models.common import (
     apply_norm,
     dense_init,
+    layer_slice,
     norm_params,
+    rope_tables_for,
+    scan_prefix_unroll_tail,
 )
 from repro.models.partitioning import constrain
 from repro.models.mlp import mlp_block, mlp_params
@@ -72,48 +75,147 @@ def unembed(cfg, base):
     return base["embed"].T if cfg.tie_embeddings else base["lm_head"]
 
 
-def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
-    """Full (train/prefill) forward pass -> (hidden (B,S,D), aux_loss).
+def _layer_tail(cfg, h, aux, lp, pl, lora_scale):
+    """ln2 + MLP/MoE + residual (+BitFit bias) — the back half of a decoder
+    layer once its attention output has been added to the residual."""
+    hn = apply_norm(cfg, h, lp["ln2"])
+    if cfg.moe is not None:
+        y, aux_l = moe_block(cfg, lp["moe"], hn)
+        aux = aux + aux_l
+    else:
+        y = mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale)
+    h = constrain(h + y + _peft_bias(pl, "bias2", h), "prefill_h")
+    return h, aux
 
-    ``extra_embeds`` (B,P,D) are frontend-stub embeddings (VLM patches /
-    early-fusion image tokens) prepended to the token embeddings.
-    """
-    h = embed_tokens(cfg, base, tokens)
-    if extra_embeds is not None:
-        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
-    flags = _layer_flags(cfg)
-    mixed = _mixed_pattern(cfg)
-    peft_layers = (peft or {}).get("layers", {})
 
-    def attn_branch(is_global_static):
-        def run(lp, pl, hn):
-            return attn.attn_block_prefill(
-                cfg, lp["attn"], hn, pl or None, lora_scale,
-                is_global=is_global_static)
-        return run
+def _attn_branch(cfg, lora_scale, is_global_static, rope_cs):
+    def run(lp, pl, hn):
+        return attn.attn_block_prefill(
+            cfg, lp["attn"], hn, pl or None, lora_scale,
+            is_global=is_global_static, rope_cs=rope_cs)
+    return run
 
+
+def _train_body(cfg, lora_scale, mixed, rope_cs):
+    """One full decoder layer as a scan body — shared by ``forward`` (all
+    L layers) and ``split_forward`` (the first L-1). ``rope_cs`` is the
+    forward-wide rope table (see ``common.rope_tables``)."""
     def body(carry, xs):
         h, aux = carry
         lp, pl, is_global = xs
         hn = apply_norm(cfg, h, lp["ln1"])
         if mixed:
-            a = jax.lax.cond(is_global,
-                             lambda: attn_branch(True)(lp, pl, hn),
-                             lambda: attn_branch(False)(lp, pl, hn))
+            a = jax.lax.cond(
+                is_global,
+                lambda: _attn_branch(cfg, lora_scale, True, rope_cs)(
+                    lp, pl, hn),
+                lambda: _attn_branch(cfg, lora_scale, False, rope_cs)(
+                    lp, pl, hn))
         else:
-            a = attn_branch(bool(cfg.is_global_layer(0)))(lp, pl, hn)
+            a = _attn_branch(cfg, lora_scale, bool(cfg.is_global_layer(0)),
+                             rope_cs)(lp, pl, hn)
         h = h + a + _peft_bias(pl, "bias1", h)
-        hn = apply_norm(cfg, h, lp["ln2"])
-        if cfg.moe is not None:
-            y, aux_l = moe_block(cfg, lp["moe"], hn)
-            aux = aux + aux_l
-        else:
-            y = mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale)
-        h = constrain(h + y + _peft_bias(pl, "bias2", h), "prefill_h")
+        h, aux = _layer_tail(cfg, h, aux, lp, pl, lora_scale)
         return (h, aux), None
+    return body
 
+
+def _embed(cfg, base, tokens, extra_embeds):
+    h = embed_tokens(cfg, base, tokens)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+
+
+def forward_scanned(cfg, base, peft, tokens, extra_embeds=None,
+                    lora_scale=1.0):
+    """Reference train forward: ONE ``lax.scan`` over all L layers (the
+    pre-split-refactor structure). ``forward`` below is the split
+    composition — numerically it applies identical per-layer ops, but XLA
+    fuses the unrolled final layer differently from a scan iteration, so
+    the two agree to float-ulp (tests assert allclose), while ``forward``
+    vs the registry split losses agree BITWISE (same traced program)."""
+    h = _embed(cfg, base, tokens, extra_embeds)
+    flags = _layer_flags(cfg)
+    peft_layers = (peft or {}).get("layers", {})
+    body = _train_body(cfg, lora_scale, _mixed_pattern(cfg),
+                       rope_tables_for(cfg, h))
     (h, aux), _ = jax.lax.scan(
         body, (h, jnp.float32(0.0)), (base["layers"], peft_layers, flags))
+    h = apply_norm(cfg, h, base["final_norm"])
+    return h, aux / cfg.n_layers
+
+
+def forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    """Full train forward pass -> (hidden (B,S,D), aux_loss), structured as
+    the split composition (the tentpole refactor): scan the first L-1
+    layers, unroll the final layer around its attention mixer
+    (``split_forward`` -> ``mixer_site`` -> ``split_post``). The registry
+    split losses expose exactly these pieces, so the plain loss closures
+    and the ``SplitLoss`` objects trace identical programs.
+
+    ``extra_embeds`` (B,P,D) are frontend-stub embeddings (VLM patches /
+    early-fusion image tokens) prepended to the token embeddings.
+    """
+    site_args, ctx = split_forward(cfg, base, peft, tokens,
+                                   extra_embeds=extra_embeds,
+                                   lora_scale=lora_scale)
+    y = mixer_site(cfg, site_args)
+    return split_post(cfg, base, y, ctx, peft, lora_scale=lora_scale)
+
+
+# ---------------------------------------------------------------------------
+# Split forward: scan L-1 layers, unroll the final layer up to its mixer
+# ---------------------------------------------------------------------------
+
+def split_site(cfg):
+    """Site kind + static kwargs of the final layer's sequence mixer."""
+    is_global = bool(cfg.is_global_layer(cfg.n_layers - 1))
+    return "swa", {"window": None if is_global else cfg.window}
+
+
+def mixer_site(cfg, site_args):
+    """The final layer's mixer on the split site args (backend-gated; see
+    ``attention.swa_mixer_site``)."""
+    return attn.swa_mixer_site(cfg, site_args, split_site(cfg)[1]["window"])
+
+
+def split_forward(cfg, base, peft, tokens, extra_embeds=None, lora_scale=1.0):
+    """Split (train) forward: scan the first L-1 layers, unroll the final
+    layer up to its attention mixer. Returns (site_args, ctx) with
+    site_args = (q, k, v) in kernel layout ((B,H,S,hd) / (B,KV,S,hd)) and
+    ctx carrying the residual stream + MoE aux entering the final mixer.
+    ``split_post`` finishes the layer; the pre->site->post composition is
+    bitwise-identical to ``forward``."""
+    h = _embed(cfg, base, tokens, extra_embeds)
+    flags = _layer_flags(cfg)
+    peft_layers = (peft or {}).get("layers", {})
+    rope_cs = rope_tables_for(cfg, h)
+    body = _train_body(cfg, lora_scale, _mixed_pattern(cfg), rope_cs)
+    (h, aux), (lp, pl, _) = scan_prefix_unroll_tail(
+        body, (h, jnp.float32(0.0)), (base["layers"], peft_layers, flags),
+        cfg.n_layers)
+    hn = apply_norm(cfg, h, lp["ln1"])
+    q, k, v = attn.attn_site_qkv(cfg, lp["attn"], hn, pl or None, lora_scale,
+                                 rope_cs=rope_cs)
+    site_args = (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                 v.transpose(0, 2, 1, 3))
+    return site_args, {"h": h, "aux": aux}
+
+
+def split_post(cfg, base, y, ctx, peft, lora_scale=1.0):
+    """Post-head of the split forward: final mixer output (B,H,S,hd) ->
+    (final hidden, aux). Reversed ONCE by the fused estimator (jax.vjp),
+    so its stored activations are O(one layer + head)."""
+    lp = layer_slice(base["layers"], cfg.n_layers - 1)
+    pl = layer_slice((peft or {}).get("layers", {}), cfg.n_layers - 1)
+    h, aux = ctx["h"], ctx["aux"]
+    a = attn.attn_finish(cfg, lp["attn"], y.transpose(0, 2, 1, 3),
+                         pl or None, lora_scale)
+    h = h + a + _peft_bias(pl, "bias1", h)
+    h, aux = _layer_tail(cfg, h, aux, lp, pl, lora_scale)
     h = apply_norm(cfg, h, base["final_norm"])
     return h, aux / cfg.n_layers
 

@@ -1,0 +1,31 @@
+"""The checked-in BENCH JSON artifacts must conform to the schemas the CI
+bench-smoke job enforces (benchmarks/check_schemas.py) — and the checker
+itself must actually reject broken documents."""
+import json
+import pathlib
+
+from benchmarks.check_schemas import check_kernels, check_round
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_checked_in_bench_kernels_conforms():
+    doc = json.load(open(REPO / "BENCH_kernels.json"))
+    assert check_kernels(doc) == []
+
+
+def test_checked_in_bench_round_conforms():
+    doc = json.load(open(REPO / "BENCH_round.json"))
+    assert check_round(doc) == []
+
+
+def test_checker_rejects_broken_docs():
+    doc = json.load(open(REPO / "BENCH_kernels.json"))
+    del doc["fg_fullmodel"]
+    assert check_kernels(doc)
+    doc2 = json.load(open(REPO / "BENCH_kernels.json"))
+    doc2["fg_ksweep"][0].pop("peak_live_mb_fused")
+    assert check_kernels(doc2)
+    rdoc = json.load(open(REPO / "BENCH_round.json"))
+    rdoc["round_bench"] = []
+    assert check_round(rdoc)

@@ -23,6 +23,10 @@ from repro.core.forward_grad import (
 )
 from repro.kernels import dispatch
 from repro.kernels.lora_dual import lora_dual_mt_jvps, lora_dual_mt_jvps_ref
+from repro.kernels.mamba2_scan import (
+    mamba2_scan_mt_jvps,
+    mamba2_scan_mt_jvps_ref,
+)
 from repro.kernels.swa_attention import (
     swa_attention_mt_jvps,
     swa_attention_mt_jvps_ref,
@@ -55,6 +59,20 @@ def _wkv_problem(B=2, S=96, H=2, hd=16, T=3, seed=0):
     ud = jax.random.normal(ks[9], (T, H, hd)) * 0.3
     gy = jax.random.normal(ks[10], (B, S, H, hd))
     return (r, k, v, w, u), (rd, kd, vd, wd, ud), gy
+
+
+def _mamba2_problem(B=2, S=96, H=2, hd=16, N=8, T=3, seed=4):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 9)
+    xdt = jax.random.normal(ks[0], (B, S, H, hd)) * 0.3
+    bm = jax.random.normal(ks[1], (B, S, N)) * 0.3
+    cm = jax.random.normal(ks[2], (B, S, N)) * 0.3
+    dec = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H)))
+    xd = jax.random.normal(ks[4], (T, B, S, H, hd)) * 0.3
+    bd = jax.random.normal(ks[5], (T, B, S, N)) * 0.3
+    cd = jax.random.normal(ks[6], (T, B, S, N)) * 0.3
+    dd = jax.random.normal(ks[7], (T, B, S, H)) * 0.1
+    gy = jax.random.normal(ks[8], (B, S, H, hd))
+    return (xdt, bm, cm, dec), (xd, bd, cd, dd), gy
 
 
 def _swa_problem(B=1, H=4, KV=2, S=128, hd=32, T=3, seed=1):
@@ -148,6 +166,45 @@ def test_wkv6_jvps_stacked_bitwise_equals_single_tangent_passes():
 
 
 # ---------------------------------------------------------------------------
+# mamba2 epilogue kernel (ISSUE 5 satellite: the last mt family without one)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S", [96, 75])
+def test_mamba2_jvps_kernel_matches_oracle(S):
+    (xdt, bm, cm, dec), (xd, bd, cd, dd), gy = _mamba2_problem(S=S)
+    jk = mamba2_scan_mt_jvps(xdt, bm, cm, dec, xd, bd, cd, dd, gy,
+                             block_s=32)
+    jo = mamba2_scan_mt_jvps_ref(xdt, bm, cm, dec, xd, bd, cd, dd, gy)
+    np.testing.assert_allclose(np.asarray(jk), np.asarray(jo), rtol=2e-5,
+                               atol=1e-5)
+
+
+def test_mamba2_jvps_stacked_bitwise_equals_single_tangent_passes():
+    (xdt, bm, cm, dec), (xd, bd, cd, dd), gy = _mamba2_problem()
+    T = xd.shape[0]
+    jk = mamba2_scan_mt_jvps(xdt, bm, cm, dec, xd, bd, cd, dd, gy,
+                             block_s=32)
+    ones = jnp.concatenate([
+        mamba2_scan_mt_jvps(xdt, bm, cm, dec, xd[t:t + 1], bd[t:t + 1],
+                            cd[t:t + 1], dd[t:t + 1], gy, block_s=32)
+        for t in range(T)])
+    np.testing.assert_array_equal(np.asarray(jk), np.asarray(ones))
+
+
+def test_mamba2_contract_jnp_route_matches_oracle():
+    (xdt, bm, cm, dec), (xd, bd, cd, dd), gy = _mamba2_problem()
+    jo = mamba2_scan_mt_jvps_ref(xdt, bm, cm, dec, xd, bd, cd, dd, gy)
+    dispatch.set_backend("jnp")
+    try:
+        vals = jax.vmap(lambda a, b, c, d: dispatch.mamba2_jvp_contract(
+            gy, xdt, bm, cm, dec, a, b, c, d))(xd, bd, cd, dd)
+    finally:
+        dispatch.set_backend(None)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(jo), rtol=2e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # swa epilogue kernel
 # ---------------------------------------------------------------------------
 
@@ -212,14 +269,25 @@ def _assert_no_tangent_stack_output(closed_jaxpr, K, y_shape):
                 f"{var.aval.shape} (>= K x y = {stack_size} elems): {eqn}")
 
 
-@pytest.mark.parametrize("kind", ["lora", "wkv6", "swa"])
+@pytest.mark.parametrize("kind", ["lora", "wkv6", "swa", "mamba2"])
 def test_vmap_of_contract_traces_jvps_epilogue(kind):
     """vmap of a ``*_jvp_contract`` op's tangents inside
     ``forward_ad_region()`` must lower to ONE ``_jvps`` epilogue
     pallas_call whose outputs are per-block (..., K) partials — and the
     jaxpr must contain no (K,)+y.shape buffer at all."""
     K = 4
-    if kind == "lora":
+    if kind == "mamba2":
+        (xdt, bm, cm, dec), _, gy = _mamba2_problem(B=1, S=32, H=2, hd=8,
+                                                    N=4, T=1)
+        y_shape = gy.shape
+
+        def contract(xd, bd, cd, dd):
+            return dispatch.mamba2_jvp_contract(gy, xdt, bm, cm, dec, xd,
+                                                bd, cd, dd)
+
+        tangents = (jnp.zeros((K,) + xdt.shape), jnp.zeros((K,) + bm.shape),
+                    jnp.zeros((K,) + cm.shape), jnp.zeros((K,) + dec.shape))
+    elif kind == "lora":
         (x, w, a, b), _, gy, scale = _lora_problem()
         y_shape = gy.shape
 
@@ -268,14 +336,16 @@ def test_vmap_of_contract_traces_jvps_epilogue(kind):
 
 def _mixer_split_problem(kind, seed=2):
     B, S, H, hd = 1, 64, 2, 16
+    N = 8
     D = H * hd
-    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 10)
     x = jax.random.normal(ks[0], (B, S, D)) * 0.3
     wp = [jax.random.normal(ks[1 + i], (D, D)) * 0.05 for i in range(3)]
     u = jax.random.normal(ks[4], (H, hd)) * 0.3
     wdec = jax.nn.sigmoid(jax.random.normal(ks[5], (B, S, H, hd)))
     peft = {"A": jax.random.normal(ks[6], (D, 2)) * 0.05,
             "B": jax.random.normal(ks[7], (2, D)) * 0.05}
+    wbc = [jax.random.normal(ks[8 + i], (D, N)) * 0.3 for i in range(2)]
 
     if kind == "lora":
         split = SplitLoss(lambda p: ((x, wp[0], p["A"], p["B"]), None),
@@ -289,6 +359,9 @@ def _mixer_split_problem(kind, seed=2):
         v = (x @ wp[2]).reshape(B, S, H, hd)
         if kind == "wkv6":
             return (r.reshape(B, S, H, hd), k, v, wdec, u), None
+        if kind == "mamba2":
+            return (r.reshape(B, S, H, hd), x @ wbc[0], x @ wbc[1],
+                    wdec.mean(-1)), None
         return (r.reshape(B, S, H, hd).transpose(0, 2, 1, 3),
                 k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)), None
 
@@ -298,7 +371,7 @@ def _mixer_split_problem(kind, seed=2):
 
 
 @pytest.mark.parametrize("backend", ["interpret", "jnp"])
-@pytest.mark.parametrize("kind", ["lora", "wkv6", "swa"])
+@pytest.mark.parametrize("kind", ["lora", "wkv6", "swa", "mamba2"])
 def test_fused_route_matches_standard(kind, backend):
     """fused_contraction on/off must produce the same loss (bitwise — the
     primal path is shared) and the same jvp scalars per seed up to float
@@ -318,7 +391,7 @@ def test_fused_route_matches_standard(kind, backend):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
 
 
-@pytest.mark.parametrize("kind", ["lora", "wkv6", "swa"])
+@pytest.mark.parametrize("kind", ["lora", "wkv6", "swa", "mamba2"])
 def test_fused_chunked_scan_matches_full_batch(kind):
     """K=5 with tangent_batch=2 pads to 3 scanned groups with a masked-out
     lane; on the interpret backend (kernel lanes are exact replicas) the
@@ -396,7 +469,7 @@ def test_fused_route_with_x_tangent():
         assert _rel(j1, j0) < 1e-5, backend
 
 
-@pytest.mark.parametrize("kind", ["lora", "wkv6", "swa"])
+@pytest.mark.parametrize("kind", ["lora", "wkv6", "swa", "mamba2"])
 def test_fused_route_jaxpr_has_no_tangent_stack_at_site(kind):
     """The acceptance claim: on the fused-contraction route, NO
     (K, ..., N) tangent output buffer exists at the epilogue-eligible site
@@ -423,7 +496,7 @@ def test_fused_route_jaxpr_has_no_tangent_stack_at_site(kind):
         dispatch.set_backend(None)
 
     family = {"lora": "lora_dual", "wkv6": "wkv6_scan",
-              "swa": "swa_attention"}[kind]
+              "swa": "swa_attention", "mamba2": "mamba2_scan"}[kind]
 
     def site_calls(jaxpr):
         # upstream (non-site) mixers in ``pre`` legitimately materialize

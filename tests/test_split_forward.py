@@ -1,0 +1,314 @@
+"""Split-forward refactor (ISSUE 5): full-model training losses through the
+fused JVP-contraction route.
+
+Covers: registry-wide split-vs-plain loss equality (BITWISE — the plain
+losses now run the same pre -> mixer-site -> post composition the SplitLoss
+builders expose); the split composition vs the retained fully-scanned
+reference forward (allclose — XLA fuses an unrolled layer differently from a
+scan iteration, so cross-program equality is float-ulp, which is exactly why
+``forward`` itself was refactored to BE the composition); fused-vs-standard
+estimator equivalence on full-model losses (loss bitwise, jvps <= 1e-6 rel);
+the jaxpr assertion that the FULL-model fused path writes no
+tangent-stack-sized buffer at the final-layer site (one ``_mt_jvps``
+epilogue pallas_call, per-block-partial outputs only); the one-time
+unsplittable-loss warning; and the round-step telemetry surfacing the active
+route.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SpryConfig, get_config, reduce_config
+from repro.core.forward_grad import (
+    SplitLoss,
+    _warned_unsplit_losses,
+    forward_gradient,
+    fused_linearize,
+)
+from repro.core.spry import init_state, make_round_step, make_task_loss
+from repro.kernels import dispatch
+from repro.models import encdec, hybrid, rwkv_model, transformer
+from repro.models.registry import get_loss_fn, get_model
+from repro.peft import init_peft
+
+_ARCHS = {
+    "dense": "llama2-7b",
+    "moe": "qwen3-moe-235b-a22b",
+    "vlm": "internvl2-76b",
+    "ssm": "rwkv6-1.6b",
+    "hybrid": "zamba2-1.2b",
+    "audio": "whisper-tiny",
+    "local_global": "gemma3-12b",
+}
+
+
+def _cfg(name):
+    return reduce_config(get_config(_ARCHS[name]))
+
+
+def _cfg_hybrid_m2():
+    # final layer NOT an attention application site -> mamba2 mixer site
+    cfg = reduce_config(get_config("zamba2-1.2b"))
+    return dataclasses.replace(cfg, n_layers=3, hybrid_attn_every=2)
+
+
+def _setup(cfg, task, seed=0, B=2, S=16):
+    key = jax.random.PRNGKey(seed)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig())
+    peft32 = jax.tree.map(lambda x: x.astype(jnp.float32), peft)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1), 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+    if task == "cls":
+        batch["labels"] = jax.random.randint(ks[1], (B,), 0, cfg.n_classes)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_frontend_tokens or 4, cfg.d_model)) * 0.1
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    return model, base, peft32, batch
+
+
+def _rel(a, b):
+    return float(jnp.abs(a - b).max() / (jnp.abs(b).max() + 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# split loss == plain loss, bitwise, on every family x task
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("task", ["lm", "cls"])
+@pytest.mark.parametrize("family", ["dense", "moe", "vlm", "ssm", "hybrid",
+                                    "audio", "local_global", "hybrid_m2"])
+def test_split_loss_bitwise_equals_plain(family, task):
+    """The registry split losses and the plain closures trace the identical
+    program (``forward`` IS the split composition) -> bitwise equality, both
+    eagerly and under jit."""
+    cfg = _cfg_hybrid_m2() if family == "hybrid_m2" else _cfg(family)
+    model, base, peft32, batch = _setup(cfg, task)
+    plain = get_loss_fn(task)(cfg, base, peft32, batch)
+    split_obj = get_loss_fn(task, split=True)(cfg, base, batch)
+    assert isinstance(split_obj, SplitLoss)
+    np.testing.assert_array_equal(np.asarray(plain),
+                                  np.asarray(split_obj(peft32)))
+    plain_j = jax.jit(lambda p: get_loss_fn(task)(cfg, base, p, batch))(peft32)
+    split_j = jax.jit(split_obj)(peft32)
+    np.testing.assert_array_equal(np.asarray(plain_j), np.asarray(split_j))
+
+
+@pytest.mark.parametrize("family,mod", [
+    ("dense", transformer), ("ssm", rwkv_model), ("hybrid", hybrid),
+    ("audio", encdec)])
+def test_split_composition_matches_scanned_reference(family, mod):
+    """The composition forward equals the retained fully-scanned reference
+    to float-ulp (the per-layer ops are identical; only XLA fusion of the
+    unrolled final layer differs)."""
+    cfg = _cfg(family)
+    model, base, peft32, batch = _setup(cfg, "lm")
+    h_new, aux_new = model.forward(cfg, base, peft32, batch)
+    if family == "audio":
+        h_ref, aux_ref = mod.forward_scanned(cfg, base, peft32,
+                                             batch["tokens"],
+                                             frames=batch["frames"])
+    else:
+        h_ref, aux_ref = mod.forward_scanned(cfg, base, peft32,
+                                             batch["tokens"])
+    np.testing.assert_allclose(np.asarray(h_new), np.asarray(h_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(aux_new), np.asarray(aux_ref),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_hybrid_site_kind_depends_on_final_layer():
+    attn_cfg = _cfg("hybrid")                       # every=1 -> attn final
+    m2_cfg = _cfg_hybrid_m2()
+    assert get_model(attn_cfg).split_site(attn_cfg)[0] == "swa"
+    assert get_model(m2_cfg).split_site(m2_cfg)[0] == "mamba2"
+
+
+# ---------------------------------------------------------------------------
+# estimator: fused == standard on full-model registry losses
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,task", [
+    ("dense", "cls"), ("moe", "lm"), ("vlm", "lm"), ("ssm", "lm"),
+    ("hybrid", "cls"), ("hybrid_m2", "lm"), ("audio", "cls")])
+def test_fullmodel_fused_matches_standard_jnp(family, task):
+    """fused_contraction on/off over the registry losses: loss BITWISE (the
+    routes share the primal program), jvps equal up to reassociation of the
+    contraction, gradients allclose ('jnp' backend)."""
+    cfg = _cfg_hybrid_m2() if family == "hybrid_m2" else _cfg(family)
+    model, base, peft32, batch = _setup(cfg, task)
+    plain = lambda p: get_loss_fn(task)(cfg, base, p, batch)
+    split = get_loss_fn(task, split=True)(cfg, base, batch)
+    key = jax.random.PRNGKey(7)
+    l0, g0, j0 = forward_gradient(plain, peft32, key, k_perturbations=3)
+    l1, g1, j1 = forward_gradient(split, peft32, key, k_perturbations=3,
+                                  fused_contraction=True)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    # jvps differ only by float reassociation of the site contraction
+    # (fp32; ~1e-6-level on the reduced shapes)
+    assert _rel(j1, j0) < 5e-6
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=2e-5)
+
+
+@pytest.mark.parametrize("family,task", [
+    ("dense", "cls"), ("ssm", "lm"),
+    pytest.param("moe", "lm", marks=pytest.mark.slow),
+    pytest.param("hybrid", "cls", marks=pytest.mark.slow),
+    pytest.param("hybrid_m2", "lm", marks=pytest.mark.slow),
+    pytest.param("audio", "cls", marks=pytest.mark.slow)])
+def test_fullmodel_fused_matches_standard_interpret(family, task):
+    """End-to-end through the Pallas epilogue kernels (interpret backend):
+    the full-model fused estimate runs the ``*_jvp_contract`` route at the
+    final-layer site and agrees with the standard kernel route."""
+    cfg = _cfg_hybrid_m2() if family == "hybrid_m2" else _cfg(family)
+    model, base, peft32, batch = _setup(cfg, task, B=1)
+    plain = lambda p: get_loss_fn(task)(cfg, base, p, batch)
+    split = get_loss_fn(task, split=True)(cfg, base, batch)
+    key = jax.random.PRNGKey(9)
+    dispatch.set_backend("interpret")
+    try:
+        l0, _, j0 = forward_gradient(plain, peft32, key, k_perturbations=3)
+        l1, _, j1 = forward_gradient(split, peft32, key, k_perturbations=3,
+                                     fused_contraction=True)
+    finally:
+        dispatch.set_backend(None)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    assert _rel(j1, j0) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# jaxpr: the FULL-model fused path writes no tangent stack at the site
+# ---------------------------------------------------------------------------
+
+def _walk_eqns(j):
+    for eqn in j.eqns:
+        yield eqn
+        for p in eqn.params.values():
+            inner = getattr(p, "jaxpr", None)
+            if inner is not None:
+                yield from _walk_eqns(inner if hasattr(inner, "eqns")
+                                      else inner.jaxpr)
+
+
+def _pallas_calls(closed_jaxpr):
+    return [e for e in _walk_eqns(closed_jaxpr.jaxpr)
+            if e.primitive.name == "pallas_call"]
+
+
+@pytest.mark.parametrize("family,task", [
+    ("dense", "cls"), ("ssm", "lm"), ("hybrid", "cls"), ("hybrid_m2", "lm")])
+def test_fullmodel_fused_jaxpr_no_tangent_stack_at_site(family, task):
+    """The acceptance claim (ISSUE 5): under --fused-contraction, the
+    FULL-model registry losses lower the final-layer site to ONE
+    ``_mt_jvps`` contraction-epilogue pallas_call whose outputs are
+    per-block partials — no (K,)+y.shape tangent-stack buffer is written at
+    the site. (Upstream layers inside the scan legitimately materialize
+    their mt tangents; only the site is epilogue-eligible.)"""
+    K = 4
+    cfg = _cfg_hybrid_m2() if family == "hybrid_m2" else _cfg(family)
+    model, base, peft32, batch = _setup(cfg, task, B=1)
+    split = get_loss_fn(task, split=True)(cfg, base, batch)
+    vs = jax.tree.map(lambda t: jnp.zeros((K,) + t.shape, jnp.float32),
+                      peft32)
+    dispatch.set_backend("interpret")
+    try:
+        _, fused_map = fused_linearize(split, peft32)
+        fused_jaxpr = jax.make_jaxpr(jax.vmap(fused_map))(vs)
+        site_args, _ = split.pre(peft32)
+        with dispatch.forward_ad_region():
+            y_shape = split.site(site_args).shape
+    finally:
+        dispatch.set_backend(None)
+
+    jvps_calls = [e for e in _pallas_calls(fused_jaxpr)
+                  if "_mt_jvps_kernel" in str(
+                      e.params.get("name_and_src_info"))]
+    assert len(jvps_calls) == 1, (
+        f"expected exactly ONE _mt_jvps epilogue call at the site, got "
+        f"{len(jvps_calls)}")
+    stack_size = K * int(np.prod(y_shape))
+    for var in jvps_calls[0].outvars:
+        assert var.aval.size < stack_size, (
+            f"fused site kernel writes a tangent-stack-sized buffer "
+            f"{var.aval.shape} (>= {stack_size} elems)")
+
+
+# ---------------------------------------------------------------------------
+# fallback warning + route telemetry
+# ---------------------------------------------------------------------------
+
+def test_unsplittable_loss_warns_once():
+    """fused_contraction with a plain callable is no longer silent: a
+    one-time UserWarning names the loss and the route taken."""
+    def my_unsplittable_loss(p):
+        return jnp.sum(p["x"] ** 2)
+
+    peft = {"x": jnp.ones((4,))}
+    key = jax.random.PRNGKey(0)
+    _warned_unsplit_losses.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        forward_gradient(my_unsplittable_loss, peft, key,
+                         k_perturbations=2, fused_contraction=True)
+        msgs = [str(w.message) for w in rec
+                if issubclass(w.category, UserWarning)]
+    assert any("my_unsplittable_loss" in m and "standard" in m
+               for m in msgs), msgs
+    # one-time: a second call does not warn again
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        forward_gradient(my_unsplittable_loss, peft, key,
+                         k_perturbations=2, fused_contraction=True)
+        msgs2 = [str(w.message) for w in rec2
+                 if issubclass(w.category, UserWarning)
+                 and "my_unsplittable_loss" in str(w.message)]
+    assert not msgs2
+
+
+def test_make_task_loss_builds_split_when_fused():
+    cfg = _cfg("ssm")
+    model, base, peft32, batch = _setup(cfg, "cls")
+    sc_fused = SpryConfig(fused_contraction=True)
+    sc_std = SpryConfig()
+    assert isinstance(make_task_loss(cfg, sc_fused, "cls", base, batch),
+                      SplitLoss)
+    assert not isinstance(make_task_loss(cfg, sc_std, "cls", base, batch),
+                          SplitLoss)
+
+
+def test_round_step_fused_runs_and_reports_route():
+    """A spry round with --fused-contraction runs the split losses end to
+    end; metrics surface the active route, and the loss equals the standard
+    round's loss bitwise (shared primal program)."""
+    cfg = _cfg("ssm")
+    key = jax.random.PRNGKey(0)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    sc = SpryConfig(n_clients_per_round=2, n_total_clients=4,
+                    k_perturbations=2, fused_contraction=True)
+    sc_std = dataclasses.replace(sc, fused_contraction=False)
+    peft = init_peft(cfg, key, sc)
+    state = init_state(base, peft)
+    M, B, S = 2, 2, 16
+    batch = {"tokens": jax.random.randint(key, (M, B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (M, B), 0, cfg.n_classes)}
+    _, metrics = make_round_step(cfg, sc, "cls")(state, batch)
+    _, metrics_std = make_round_step(cfg, sc_std, "cls")(state, batch)
+    assert float(metrics["fused_route"]) == 1.0
+    assert float(metrics_std["fused_route"]) == 0.0
+    # the two rounds share the primal loss program; the vmap-of-clients +
+    # local-iteration scan wrap them in different tangent surroundings, so
+    # cross-program equality is float-ulp here (the direct bitwise claim is
+    # asserted by test_fullmodel_fused_matches_standard_*)
+    np.testing.assert_allclose(np.asarray(metrics["loss"]),
+                               np.asarray(metrics_std["loss"]), rtol=1e-6)
