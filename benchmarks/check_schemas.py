@@ -39,6 +39,16 @@ _ROUND_RESULT_ROW = {
     "sec_per_round", "bytes_up", "bytes_down",
 }
 
+_SERVE_ROW = {
+    "arch", "mode", "n_adapters", "max_batch", "fused_prefill", "requests",
+    "gen_tokens", "wall_s", "requests_per_sec", "decode_tok_per_sec",
+}
+
+_SERVE_SPEEDUP_ROW = {
+    "arch", "n_adapters", "fused_prefill", "sequential_rps",
+    "continuous_rps", "speedup",
+}
+
 
 def _require(cond, msg, errors):
     if not cond:
@@ -92,20 +102,35 @@ def check_round(doc) -> list:
     return errors
 
 
-def main(kernels_path="BENCH_kernels.json", round_path="BENCH_round.json"):
+def check_serve(doc) -> list:
     errors = []
-    try:
-        errors += check_kernels(json.load(open(kernels_path)))
-    except (OSError, json.JSONDecodeError) as e:
-        errors.append(f"{kernels_path}: unreadable ({e})")
-    try:
-        errors += check_round(json.load(open(round_path)))
-    except (OSError, json.JSONDecodeError) as e:
-        errors.append(f"{round_path}: unreadable ({e})")
+    _require("serve_bench" in doc, "BENCH_serve: missing 'serve_bench'",
+             errors)
+    _check_rows(doc.get("serve_bench", []), _SERVE_ROW, "serve_bench",
+                errors)
+    modes = {row.get("mode") for row in doc.get("serve_bench", [])}
+    _require({"sequential", "continuous"} <= modes,
+             "serve_bench: must cover sequential AND continuous modes",
+             errors)
+    _check_rows(doc.get("speedup", []), _SERVE_SPEEDUP_ROW, "speedup",
+                errors)
+    return errors
+
+
+def main(kernels_path="BENCH_kernels.json", round_path="BENCH_round.json",
+         serve_path="BENCH_serve.json"):
+    errors = []
+    for path, check in ((kernels_path, check_kernels),
+                        (round_path, check_round),
+                        (serve_path, check_serve)):
+        try:
+            errors += check(json.load(open(path)))
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{path}: unreadable ({e})")
     for err in errors:
         print(f"SCHEMA ERROR: {err}")
     if not errors:
-        print(f"ok: {kernels_path} and {round_path} conform")
+        print(f"ok: {kernels_path}, {round_path} and {serve_path} conform")
     return 1 if errors else 0
 
 

@@ -72,6 +72,7 @@ from jax.custom_derivatives import SymbolicZero
 from repro.kernels.lora_dual.ops import (
     lora_dual_mt_jvps,
     lora_dual_mt_tangents,
+    lora_dual_multi,
 )
 from repro.kernels.mamba2_scan import ops as mamba2_ops
 from repro.kernels.mamba2_scan.ref import mamba2_scan_ref
@@ -380,6 +381,62 @@ def _lora_proj_jvp(scale, primals, tangents):
         if has_wd:
             yd = yd + x @ wd
     return y, yd
+
+
+# ---------------------------------------------------------------------------
+# Multi-adapter LoRA projection (serving path)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _lora_multi_fn(scale: float, backend: str):
+    """Per-row multi-adapter projection, custom-vmapped so a batch of rows
+    each carrying its own adapter index lowers to ONE ``lora_dual_multi``
+    pallas_call (one pass over the shared frozen W for the whole
+    heterogeneous batch) on kernel backends, and to the gathered-einsum jnp
+    mirror on 'jnp'. The unbatched base is exactly the single-adapter
+    ``lora_proj`` primal with the pair gathered from the page stacks, so
+    every row is bitwise-equal to single-adapter serving."""
+    def base(x, aidx, w, a_stack, b_stack):
+        a = a_stack[aidx]
+        b = b_stack[aidx]
+        y = x @ w
+        return y + _lora_terms(x, a, b, scale).astype(y.dtype)
+
+    f = custom_vmap(base)
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, x, aidx, w, a_stack, b_stack):
+        xb, ib, wb, ab, bb = in_batched
+        if xb and ib and not (wb or ab or bb):
+            if backend in ("pallas", "interpret"):
+                return lora_dual_multi(
+                    x, aidx, w, a_stack, b_stack, scale=scale,
+                    interpret=backend == "interpret"), True
+            # jnp mirror: gather the per-row pairs, keep the per-row math
+            # of ``base`` (x32 @ A) @ B * s — batched matmuls are
+            # row-independent, so this stays bitwise per row
+            a_sel = jnp.take(a_stack, aidx, axis=0)        # (B, K, r)
+            b_sel = jnp.take(b_stack, aidx, axis=0)        # (B, r, N)
+            y = x @ w
+            u = jnp.einsum("b...k,bkr->b...r", x.astype(a_stack.dtype),
+                           a_sel)
+            lo = jnp.einsum("b...r,brn->b...n", u, b_sel) * scale
+            return y + lo.astype(y.dtype), True
+        return _map_fallback(axis_size, in_batched,
+                             (x, aidx, w, a_stack, b_stack), base)
+    return f
+
+
+def lora_proj_multi(x, idx, w, a_stack, b_stack, scale=1.0):
+    """Batched multi-adapter projection: row b of ``x`` (B, ..., K)
+    projects through adapter page ``idx[b]`` of the (P, K, r)/(P, r, N)
+    page stacks — y[b] = x[b] @ W + s*(x[b] @ A[idx[b]]) @ B[idx[b]].
+    The vmap over rows collapses to one multi-adapter kernel call
+    (pallas/interpret) or the gathered batched mirror ('jnp'); either way
+    the frozen-W GEMM runs once for the whole batch."""
+    fn = _lora_multi_fn(float(scale), get_backend())
+    return jax.vmap(fn, in_axes=(0, 0, None, None, None))(
+        x, idx, w, a_stack, b_stack)
 
 
 # ---------------------------------------------------------------------------

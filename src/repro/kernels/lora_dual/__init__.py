@@ -3,9 +3,11 @@ from repro.kernels.lora_dual.ops import (
     lora_dual_mt,
     lora_dual_mt_jvps,
     lora_dual_mt_tangents,
+    lora_dual_multi,
 )
 from repro.kernels.lora_dual.ref import (
     lora_dual_mt_jvps_ref,
     lora_dual_mt_ref,
+    lora_dual_multi_ref,
     lora_dual_ref,
 )

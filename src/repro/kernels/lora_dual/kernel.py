@@ -282,6 +282,86 @@ def lora_dual_mt_jvps_kernel(x, xdots, w, a, adots, b, bdots, gy, *,
     )(*operands)
 
 
+def _multi_kernel(x_ref, idx_ref, w_ref, a_ref, b_ref, y_ref, acc_y, acc_u,
+                  *, scale: float, n_k: int, n_pages: int):
+    """Multi-adapter LoRA projection: each row of the x block carries an
+    adapter-page index; all P resident pages' rank-r partial products
+    accumulate in VMEM and the finish epilogue one-hot selects each row's
+    page. ONE pass over the shared frozen W serves every adapter — the
+    frozen GEMM (the overwhelming majority of FLOPs) is not re-read or
+    recomputed per adapter, exactly the ``_mt`` idiom with pages in place
+    of tangents."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_y[...] = jnp.zeros_like(acc_y)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    x = x_ref[...]
+    acc_y[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    for p in range(n_pages):  # static unroll over resident adapter pages
+        acc_u[p] += jnp.dot(x, a_ref[p], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        idx = idx_ref[...]                             # (bm, 1) int32
+        y = acc_y[...]
+        for p in range(n_pages):
+            bp = b_ref[p].astype(jnp.float32)
+            yp = scale * jnp.dot(acc_u[p], bp,
+                                 preferred_element_type=jnp.float32)
+            # adding the zero-masked other pages is exact (x + 0.0 == x):
+            # no cross-adapter contamination, each row sees only its page
+            y = y + jnp.where(idx == p, yp, 0.0)
+        y_ref[...] = y.astype(y_ref.dtype)
+
+
+def lora_dual_multi_kernel(x, idx, w, a_stack, b_stack, *, scale: float,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 128, interpret: bool = True):
+    """x: (M,K); idx: (M,1) int32 adapter-page per row; w: (K,N);
+    a_stack: (P,K,r); b_stack: (P,r,N) -> y (M,N).
+
+    Grid and accumulator layout mirror ``lora_dual_mt_kernel`` with the
+    page axis P where the tangent axis T was: the (P, bm, r) rank-r
+    partials live in VMEM across the K reduction, and the frozen-W GEMM
+    runs once for the whole heterogeneous batch. P is the resident-page
+    count of the serving adapter cache (small, ≤ batch)."""
+    M, K = x.shape
+    N = w.shape[1]
+    r = a_stack.shape[2]
+    P = a_stack.shape[0]
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "caller (ops.py) must pad to block multiples")
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+
+    kernel = functools.partial(_multi_kernel, scale=scale, n_k=n_k,
+                               n_pages=P)
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),       # x
+        pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),             # idx
+        pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),       # w
+        pl.BlockSpec((P, block_k, r), lambda i, j, k: (0, k, 0)),       # A
+        pl.BlockSpec((P, r, block_n), lambda i, j, k: (0, 0, j)),       # B
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((P, block_m, r), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, idx, w, a_stack, b_stack)
+
+
 def lora_dual_kernel(x, xdot, w, a, adot, b, bdot, *, scale: float,
                      block_m: int = 128, block_n: int = 128,
                      block_k: int = 128, interpret: bool = True):

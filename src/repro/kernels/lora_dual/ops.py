@@ -26,6 +26,7 @@ from repro.kernels.lora_dual.kernel import (
     lora_dual_kernel,
     lora_dual_mt_jvps_kernel,
     lora_dual_mt_kernel,
+    lora_dual_multi_kernel,
 )
 
 
@@ -112,6 +113,34 @@ def lora_dual_mt_tangents(x, xdots, w, a, adots, b, bdots, scale: float = 1.0,
                               block_k=block_k, interpret=interpret,
                               emit_primal=False)
     return yds[:, :M, :N].reshape((T,) + batch_shape + (N,))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def lora_dual_multi(x, idx, w, a_stack, b_stack, scale: float = 1.0,
+                    block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """Multi-adapter fused projection: each batch row reads its own LoRA
+    page, one pass over the shared frozen W. x: (..., K); idx: adapter-page
+    indices broadcastable to x.shape[:-1] (typically (B,) over a (B, S, K)
+    batch); a_stack: (P, K, r); b_stack: (P, r, N) -> y (..., N)."""
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    idx = jnp.reshape(idx, idx.shape + (1,) * (len(batch_shape) - idx.ndim))
+    idx = jnp.broadcast_to(idx, batch_shape)
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    x2 = _pad_to(_pad_to(x2, block_m, 0), block_k, 1)
+    # padded rows read page 0 over zero inputs; their outputs are discarded
+    i2 = _pad_to(idx.reshape(-1, 1).astype(jnp.int32), block_m, 0)
+    wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+    ap = _pad_to(a_stack, block_k, 1)
+    bp = _pad_to(b_stack, block_n, 2)
+    y = lora_dual_multi_kernel(x2, i2, wp, ap, bp, scale=scale,
+                               block_m=block_m, block_n=block_n,
+                               block_k=block_k, interpret=interpret)
+    return y[:M, :N].reshape(batch_shape + (N,))
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "impl", "block_m",

@@ -38,6 +38,21 @@ def lora_dual_mt_ref(x, xdots, w, a, adots, b, bdots, scale: float):
     return y, ydots
 
 
+def lora_dual_multi_ref(x, idx, w, a_stack, b_stack, scale: float):
+    """Multi-adapter oracle: batch row m projects through adapter page
+    idx[m]. x (M,K); idx (M,) int32 in [0, P); a_stack (P,K,r);
+    b_stack (P,r,N) -> y (M,N) with
+
+        y[m] = x[m] @ W + s * (x[m] @ A[idx[m]]) @ B[idx[m]]
+
+    — i.e. per-row ``lora_dual`` primal semantics with a gathered LoRA
+    pair, ONE shared pass over the frozen W."""
+    a_sel = a_stack[idx]                              # (M, K, r)
+    b_sel = b_stack[idx]                              # (M, r, N)
+    u = jnp.einsum("mk,mkr->mr", x, a_sel)
+    return x @ w + scale * jnp.einsum("mr,mrn->mn", u, b_sel)
+
+
 def lora_dual_mt_jvps_ref(x, w, a, adots, b, bdots, gy, scale: float,
                           xdots=None):
     """Oracle for the fused jvp contraction: materializes all T ydots and

@@ -1,0 +1,223 @@
+"""Paged multi-tenant LoRA adapter cache for serving.
+
+A deployment finetunes one PEFT tree per client (the paper's federated
+personalisation); serving then has to decode requests from MANY clients
+against ONE frozen base. Holding every adapter resident is wasteful and
+re-materialising per request is slow, so the cache keeps N adapter *pages*
+resident in page-stacked buffers — each LoRA factor stored as (P, din, r) /
+(P, r, dout) with the page axis adjacent to the batched multi-adapter
+kernels' gather axis — and evicts least-recently-used pages on overflow
+(the same OrderedDict LRU idiom as ``fl/runtime/population.py`` client
+shards).
+
+Stores supply the per-client trees: ``SyntheticAdapterStore`` fabricates
+deterministic distinct adapters (benchmarks / tests);
+``CheckpointAdapterStore`` reads the npz pytrees that
+``checkpoint.io.save_pytree`` wrote for each client's finetuned peft state.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import load_pytree, save_pytree
+from repro.configs import SpryConfig
+from repro.peft import init_peft
+
+# peft groups whose LoRA factors are stacked on a leading n_layers axis
+_STACKED_GROUPS = ("layers", "enc_layers")
+
+
+class SyntheticAdapterStore:
+    """Deterministic fabricated adapters: adapter ``aid`` is ``init_peft``
+    under a fold_in(seed, aid) key with the B factors randomised (init_peft
+    zeros them — identity adapters would make every tenant identical, hiding
+    routing bugs). Same (seed, aid) -> bitwise-identical tree, every call."""
+
+    def __init__(self, cfg, spry_cfg=None, seed: int = 0):
+        self.cfg = cfg
+        self.spry_cfg = spry_cfg or SpryConfig()
+        self.seed = seed
+
+    def template(self):
+        return self.load(0)
+
+    def load(self, aid: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), aid)
+        tree = init_peft(self.cfg, key, self.spry_cfg)
+        counter = [0]
+
+        def randomize_b(path, leaf):
+            counter[0] += 1
+            last = path[-1]
+            if isinstance(last, jax.tree_util.DictKey) and last.key == "B":
+                k = jax.random.fold_in(key, counter[0])
+                return (0.05 * jax.random.normal(k, leaf.shape)).astype(
+                    leaf.dtype)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(randomize_b, tree)
+
+
+class CheckpointAdapterStore:
+    """Adapters from per-client checkpoint files (``adapter_<aid>.npz``
+    pytrees in ``directory``, the format ``checkpoint.io`` writes).
+    ``template`` supplies the tree structure npz restoration needs."""
+
+    def __init__(self, directory, template):
+        self.directory = Path(directory)
+        self._template = template
+
+    def template(self):
+        return self._template
+
+    def path(self, aid: int) -> str:
+        return str(self.directory / f"adapter_{aid}.npz")
+
+    def save(self, aid: int, tree) -> None:
+        self.directory.mkdir(parents=True, exist_ok=True)
+        save_pytree(self.path(aid), tree)
+
+    def load(self, aid: int):
+        return load_pytree(self.path(aid), self._template)
+
+
+class AdapterCache:
+    """``capacity`` resident adapter pages with LRU eviction + lazy
+    materialisation from ``store``.
+
+    ``acquire(aid)`` returns the adapter's page index, loading and evicting
+    as needed; ``pin``/``unpin`` protect pages referenced by in-flight
+    requests from eviction. ``multi_peft(row_pages)`` builds the
+    index-augmented peft tree the models' multi-adapter projection route
+    consumes; ``page_tree(page)`` slices one page back out as a plain
+    single-adapter tree (bitwise-identical to what the store loaded).
+    """
+
+    def __init__(self, store, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.store = store
+        self.capacity = capacity
+        self._stacked = {}            # group -> target -> {"A","B"} buffers
+        self._pages = OrderedDict()   # aid -> page, LRU order (oldest first)
+        self._free = list(range(capacity))
+        self._pins = {}               # aid -> refcount
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+        template = store.template()
+        for group, gtree in template.items():
+            if group == "head":
+                continue   # classifier head is not a per-row LoRA page
+            paged = {}
+            for target, pair in gtree.items():
+                if not (isinstance(pair, dict) and set(pair) == {"A", "B"}):
+                    raise ValueError(
+                        f"AdapterCache pages LoRA trees only; "
+                        f"{group}/{target} has entries {sorted(pair)}")
+                axis = 1 if group in _STACKED_GROUPS else 0
+                paged[target] = {
+                    name: jnp.zeros(
+                        leaf.shape[:axis] + (capacity,) + leaf.shape[axis:],
+                        leaf.dtype)
+                    for name, leaf in pair.items()
+                }
+            self._stacked[group] = paged
+
+    # -- residency -----------------------------------------------------------
+
+    def resident(self):
+        """aids currently resident, least-recently-used first."""
+        return list(self._pages)
+
+    def acquire(self, aid: int) -> int:
+        """Page index for ``aid``, materialising (and evicting) if needed."""
+        if aid in self._pages:
+            self.hits += 1
+            self._pages.move_to_end(aid)
+            return self._pages[aid]
+        self.misses += 1
+        if self._free:
+            page = self._free.pop()
+        else:
+            victim = next((a for a in self._pages
+                           if self._pins.get(a, 0) == 0), None)
+            if victim is None:
+                raise RuntimeError(
+                    "all resident adapter pages are pinned by in-flight "
+                    "requests; raise the cache capacity or max batch")
+            page = self._pages.pop(victim)
+            self.evictions += 1
+        self._materialize(page, self.store.load(aid))
+        self._pages[aid] = page
+        return page
+
+    def pin(self, aid: int) -> int:
+        page = self.acquire(aid)
+        self._pins[aid] = self._pins.get(aid, 0) + 1
+        return page
+
+    def unpin(self, aid: int) -> None:
+        n = self._pins.get(aid, 0)
+        if n <= 1:
+            self._pins.pop(aid, None)
+        else:
+            self._pins[aid] = n - 1
+
+    def _materialize(self, page: int, tree) -> None:
+        for group, paged in self._stacked.items():
+            gtree = tree[group]
+            for target, pair in paged.items():
+                for name, buf in pair.items():
+                    leaf = jnp.asarray(gtree[target][name], buf.dtype)
+                    if group in _STACKED_GROUPS:
+                        pair[name] = buf.at[:, page].set(leaf)
+                    else:
+                        pair[name] = buf.at[page].set(leaf)
+
+    # -- views ---------------------------------------------------------------
+
+    def page_tree(self, page: int):
+        """Plain single-adapter peft tree sliced from one resident page."""
+        out = {}
+        for group, paged in self._stacked.items():
+            out[group] = {
+                target: {
+                    name: (buf[:, page] if group in _STACKED_GROUPS
+                           else buf[page])
+                    for name, buf in pair.items()
+                }
+                for target, pair in paged.items()
+            }
+        return out
+
+    def multi_peft(self, row_pages):
+        """Index-augmented peft tree for a batch whose row b reads page
+        ``row_pages[b]``: every LoRA entry becomes {"A": page-stacked,
+        "B": page-stacked, "idx": per-row pages} — ``models.common.proj``
+        routes such entries through the batched multi-adapter projection.
+        Stacked groups carry idx as (L, B) so the layer scan slices it to
+        (B,) alongside the (P, din, r) factors."""
+        idx = jnp.asarray(row_pages, jnp.int32)
+        out = {}
+        for group, paged in self._stacked.items():
+            if group in _STACKED_GROUPS:
+                L = next(iter(next(iter(paged.values())).values())).shape[0]
+                gidx = jnp.broadcast_to(idx[None, :], (L, idx.shape[0]))
+            else:
+                gidx = idx
+            out[group] = {
+                target: dict(pair, idx=gidx)
+                for target, pair in paged.items()
+            }
+        return out
+
+    def stats(self):
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "resident": len(self._pages), "capacity": self.capacity}

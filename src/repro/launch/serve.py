@@ -3,12 +3,15 @@
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --steps 32
 
 CPU-runnable on reduced configs; the full-config sharded path is what
-dryrun.py lowers (prefill_32k / decode_32k / long_500k serve_step).
+dryrun.py lowers (prefill_32k / decode_32k / long_500k serve_step). The
+multi-tenant continuous-batching engine built on these pieces lives in
+``repro.launch.serving``.
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -16,16 +19,25 @@ import numpy as np
 
 from repro.configs import SpryConfig, get_config, reduce_config
 from repro.models import get_model
+from repro.models.encdec import encode as encdec_encode
 from repro.peft import init_peft
+
+# cache donation through the jitted decode step: XLA reuses the multi-GB
+# KV-cache buffers in place instead of allocating a fresh copy per token.
+# CPU sometimes declines individual buffers — that is fine, not a bug.
+warnings.filterwarnings("ignore",
+                        message="Some donated buffers were not usable")
 
 
 def tokenwise_prefill(cfg, model, base, peft, cache, prompt_tokens,
                       decode=None):
     """Reference prompt ingestion: P decode_step calls (exercises the cache
     exactly as production decode does). Kept as the fallback for families
-    without a fused prefill and as the equivalence oracle in tests.
-    ``decode`` reuses an already-jitted decode_step (avoids a second
-    compilation of the identical function)."""
+    whose fused prefill cannot reproduce the loop (quantized / too-short
+    ring caches) and as the equivalence oracle in tests. ``decode`` reuses
+    an already-jitted decode_step (avoids a second compilation of the
+    identical function); when absent a NON-donating one is built so callers
+    may keep using the cache they passed in."""
     if decode is None:
         decode = jax.jit(
             lambda base, peft, cache, tok, pos: model.decode_step(
@@ -37,49 +49,92 @@ def tokenwise_prefill(cfg, model, base, peft, cache, prompt_tokens,
     return logits, cache
 
 
-def greedy_generate(cfg, base, peft, prompt_tokens, n_steps, cache_len=None,
-                    fused_prefill=True, kv_int8=False):
-    """prompt_tokens: (B, P) int32. Returns (B, n_steps) generated ids.
-
-    ``fused_prefill=True`` ingests the prompt with ONE chunked-attention /
-    recurrence pass (model.prefill) instead of P decode_step calls — decode
-    output is identical (asserted in tests/test_serve_prefill.py); families
-    without a fused path (hybrid/encdec) fall back to the token loop.
-    """
-    model = get_model(cfg)
-    B, P = prompt_tokens.shape
-    try:
-        cache = model.init_cache(cfg, B, cache_len or (P + n_steps),
-                                 kv_int8=kv_int8)
-    except TypeError:   # families without a quantized-cache knob
-        cache = model.init_cache(cfg, B, cache_len or (P + n_steps))
-
-    decode = jax.jit(
-        lambda base, peft, cache, tok, pos: model.decode_step(
-            cfg, base, peft, cache, tok, pos))
-
-    use_fused = fused_prefill and model.prefill is not None
-    if use_fused and isinstance(cache, dict) and "k" in cache:
+def can_fuse_prefill(cfg, model, cache, prompt_len):
+    """Whether ``model.prefill`` reproduces the token-by-token decode loop
+    for this cache shape (the fused pass must write exactly the rows the
+    loop would have)."""
+    if model.prefill is None:
+        return False
+    if not isinstance(cache, dict):
+        return False
+    if "k" in cache:
         # int8-KV caches: the decode loop attends to QUANTIZED history
         # during ingestion while a fused pass would attend to exact K/V —
         # not equivalent; take the token loop
         if "k_scale" in cache:
-            use_fused = False
+            return False
         # a ring cache SHORTER than the prompt makes the decode loop lossy
         # (early keys are overwritten before later prompt tokens attend);
         # fused attention over the full prompt cannot reproduce that unless
         # every layer is sliding-window AND the ring still covers the window
         Sc = cache["k"].shape[2]
-        if Sc < P:
+        if Sc < prompt_len:
             all_swa = not any(cfg.is_global_layer(i)
                               for i in range(cfg.n_layers))
             if not (all_swa and Sc >= cfg.window):
-                use_fused = False
-    if use_fused:
+                return False
+        return True
+    if "attn_k" in cache:
+        # hybrid shared-attention ring: fusible unless the ring is both
+        # shorter than the prompt AND narrower than the window (the loop
+        # then wraps while still attending full-window — lossy)
+        W = cache["attn_k"].shape[2]
+        if W < prompt_len and W < cfg.window:
+            return False
+        return True
+    return True   # stateful families (rwkv): prefill threads exact state
+
+
+def build_serve_fns(cfg, model):
+    """Hoisted jitted serve entry points — build ONCE and reuse across
+    requests so steady-state serving never re-traces. The decode step
+    donates its cache argument (the multi-GB buffers update in place)."""
+    decode = jax.jit(
+        lambda base, peft, cache, tok, pos: model.decode_step(
+            cfg, base, peft, cache, tok, pos),
+        donate_argnums=(2,))
+    run_prefill = None
+    if model.prefill is not None:
         run_prefill = jax.jit(
             lambda base, peft, cache, toks: model.prefill(
                 cfg, base, peft, cache, toks))
-        logits, cache = run_prefill(base, peft, cache, prompt_tokens)
+    return {"decode": decode, "prefill": run_prefill}
+
+
+def greedy_generate(cfg, base, peft, prompt_tokens, n_steps, cache_len=None,
+                    fused_prefill=True, kv_int8=False, fns=None, frames=None):
+    """prompt_tokens: (B, P) int32. Returns (B, n_steps) generated ids.
+
+    ``fused_prefill=True`` ingests the prompt with ONE chunked-attention /
+    recurrence pass (model.prefill) instead of P decode_step calls — decode
+    output is identical (asserted in tests/test_serve_prefill.py);
+    ``can_fuse_prefill`` gates the cases the fused pass cannot reproduce.
+    ``fns``: reuse entry points from ``build_serve_fns`` (skips re-jitting
+    per call). ``frames``: encoder frames for encoder-decoder families —
+    encoded once into the cache's memory slot before the decoder runs.
+    """
+    model = get_model(cfg)
+    B, P = prompt_tokens.shape
+    if kv_int8 and not model.supports_kv_int8:
+        raise ValueError(
+            f"family {cfg.family!r} has no int8-KV cache "
+            f"(ModelFns.supports_kv_int8 is False)")
+    if model.supports_kv_int8:
+        cache = model.init_cache(cfg, B, cache_len or (P + n_steps),
+                                 kv_int8=kv_int8)
+    else:
+        cache = model.init_cache(cfg, B, cache_len or (P + n_steps))
+    if frames is not None:
+        if not (isinstance(cache, dict) and "memory" in cache):
+            raise ValueError("frames given but the cache has no memory slot")
+        memory = encdec_encode(cfg, base, frames, peft)
+        cache = dict(cache, memory=memory.astype(cache["memory"].dtype))
+    if fns is None:
+        fns = build_serve_fns(cfg, model)
+    decode = fns["decode"]
+
+    if fused_prefill and can_fuse_prefill(cfg, model, cache, P):
+        logits, cache = fns["prefill"](base, peft, cache, prompt_tokens)
     else:
         logits, cache = tokenwise_prefill(cfg, model, base, peft, cache,
                                           prompt_tokens, decode=decode)
@@ -109,13 +164,37 @@ def main():
     base = model.init_base(cfg, key)
     peft = init_peft(cfg, key, SpryConfig())
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    total = args.prompt_len + args.steps
+
+    # warmup: compile prefill + decode at the serving shapes OUTSIDE the
+    # timed region (compile time otherwise dominates and the reported
+    # "throughput" is mostly XLA)
+    fns = build_serve_fns(cfg, model)
+    greedy_generate(cfg, base, peft, prompt, 1, cache_len=total,
+                    fns=fns).block_until_ready()
 
     t0 = time.time()
-    ids = greedy_generate(cfg, base, peft, prompt, args.steps)
-    dt = time.time() - t0
-    tps = args.batch * args.steps / dt
-    print(f"[serve] {args.arch}: generated {ids.shape} in {dt:.2f}s "
-          f"({tps:.1f} tok/s); sample row: {np.asarray(ids[0, :16])}")
+    ids = greedy_generate(cfg, base, peft, prompt, args.steps,
+                          cache_len=total, fns=fns)
+    ids.block_until_ready()
+    e2e = time.time() - t0
+
+    # steady-state decode throughput, separated from end-to-end latency
+    # (which includes prompt ingestion)
+    cache = model.init_cache(cfg, args.batch, total)
+    tok = jnp.zeros((args.batch, 1), jnp.int32)
+    logits, cache = fns["decode"](base, peft, cache, tok, jnp.int32(0))
+    t0 = time.time()
+    for s in range(args.steps):
+        logits, cache = fns["decode"](base, peft, cache, tok,
+                                      jnp.int32(1 + s))
+    logits.block_until_ready()
+    decode_tps = args.batch * args.steps / (time.time() - t0)
+
+    print(f"[serve] {args.arch}: generated {ids.shape} in {e2e:.2f}s "
+          f"end-to-end ({args.batch * args.steps / e2e:.1f} tok/s incl. "
+          f"prefill); steady-state decode {decode_tps:.1f} tok/s; "
+          f"sample row: {np.asarray(ids[0, :16])}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,191 @@
+"""Multi-tenant continuous-batching serving engine.
+
+Requests arrive bound to per-client LoRA adapters (``adapter_id`` into an
+``AdapterCache``); the engine decodes up to ``max_batch`` requests in ONE
+batched decode step per token, each row reading its own adapter page through
+the batched multi-adapter projection route. New requests are admitted into
+free rows of the in-flight batch without draining it (continuous batching):
+admission runs a fused B=1 prefill for the new prompt, scatters the
+resulting row cache into the big batch cache, and the next engine step
+decodes old and new rows together — per-row positions, per-row ring slots,
+per-row adapters.
+
+Per-row outputs match ``serve.greedy_generate`` run per request: rows are
+independent through every batched op, the admission prefill is the same B=1
+pass greedy runs, and the token protocol is identical (first token from the
+prefill logits, each decode step appends one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import (
+    build_serve_fns,
+    can_fuse_prefill,
+    tokenwise_prefill,
+)
+from repro.models import get_model
+from repro.models.encdec import encode as encdec_encode
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: str
+    adapter_id: int
+    prompt: np.ndarray            # (P,) int32 prompt tokens
+    max_new_tokens: int
+    frames: Optional[np.ndarray] = None   # encoder frames (audio family)
+
+
+def _scatter_row(big, row, b):
+    """Write the B=1 ``row`` cache into batch row ``b`` of ``big``. Every
+    cache leaf carries batch on axis 1 (leading layer/site axis) except the
+    encoder memory (batch-leading)."""
+    out = {}
+    for key, buf in big.items():
+        ax = 0 if key == "memory" else 1
+        rowv = jnp.take(row[key], 0, axis=ax).astype(buf.dtype)
+        out[key] = jax.lax.dynamic_update_index_in_dim(buf, rowv, b, ax)
+    return out
+
+
+class ServingEngine:
+    """Request-driven continuous-batching decoder over one frozen base.
+
+    ``adapter_cache``: an ``AdapterCache``; each in-flight row pins its
+    adapter's page (pages of completed requests become evictable again).
+    ``cache_len`` bounds prompt + generation length for every request.
+    """
+
+    def __init__(self, cfg, base, adapter_cache, max_batch: int,
+                 cache_len: int, fused_prefill: bool = True):
+        self.cfg = cfg
+        self.base = base
+        self.adapters = adapter_cache
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.fused_prefill = fused_prefill
+        self.model = get_model(cfg)
+
+        fns = build_serve_fns(cfg, self.model)
+        self._decode = fns["decode"]          # donates the batch cache
+        self._prefill1 = fns["prefill"]
+        # non-donating B=1 decode for the tokenwise-prefill fallback (the
+        # admission cache is scattered into the batch cache afterwards)
+        self._decode1 = jax.jit(
+            lambda base, peft, cache, tok, pos: self.model.decode_step(
+                cfg, base, peft, cache, tok, pos))
+        self._scatter = jax.jit(_scatter_row, donate_argnums=(0,))
+
+        self.cache = self.model.init_cache(cfg, max_batch, cache_len)
+        self._queue = deque()
+        # host-side per-row state
+        self._active = np.zeros(max_batch, bool)
+        self._pos = np.zeros(max_batch, np.int32)
+        self._tok = np.zeros(max_batch, np.int32)
+        self._page = np.zeros(max_batch, np.int32)
+        self._aid = np.zeros(max_batch, np.int64)
+        self._remaining = np.zeros(max_batch, np.int32)
+        self._rid = [None] * max_batch
+        self.outputs = {}
+        self.steps = 0
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        self._queue.append(request)
+
+    def _admit(self, b: int, req: Request) -> None:
+        prompt = jnp.asarray(req.prompt, jnp.int32).reshape(1, -1)
+        P = prompt.shape[1]
+        if P + req.max_new_tokens - 1 > self.cache_len:
+            raise ValueError(
+                f"request {req.request_id!r}: prompt {P} + "
+                f"{req.max_new_tokens} new tokens exceeds cache_len "
+                f"{self.cache_len}")
+        page = self.adapters.pin(req.adapter_id)
+        peft1 = self.adapters.page_tree(page)
+        cache1 = self.model.init_cache(self.cfg, 1, self.cache_len)
+        if req.frames is not None:
+            frames = jnp.asarray(req.frames)
+            if frames.ndim == 2:
+                frames = frames[None]
+            memory = encdec_encode(self.cfg, self.base, frames, peft1)
+            cache1 = dict(cache1,
+                          memory=memory.astype(cache1["memory"].dtype))
+        if self.fused_prefill and can_fuse_prefill(self.cfg, self.model,
+                                                   cache1, P):
+            logits, cache1 = self._prefill1(self.base, peft1, cache1, prompt)
+        else:
+            logits, cache1 = tokenwise_prefill(
+                self.cfg, self.model, self.base, peft1, cache1, prompt,
+                decode=self._decode1)
+        self.cache = self._scatter(self.cache, cache1, b)
+        t0 = int(jnp.argmax(logits[0]))
+        self._active[b] = True
+        self._pos[b] = P
+        self._tok[b] = t0
+        self._page[b] = page
+        self._aid[b] = req.adapter_id
+        self._remaining[b] = req.max_new_tokens - 1
+        self._rid[b] = req.request_id
+        self.outputs[req.request_id] = [t0]
+        if self._remaining[b] == 0:
+            self._finish(b)
+
+    def _finish(self, b: int) -> None:
+        self._active[b] = False
+        self.adapters.unpin(int(self._aid[b]))
+        self._rid[b] = None
+
+    # -- stepping ------------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit waiting requests into free rows, then run ONE batched
+        decode step over the in-flight rows. Returns the number of rows
+        still active (0 -> drained)."""
+        for b in range(self.max_batch):
+            if not self._queue:
+                break
+            if not self._active[b]:
+                self._admit(b, self._queue.popleft())
+        if not self._active.any():
+            return 0
+
+        # inactive rows ride along with page 0 / pos 0 / token 0; every
+        # batched op is row-independent, so their garbage never reaches an
+        # active row, and their outputs are simply dropped here
+        pages = np.where(self._active, self._page, 0)
+        peft = self.adapters.multi_peft(pages)
+        tok = jnp.asarray(np.where(self._active, self._tok, 0),
+                          jnp.int32)[:, None]
+        pos = jnp.asarray(np.where(self._active, self._pos, 0), jnp.int32)
+        logits, self.cache = self._decode(self.base, peft, self.cache, tok,
+                                          pos)
+        self.steps += 1
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for b in range(self.max_batch):
+            if not self._active[b]:
+                continue
+            self._tok[b] = next_tok[b]
+            self._pos[b] += 1
+            self._remaining[b] -= 1
+            self.outputs[self._rid[b]].append(int(next_tok[b]))
+            if self._remaining[b] == 0:
+                self._finish(b)
+        return int(self._active.sum())
+
+    def run(self, requests=None):
+        """Submit ``requests`` (if given) and step until drained. Returns
+        {request_id: generated ids}."""
+        for req in requests or ():
+            self.submit(req)
+        while self._queue or self._active.any():
+            self.step()
+        return dict(self.outputs)

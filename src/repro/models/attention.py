@@ -118,17 +118,26 @@ def attend_decode(q, k_cache, v_cache, pos, *, window=None):
     local:global stacks — a traced mask keeps the scan body uniform so SPMD
     sharding propagates cleanly, unlike a lax.cond over two attention
     variants).
+
+    ``pos`` may be a scalar (whole batch at one position) or a (B,) vector
+    (continuous-batching serve: each row at its own position).
     """
     B, Sc = k_cache.shape[0], k_cache.shape[1]
     hd = q.shape[-1]
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     n_valid = jnp.minimum(pos + 1, Sc)
-    keep = (jnp.arange(Sc)[None, :] < n_valid)[None]
-    keep = jnp.broadcast_to(keep, (B, 1, Sc))
-    if window is not None:
-        # mask stale entries beyond the (possibly per-layer) window; only
-        # meaningful when the cache is longer than the window
-        keep = keep & (jnp.arange(Sc)[None, None, :] > pos - window)
+    if jnp.ndim(pos) == 0:
+        keep = (jnp.arange(Sc)[None, :] < n_valid)[None]
+        keep = jnp.broadcast_to(keep, (B, 1, Sc))
+        if window is not None:
+            # mask stale entries beyond the (possibly per-layer) window; only
+            # meaningful when the cache is longer than the window
+            keep = keep & (jnp.arange(Sc)[None, None, :] > pos - window)
+    else:
+        keep = (jnp.arange(Sc)[None, :] < n_valid[:, None])[:, None, :]
+        if window is not None:
+            keep = keep & (jnp.arange(Sc)[None, None, :]
+                           > (pos - window)[:, None, None])
     return _sdpa(q, k_cache, v_cache, keep, scale)
 
 
@@ -244,19 +253,25 @@ def attn_block_decode(cfg, p, x, peft_layer, lora_scale, k_cache, v_cache, pos,
     """x: (B,1,D). Returns (out, new_k_cache, new_v_cache).
 
     ``window_len``: optional traced per-layer window (overrides is_global;
-    use a huge value for global layers)."""
+    use a huge value for global layers). ``pos``: scalar, or a (B,) vector
+    for per-row positions (each row then writes its own ring slot)."""
     B = x.shape[0]
     hd = cfg.hd
     q, k, v = qkv(cfg, p, x, peft_layer, lora_scale)
     if cfg.rope_theta:
-        pos_arr = jnp.full((1, 1), pos)
+        pos_arr = jnp.full((1, 1), pos) if jnp.ndim(pos) == 0 else pos[:, None]
         q = rope(q, pos_arr, cfg.rope_theta)
         k = rope(k, pos_arr, cfg.rope_theta)
     Sc = k_cache.shape[1]
     slot = pos % Sc   # ring-buffer insert; identity while pos < Sc
     q = constrain(q, "decode_q")
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    if jnp.ndim(pos) == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    else:
+        rows = jnp.arange(B)
+        k_cache = k_cache.at[rows, slot].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, slot].set(v[:, 0].astype(v_cache.dtype))
     k_cache = constrain(k_cache, "decode_cache")
     v_cache = constrain(v_cache, "decode_cache")
     if window_len is not None:
@@ -290,7 +305,7 @@ def attn_block_decode_nocopy(cfg, p, x, peft_layer, lora_scale, k_cache,
     hd = cfg.hd
     q, k_new, v_new = qkv(cfg, p, x, peft_layer, lora_scale)
     if cfg.rope_theta:
-        pos_arr = jnp.full((1, 1), pos)
+        pos_arr = jnp.full((1, 1), pos) if jnp.ndim(pos) == 0 else pos[:, None]
         q = rope(q, pos_arr, cfg.rope_theta)
         k_new = rope(k_new, pos_arr, cfg.rope_theta)
     q = constrain(q, "decode_q")
@@ -313,11 +328,18 @@ def attn_block_decode_nocopy(cfg, p, x, peft_layer, lora_scale, k_cache,
     s_cache = jnp.einsum("bqhd,bkhd->bhqk", q, kc).astype(jnp.float32) * scale
     slot = pos % Sc
     idx = jnp.arange(Sc)
-    valid = idx < jnp.minimum(pos, Sc)          # strictly past tokens
-    valid = valid & (idx != slot)               # slot being overwritten
-    if window is not None:
-        valid = valid & (idx > pos - window)
-    s_cache = jnp.where(valid[None, None, None, :], s_cache, NEG_INF)
+    if jnp.ndim(pos) == 0:
+        valid = idx < jnp.minimum(pos, Sc)      # strictly past tokens
+        valid = valid & (idx != slot)           # slot being overwritten
+        if window is not None:
+            valid = valid & (idx > pos - window)
+        s_cache = jnp.where(valid[None, None, None, :], s_cache, NEG_INF)
+    else:
+        valid = idx[None, :] < jnp.minimum(pos, Sc)[:, None]
+        valid = valid & (idx[None, :] != slot[:, None])
+        if window is not None:
+            valid = valid & (idx[None, :] > (pos - window)[:, None])
+        s_cache = jnp.where(valid[:, None, None, :], s_cache, NEG_INF)
 
     kq = jnp.repeat(k_new, rep, axis=2)
     s_new = jnp.einsum("bqhd,bkhd->bhqk", q, kq).astype(jnp.float32) * scale

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.dispatch import lora_proj
+from repro.kernels.dispatch import lora_proj, lora_proj_multi
 
 
 # ---------------------------------------------------------------------------
@@ -161,9 +161,19 @@ def proj(x, w, b=None, lora=None, lora_scale=1.0):
     paper's trainable subspace; it routes through ``kernels/dispatch`` so
     forward-mode differentiation (SPRY's estimator) hits the fused
     primal+tangent kernel — Pallas on TPU, the jnp reference mirror on CPU.
+
+    A multi-adapter entry carries page-stacked factors plus a per-row page
+    index: {"A": (P, din, r), "B": (P, r, dout), "idx": (B,)}. Each batch row
+    then reads its own adapter page through ``lora_proj_multi`` (one pass
+    over the shared frozen W), which the serving engine uses to decode a
+    batch of requests bound to different adapters.
     """
     if lora is not None:
-        y = lora_proj(x, w, lora["A"], lora["B"], float(lora_scale))
+        if "idx" in lora:
+            y = lora_proj_multi(x, lora["idx"], w, lora["A"], lora["B"],
+                                float(lora_scale))
+        else:
+            y = lora_proj(x, w, lora["A"], lora["B"], float(lora_scale))
     else:
         y = x @ w
     if b is not None:

@@ -180,11 +180,55 @@ def init_cache(cfg, batch: int, seq_len: int):
     }
 
 
+def prefill(cfg, base, peft, cache, tokens, lora_scale=1.0):
+    """Fused decoder prompt ingestion: ONE chunked causal self-attention
+    pass over the whole prompt instead of P decode_step calls. Cross-attends
+    to ``cache["memory"]`` (the encoder output the caller stashed there —
+    NOT recomputed, so the pass composes with the decode loop exactly).
+    Returns (last-token logits (B,V), cache) with the self-attention cache
+    holding the rows the token loop would have written. Whisper's decoder
+    cache is full-length (attn_pattern "full"), so slot placement is the
+    identity; serve falls back to the token loop when the cache is shorter
+    than the prompt."""
+    B, P = tokens.shape
+    h = _decoder_embed(cfg, base, tokens)
+    memory = cache["memory"]
+    peft_layers = (peft or {}).get("layers", {})
+
+    def body(h, xs):
+        lp, pl = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        a, k, v = attn.attn_block_prefill_kv(cfg, lp["self_attn"], hn,
+                                             pl or None, lora_scale)
+        h = h + a
+        hn = apply_norm(cfg, h, lp["ln2"])
+        h = h + attn.cross_attn_block(cfg, lp["cross_attn"], hn, memory,
+                                      pl or None, lora_scale)
+        hn = apply_norm(cfg, h, lp["ln3"])
+        return h + mlp_block(cfg, lp["mlp"], hn, pl or None, lora_scale), (k, v)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (base["layers"], peft_layers))
+    h = apply_norm(cfg, h, base["final_norm"])
+    logits = (h[:, -1, :] @ unembed(cfg, base)).astype(jnp.float32)
+    cache = {
+        "k": cache["k"].at[:, :, :P].set(ks.astype(cache["k"].dtype)),
+        "v": cache["v"].at[:, :, :P].set(vs.astype(cache["v"].dtype)),
+        "memory": memory,
+    }
+    return logits, cache
+
+
 def decode_step(cfg, base, peft, cache, token, pos, lora_scale=1.0):
+    """``pos``: scalar, or a (B,) vector for per-row positions (continuous
+    batching). Sinusoidal row p is identical regardless of table length, so
+    gathering per-row rows matches the scalar slice bitwise."""
     h = jnp.take(base["embed"], token, axis=0)
     # learned/sinusoidal position for the current step
     pos_table = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
-    h = h + jax.lax.dynamic_slice_in_dim(pos_table, pos, 1, axis=0)[None].astype(h.dtype)
+    if jnp.ndim(pos) == 0:
+        h = h + jax.lax.dynamic_slice_in_dim(pos_table, pos, 1, axis=0)[None].astype(h.dtype)
+    else:
+        h = h + jnp.take(pos_table, pos, axis=0)[:, None, :].astype(h.dtype)
     memory = cache["memory"]
     peft_layers = (peft or {}).get("layers", {})
 

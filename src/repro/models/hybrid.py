@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import attention as attn
 from repro.models.common import (
@@ -208,6 +209,67 @@ def init_cache(cfg, batch: int, seq_len: int):
         "attn_k": jnp.zeros((sites, batch, W, cfg.n_kv_heads, cfg.hd), cfg.dtype),
         "attn_v": jnp.zeros((sites, batch, W, cfg.n_kv_heads, cfg.hd), cfg.dtype),
     }
+
+
+def prefill(cfg, base, peft, cache, tokens, lora_scale=1.0):
+    """Fused prompt ingestion for the hybrid stack: ONE pass over the whole
+    prompt instead of P decode_step calls. The mamba2 recurrence is an exact
+    per-token scan either way, so threading the cache's (ssm, conv) states
+    through one multi-token ``mamba2_mix`` call composes identically to the
+    token loop; the shared attention sites run chunked prefill attention and
+    capture the roped K/V rows the decode loop would have inserted
+    (ring-buffer aware, same slot mapping as ``transformer.prefill``)."""
+    B, P = tokens.shape
+    h = embed_tokens(cfg, base, tokens)
+    peft_layers = (peft or {}).get("layers", {})
+    shared_peft = (peft or {}).get("shared") or None
+    every = cfg.hybrid_attn_every
+    idxs = jnp.arange(cfg.n_layers)
+    W = cache["attn_k"].shape[2]
+    # slot s <- the LAST prompt position p < P with p % W == s
+    slots = np.arange(min(P, W))
+    gather = jnp.asarray(slots + W * ((P - 1 - slots) // W), jnp.int32)
+    n_slots = len(slots)
+
+    def shared_prefill(h, ks, vs, site):
+        hn = apply_norm(cfg, h, base["shared"]["ln1"])
+        a, k, v = attn.attn_block_prefill_kv(cfg, base["shared"]["attn"], hn,
+                                             shared_peft, lora_scale,
+                                             is_global=False)
+        h = h + a
+        hn = apply_norm(cfg, h, base["shared"]["ln2"])
+        h = h + mlp_block(cfg, base["shared"]["mlp"], hn)
+        kc = jax.lax.dynamic_index_in_dim(ks, site, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vs, site, 0, keepdims=False)
+        kc = kc.at[:, :n_slots].set(k[:, gather].astype(kc.dtype))
+        vc = vc.at[:, :n_slots].set(v[:, gather].astype(vc.dtype))
+        ks = jax.lax.dynamic_update_index_in_dim(ks, kc, site, 0)
+        vs = jax.lax.dynamic_update_index_in_dim(vs, vc, site, 0)
+        return h, ks, vs
+
+    def body(carry, xs):
+        h, ks, vs = carry
+        lp, pl, ssm_s, conv_s, idx = xs
+        hn = apply_norm(cfg, h, lp["ln1"])
+        mix, ssm_s, conv_s = mamba2_mix(cfg, lp["mix"], hn, pl or None,
+                                        lora_scale, state=ssm_s,
+                                        conv_state=conv_s)
+        h = h + mix
+        site = idx // every
+        h, ks, vs = jax.lax.cond(
+            (idx % every) == (every - 1),
+            lambda h, ks, vs: shared_prefill(h, ks, vs, site),
+            lambda h, ks, vs: (h, ks, vs),
+            h, ks, vs)
+        return (h, ks, vs), (ssm_s, conv_s)
+
+    (h, ks, vs), (ssm_states, conv_states) = jax.lax.scan(
+        body, (h, cache["attn_k"], cache["attn_v"]),
+        (base["layers"], peft_layers, cache["ssm"], cache["conv"], idxs))
+    h = apply_norm(cfg, h, base["final_norm"])
+    logits = (h[:, -1, :] @ unembed(cfg, base)).astype(jnp.float32)
+    return logits, {"ssm": ssm_states, "conv": conv_states,
+                    "attn_k": ks, "attn_v": vs}
 
 
 def decode_step(cfg, base, peft, cache, token, pos, lora_scale=1.0):

@@ -28,8 +28,12 @@ class ModelFns:
     decode_step: Callable
     # fused prompt ingestion: (cfg, base, peft, cache, tokens) ->
     # (last-token logits, cache). None -> serve falls back to the
-    # token-by-token decode loop (hybrid/encdec families).
+    # token-by-token decode loop.
     prefill: Optional[Callable] = None
+    # whether init_cache accepts kv_int8=True (int8 KV entries + bf16
+    # scales). Explicit capability flag — serve checks this instead of
+    # probing the signature with try/except.
+    supports_kv_int8: bool = False
     # split forward (scan L-1 layers, unroll the final one up to its
     # sequence mixer — the fused jvp-contraction site):
     #   split_forward (cfg, base, peft, batch, lora_scale) -> (site_args, ctx)
@@ -112,13 +116,14 @@ _TF_SPLIT = dict(split_forward=_tf_split_forward, split_post=_tf_split_post,
 _FAMILIES = {
     "dense": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
                       transformer.init_cache, transformer.decode_step,
-                      transformer.prefill, **_TF_SPLIT),
+                      transformer.prefill, supports_kv_int8=True,
+                      **_TF_SPLIT),
     "moe": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
                     transformer.init_cache, transformer.decode_step,
-                    transformer.prefill, **_TF_SPLIT),
+                    transformer.prefill, supports_kv_int8=True, **_TF_SPLIT),
     "vlm": ModelFns(transformer.init_base, _tf_forward, transformer.unembed,
                     transformer.init_cache, transformer.decode_step,
-                    transformer.prefill, **_TF_SPLIT),
+                    transformer.prefill, supports_kv_int8=True, **_TF_SPLIT),
     "ssm": ModelFns(rwkv_model.init_base, _rwkv_forward, rwkv_model.unembed,
                     rwkv_model.init_cache, rwkv_model.decode_step,
                     rwkv_model.prefill,
@@ -128,12 +133,14 @@ _FAMILIES = {
                     mixer_site=rwkv_model.mixer_site),
     "hybrid": ModelFns(hybrid.init_base, _hybrid_forward, hybrid.unembed,
                        hybrid.init_cache, hybrid.decode_step,
+                       hybrid.prefill,
                        split_forward=_hybrid_split_forward,
                        split_post=_hybrid_split_post,
                        split_site=hybrid.split_site,
                        mixer_site=hybrid.mixer_site),
     "audio": ModelFns(encdec.init_base, _encdec_forward, encdec.unembed,
                       encdec.init_cache, encdec.decode_step,
+                      encdec.prefill,
                       split_forward=_encdec_split_forward,
                       split_post=_encdec_split_post,
                       split_site=encdec.split_site,

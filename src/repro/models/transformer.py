@@ -340,7 +340,9 @@ def _dequantize_kv(q, scale, dtype):
 
 
 def decode_step(cfg, base, peft, cache, token, pos, lora_scale=1.0):
-    """token: (B,1) int32; pos: scalar int32. Returns (logits (B,V), cache).
+    """token: (B,1) int32; pos: scalar int32 or (B,) vector (continuous
+    batching: each row decodes at its own position and writes its own ring
+    slot). Returns (logits (B,V), cache).
 
     Mixed local:global stacks use a traced per-layer window length instead
     of lax.cond — the masks differ, the computation (and hence the SPMD
@@ -397,22 +399,43 @@ def decode_step(cfg, base, peft, cache, token, pos, lora_scale=1.0):
     # attn_block_decode_nocopy): one in-place row write instead of scanning
     # the multi-GB cache through ys
     slot = pos % Sc
-    if quantized:
-        kq, ksc = _quantize_kv(k_news)
-        vq, vsc = _quantize_kv(v_news)
-        new_cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2),
-            "k_scale": jax.lax.dynamic_update_slice_in_dim(
-                cache["k_scale"], ksc.astype(cache["k_scale"].dtype), slot, axis=2),
-            "v_scale": jax.lax.dynamic_update_slice_in_dim(
-                cache["v_scale"], vsc.astype(cache["v_scale"].dtype), slot, axis=2),
-        }
+    if jnp.ndim(pos) == 0:
+        if quantized:
+            kq, ksc = _quantize_kv(k_news)
+            vq, vsc = _quantize_kv(v_news)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ksc.astype(cache["k_scale"].dtype), slot, axis=2),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vsc.astype(cache["v_scale"].dtype), slot, axis=2),
+            }
+        else:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k_news.astype(cache["k"].dtype), slot, axis=2),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v_news.astype(cache["v"].dtype), slot, axis=2),
+            }
     else:
-        new_cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k_news.astype(cache["k"].dtype), slot, axis=2),
-            "v": jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v_news.astype(cache["v"].dtype), slot, axis=2),
-        }
+        rows = jnp.arange(k_news.shape[1])
+        if quantized:
+            kq, ksc = _quantize_kv(k_news)
+            vq, vsc = _quantize_kv(v_news)
+            new_cache = {
+                "k": cache["k"].at[:, rows, slot].set(kq[:, :, 0]),
+                "v": cache["v"].at[:, rows, slot].set(vq[:, :, 0]),
+                "k_scale": cache["k_scale"].at[:, rows, slot].set(
+                    ksc[:, :, 0].astype(cache["k_scale"].dtype)),
+                "v_scale": cache["v_scale"].at[:, rows, slot].set(
+                    vsc[:, :, 0].astype(cache["v_scale"].dtype)),
+            }
+        else:
+            new_cache = {
+                "k": cache["k"].at[:, rows, slot].set(
+                    k_news[:, :, 0].astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, rows, slot].set(
+                    v_news[:, :, 0].astype(cache["v"].dtype)),
+            }
     return logits, new_cache

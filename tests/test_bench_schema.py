@@ -4,7 +4,7 @@ itself must actually reject broken documents."""
 import json
 import pathlib
 
-from benchmarks.check_schemas import check_kernels, check_round
+from benchmarks.check_schemas import check_kernels, check_round, check_serve
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
@@ -19,6 +19,14 @@ def test_checked_in_bench_round_conforms():
     assert check_round(doc) == []
 
 
+def test_checked_in_bench_serve_conforms():
+    doc = json.load(open(REPO / "BENCH_serve.json"))
+    assert check_serve(doc) == []
+    # the artifact must record the continuous-batching win at scale
+    assert any(s["n_adapters"] >= 8 and s["speedup"] > 1.5
+               for s in doc["speedup"])
+
+
 def test_checker_rejects_broken_docs():
     doc = json.load(open(REPO / "BENCH_kernels.json"))
     del doc["fg_fullmodel"]
@@ -29,3 +37,10 @@ def test_checker_rejects_broken_docs():
     rdoc = json.load(open(REPO / "BENCH_round.json"))
     rdoc["round_bench"] = []
     assert check_round(rdoc)
+    sdoc = json.load(open(REPO / "BENCH_serve.json"))
+    sdoc["serve_bench"] = [r for r in sdoc["serve_bench"]
+                           if r["mode"] != "continuous"]
+    assert check_serve(sdoc)
+    sdoc2 = json.load(open(REPO / "BENCH_serve.json"))
+    sdoc2["speedup"][0].pop("speedup")
+    assert check_serve(sdoc2)

@@ -20,9 +20,13 @@ def _setup(arch):
 
 
 # h2o-danube3 is pure sliding-window: P=70 > window=64 exercises the
-# ring-buffer slot mapping of the fused cache insert
+# ring-buffer slot mapping of the fused cache insert; zamba2 P=70 exercises
+# the hybrid shared-attention ring the same way (plus mamba2/conv state
+# capture); whisper exercises the encoder-decoder prefill
 CASES = [("llama2-7b", 12, 6), ("rwkv6-1.6b", 12, 6),
-         ("gemma3-12b", 12, 6), ("h2o-danube-3-4b", 70, 5)]
+         ("gemma3-12b", 12, 6), ("h2o-danube-3-4b", 70, 5),
+         ("zamba2-1.2b", 12, 6), ("zamba2-1.2b", 70, 5),
+         ("whisper-tiny", 12, 6)]
 
 
 @pytest.mark.parametrize("arch,P,steps", CASES)
@@ -107,18 +111,37 @@ def test_int8_kv_cache_falls_back_to_tokenwise():
 
 
 def test_prefill_registered_per_family():
+    """Every family now serves through a fused prefill."""
+    for arch in ("llama2-7b", "qwen3-moe-235b-a22b", "rwkv6-1.6b",
+                 "zamba2-1.2b", "whisper-tiny"):
+        cfg = reduce_config(get_config(arch))
+        assert get_model(cfg).prefill is not None, arch
+
+
+def test_kv_int8_capability_flag():
+    """``ModelFns.supports_kv_int8`` replaces the old try/except TypeError
+    signature probe: transformer-cache families advertise it, stateful /
+    hybrid / encdec families do not, and requesting kv_int8 on a family
+    without it raises instead of being silently ignored."""
     for arch, has in (("llama2-7b", True), ("qwen3-moe-235b-a22b", True),
-                      ("rwkv6-1.6b", True), ("zamba2-1.2b", False),
+                      ("rwkv6-1.6b", False), ("zamba2-1.2b", False),
                       ("whisper-tiny", False)):
         cfg = reduce_config(get_config(arch))
-        assert (get_model(cfg).prefill is not None) == has, arch
+        assert get_model(cfg).supports_kv_int8 == has, arch
+    cfg, model, base, peft, key = _setup("rwkv6-1.6b")
+    prompt = jax.random.randint(key, (1, 4), 0, cfg.vocab)
+    with pytest.raises(ValueError, match="kv_int8"):
+        greedy_generate(cfg, base, peft, prompt, 2, kv_int8=True)
 
 
 def test_fallback_families_still_generate():
-    """hybrid has no fused path yet — fused_prefill=True must silently fall
-    back to the token loop and produce the same ids as fused_prefill=False."""
-    cfg, model, base, peft, key = _setup("zamba2-1.2b")
-    prompt = jax.random.randint(key, (1, 6), 0, cfg.vocab)
-    a = greedy_generate(cfg, base, peft, prompt, 3, fused_prefill=True)
-    b = greedy_generate(cfg, base, peft, prompt, 3, fused_prefill=False)
+    """A whisper decoder cache SHORTER than the prompt cannot be fused
+    (full-attention decode loop is lossy there) — greedy_generate must
+    silently fall back to the token loop and produce the same ids."""
+    cfg, model, base, peft, key = _setup("whisper-tiny")
+    prompt = jax.random.randint(key, (1, 12), 0, cfg.vocab)
+    a = greedy_generate(cfg, base, peft, prompt, 3, cache_len=8,
+                        fused_prefill=True)
+    b = greedy_generate(cfg, base, peft, prompt, 3, cache_len=8,
+                        fused_prefill=False)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
