@@ -49,6 +49,13 @@ _SERVE_SPEEDUP_ROW = {
     "continuous_rps", "speedup",
 }
 
+_ANALYSIS_VMEM_ROW = {
+    "kernel", "family", "grid", "block_bytes", "scratch_bytes",
+    "residency_bytes", "generation", "budget_bytes", "ok",
+}
+
+_ANALYSIS_FINDING = {"rule", "severity", "entrypoint", "where", "message"}
+
 
 def _require(cond, msg, errors):
     if not cond:
@@ -117,12 +124,51 @@ def check_serve(doc) -> list:
     return errors
 
 
-def main(kernels_path="BENCH_kernels.json", round_path="BENCH_round.json",
-         serve_path="BENCH_serve.json"):
+def check_analysis(doc) -> list:
+    """The repro.analysis lint artifact: per-kernel VMEM residency table +
+    findings audit trail (tracked ANALYSIS.json)."""
     errors = []
+    for key in ("schema", "rules", "budget", "entrypoints", "vmem_kernels",
+                "findings", "summary"):
+        _require(key in doc, f"ANALYSIS: missing top-level {key!r}", errors)
+    _require(doc.get("schema") == "repro.analysis/v1",
+             f"ANALYSIS: unknown schema {doc.get('schema')!r}", errors)
+    _require(len(doc.get("rules", [])) >= 5,
+             "ANALYSIS: fewer than 5 rule classes", errors)
+    budget = doc.get("budget", {})
+    _require(isinstance(budget.get("vmem_bytes_per_core"), int)
+             and budget.get("vmem_bytes_per_core", 0) > 0,
+             "ANALYSIS: budget.vmem_bytes_per_core must be a positive int",
+             errors)
+    _check_rows(doc.get("vmem_kernels", []), _ANALYSIS_VMEM_ROW,
+                "vmem_kernels", errors)
+    families = {r.get("family") for r in doc.get("vmem_kernels", [])}
+    _require({"lora_dual", "wkv6_scan", "swa_attention",
+              "mamba2_scan"} <= families,
+             "ANALYSIS: vmem_kernels must cover all four kernel families",
+             errors)
+    for i, f in enumerate(doc.get("findings", [])):
+        missing = _ANALYSIS_FINDING - set(f)
+        _require(not missing, f"findings[{i}]: missing keys "
+                              f"{sorted(missing)}", errors)
+    _require(isinstance(doc.get("entrypoints"), list)
+             and doc.get("entrypoints"),
+             "ANALYSIS: entrypoints empty or not a list", errors)
+    summary = doc.get("summary", {})
+    for key in ("errors", "warnings", "info"):
+        _require(isinstance(summary.get(key), int),
+                 f"ANALYSIS: summary.{key} must be an int", errors)
+    return errors
+
+
+def main(kernels_path="BENCH_kernels.json", round_path="BENCH_round.json",
+         serve_path="BENCH_serve.json", analysis_path="ANALYSIS.json"):
+    errors = []
+    paths = (kernels_path, round_path, serve_path, analysis_path)
     for path, check in ((kernels_path, check_kernels),
                         (round_path, check_round),
-                        (serve_path, check_serve)):
+                        (serve_path, check_serve),
+                        (analysis_path, check_analysis)):
         try:
             errors += check(json.load(open(path)))
         except (OSError, json.JSONDecodeError) as e:
@@ -130,7 +176,7 @@ def main(kernels_path="BENCH_kernels.json", round_path="BENCH_round.json",
     for err in errors:
         print(f"SCHEMA ERROR: {err}")
     if not errors:
-        print(f"ok: {kernels_path}, {round_path} and {serve_path} conform")
+        print(f"ok: {', '.join(paths)} conform")
     return 1 if errors else 0
 
 

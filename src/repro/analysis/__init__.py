@@ -1,0 +1,58 @@
+"""repro.analysis — jaxpr/HLO static-analysis suite for the memory & AD
+invariants the reproduction's value proposition rests on.
+
+The paper's claim is a MEMORY claim (forward-mode AD never materializes
+activation-scale tangents); this package turns the repo's load-bearing
+invariants from scattered test assertions into one rule-based analyzer
+that traces the real entry points (every model family x lm/cls on the
+fused and standard estimator routes, serving decode/prefill, the runtime
+round step) and checks:
+
+  tangent-materialization  no (K,)+y tangent stack written by a kernel
+                           inside a fused-contraction trace
+  vmem-budget              per-grid-step VMEM residency of every Pallas
+                           kernel fits the TPU generation's per-core budget
+  transpose-reachability   pallas_call unreachable under reverse-mode
+                           outside dispatch.forward_ad_region()
+  donation                 jitted hot loops donate large carried buffers
+  dtype-policy             fp32 kernel accumulators; wire dtypes as declared
+
+CLI:  PYTHONPATH=src python -m repro.analysis.lint [--strict] [--json ...]
+"""
+from repro.analysis.jaxpr_walker import (
+    assert_no_tangent_stack,
+    family_pallas_calls,
+    kernel_name,
+    kernel_src,
+    pallas_calls,
+    tangent_stack_outputs,
+    tangent_stack_size,
+    walk_eqns,
+)
+from repro.analysis.rules import DONATION_WAIVERS, RULES, Finding
+from repro.analysis.vmem import (
+    DEFAULT_GENERATION,
+    VMEM_BYTES,
+    kernel_vmem,
+    representative_kernel_rows,
+    vmem_table,
+)
+
+__all__ = [
+    "DEFAULT_GENERATION",
+    "DONATION_WAIVERS",
+    "Finding",
+    "RULES",
+    "VMEM_BYTES",
+    "assert_no_tangent_stack",
+    "family_pallas_calls",
+    "kernel_name",
+    "kernel_src",
+    "kernel_vmem",
+    "pallas_calls",
+    "representative_kernel_rows",
+    "tangent_stack_outputs",
+    "tangent_stack_size",
+    "vmem_table",
+    "walk_eqns",
+]

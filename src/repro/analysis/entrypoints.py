@@ -1,0 +1,243 @@
+"""Tracer harness: the repo's REAL entry points, traced to closed jaxprs /
+lowered HLO for the rules to inspect.
+
+Registered entry points (each returns ``Trace`` records):
+
+* ``loss_traces``     — every registry family x {lm, cls} x {fused,
+  standard} estimator route, traced exactly the way
+  ``core.forward_grad.forward_gradient`` lowers them (``fused_linearize``
+  + vmap for the contraction route; ``jax.linearize`` inside
+  ``forward_ad_region`` + vmap for the standard route) on the interpret
+  kernel backend — the traces carry real pallas_calls.
+* ``grad_guard_traces`` — ``jax.grad`` of the plain registry losses with a
+  kernel backend selected but OUTSIDE ``forward_ad_region()``: the
+  transpose-reachability rule demands these contain no pallas_call.
+* ``serve_lowered``   — ``launch.serve.build_serve_fns`` decode/prefill
+  jits lowered at serving shapes, plus the ServingEngine's admission
+  decode, for the donation rule.
+* ``round_step_lowered`` — the runtime FederationEngine round jits and the
+  train-loop round step, lowered for the donation rule.
+
+Everything runs at ``reduce_config`` scale (B=1, S=16) — tracing only,
+nothing executes, so the whole sweep is CPU-cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SpryConfig, get_config, reduce_config
+from repro.core.forward_grad import fused_linearize
+from repro.kernels import dispatch
+from repro.models.registry import get_loss_fn, get_model
+from repro.peft import init_peft
+
+# one representative reduced arch per registry family (the gemma3
+# local-global attention variant rides along as a seventh sweep arch)
+ARCHS = {
+    "dense": "llama2-7b",
+    "moe": "qwen3-moe-235b-a22b",
+    "vlm": "internvl2-76b",
+    "ssm": "rwkv6-1.6b",
+    "hybrid": "zamba2-1.2b",
+    "audio": "whisper-tiny",
+    "local_global": "gemma3-12b",
+}
+QUICK_FAMILIES = ("dense", "ssm")
+TASKS = ("lm", "cls")
+
+# which kernel-source substring identifies the family's final-mixer site
+SITE_FAMILY = {"lora": "lora_dual", "wkv6": "wkv6_scan",
+               "swa": "swa_attention", "mamba2": "mamba2_scan"}
+
+
+@dataclasses.dataclass
+class Trace:
+    name: str              # e.g. "loss.dense.cls.fused"
+    kind: str              # "fused_loss" | "standard_loss" | "grad_guard"
+                           # | "lowered"
+    jaxpr: Any = None      # ClosedJaxpr for jaxpr-level rules
+    lowered: Any = None    # jax.stages.Lowered for the donation rule
+    K: Optional[int] = None
+    y_shape: Optional[tuple] = None
+    site_family: Optional[str] = None
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+
+def build_setup(cfg, task, seed=0, B=1, S=16):
+    """Model + base + fp32 peft + a shaped batch for one family/task."""
+    key = jax.random.PRNGKey(seed)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, SpryConfig())
+    peft32 = jax.tree.map(lambda x: x.astype(jnp.float32), peft)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1), 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+    if task == "cls":
+        batch["labels"] = jax.random.randint(ks[1], (B,), 0, cfg.n_classes)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_frontend_tokens or 4, cfg.d_model)) * 0.1
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    return model, base, peft32, batch
+
+
+def _cfg(family):
+    return reduce_config(get_config(ARCHS[family]))
+
+
+def loss_traces(family: str, task: str, K: int = 4) -> List[Trace]:
+    """Fused + standard estimator-route traces for one family/task."""
+    cfg = _cfg(family)
+    model, base, peft32, batch = build_setup(cfg, task)
+    split = get_loss_fn(task, split=True)(cfg, base, batch)
+    vs = jax.tree.map(lambda t: jnp.zeros((K,) + t.shape, jnp.float32),
+                      peft32)
+    dispatch.set_backend("interpret")
+    try:
+        _, fused_map = fused_linearize(split, peft32)
+        fused_jaxpr = jax.make_jaxpr(jax.vmap(fused_map))(vs)
+        site_args, _ = split.pre(peft32)
+        with dispatch.forward_ad_region():
+            y_shape = jax.eval_shape(split.site, site_args).shape
+            _, std_map = jax.linearize(split, peft32)
+        std_jaxpr = jax.make_jaxpr(jax.vmap(std_map))(vs)
+    finally:
+        dispatch.set_backend(None)
+    site = SITE_FAMILY[split.kind]
+    return [
+        Trace(f"loss.{family}.{task}.fused", "fused_loss",
+              jaxpr=fused_jaxpr, K=K, y_shape=tuple(y_shape),
+              site_family=site, meta={"arch": ARCHS[family]}),
+        Trace(f"loss.{family}.{task}.standard", "standard_loss",
+              jaxpr=std_jaxpr, K=K, y_shape=tuple(y_shape),
+              site_family=site, meta={"arch": ARCHS[family]}),
+    ]
+
+
+def grad_guard_traces(family: str, task: str = "cls") -> List[Trace]:
+    """Reverse-mode trace of the plain loss, kernel backend selected,
+    OUTSIDE forward_ad_region — must contain no pallas_call."""
+    cfg = _cfg(family)
+    model, base, peft32, batch = build_setup(cfg, task)
+    plain = lambda p: get_loss_fn(task)(cfg, base, p, batch)
+    dispatch.set_backend("interpret")
+    try:
+        g_jaxpr = jax.make_jaxpr(jax.grad(plain))(peft32)
+    finally:
+        dispatch.set_backend(None)
+    return [Trace(f"grad.{family}.{task}", "grad_guard", jaxpr=g_jaxpr,
+                  meta={"arch": ARCHS[family]})]
+
+
+def serve_lowered(family: str = "dense", B: int = 2, P: int = 8,
+                  steps: int = 8) -> List[Trace]:
+    """The jitted serving entry points, lowered at serving shapes."""
+    from repro.launch.serve import build_serve_fns
+
+    cfg = _cfg(family)
+    model, base, peft32, _ = build_setup(cfg, "lm", B=B)
+    fns = build_serve_fns(cfg, model)
+    cache = model.init_cache(cfg, B, P + steps)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    out = [Trace(f"serve.decode.{family}", "lowered",
+                 lowered=fns["decode"].lower(base, peft32, cache, tok,
+                                             jnp.int32(P)),
+                 meta={"arch": ARCHS[family]})]
+    if fns["prefill"] is not None:
+        toks = jnp.zeros((B, P), jnp.int32)
+        out.append(Trace(
+            f"serve.prefill.{family}", "lowered",
+            lowered=fns["prefill"].lower(base, peft32, cache, toks),
+            meta={"arch": ARCHS[family]}))
+    return out
+
+
+def serving_engine_lowered(family: str = "dense") -> List[Trace]:
+    """The ServingEngine's admission-path jits (B=1 decode + row scatter),
+    lowered the way ``_admit``/``step`` invoke them."""
+    from repro.launch.adapter_cache import (AdapterCache,
+                                            SyntheticAdapterStore)
+    from repro.launch.serving import ServingEngine
+
+    cfg = _cfg(family)
+    model = get_model(cfg)
+    base = model.init_base(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, base, AdapterCache(SyntheticAdapterStore(cfg),
+                                                capacity=2),
+                        max_batch=2, cache_len=16)
+    peft1 = eng.adapters.page_tree(eng.adapters.acquire(0))
+    cache1 = model.init_cache(cfg, 1, eng.cache_len)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    return [
+        Trace(f"serving.decode1.{family}", "lowered",
+              lowered=eng._decode1.lower(base, peft1, cache1, tok,
+                                         jnp.int32(0)),
+              meta={"arch": ARCHS[family]}),
+        Trace(f"serving.scatter.{family}", "lowered",
+              lowered=eng._scatter.lower(eng.cache, cache1, 0),
+              meta={"arch": ARCHS[family]}),
+    ]
+
+
+def round_step_lowered(family: str = "ssm") -> List[Trace]:
+    """The runtime FederationEngine round jits and the train-loop round
+    step, lowered at a tiny cohort. Engine jits are donation-waived by
+    design (the public API borrows caller state); the train-loop step
+    donates its threaded state."""
+    from repro.core.assignment import enumerate_units
+    from repro.core.spry import init_state, make_round_step
+    from repro.fl.runtime import FederationEngine, SerialExecutor, WireConfig
+
+    cfg = _cfg(family)
+    sc = SpryConfig(n_clients_per_round=2, n_total_clients=4,
+                    k_perturbations=2)
+    key = jax.random.PRNGKey(0)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, sc)
+    state = init_state(base, peft)
+    M, B, S = 2, 2, 16
+    batch = {"tokens": jax.random.randint(key, (M, B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (M, B), 0, cfg.n_classes)}
+    n_units = enumerate_units(peft).n_units
+    seed_ids = jnp.arange(M, dtype=jnp.int32)
+    mask = jnp.ones((M, n_units), jnp.float32)
+    keep = jnp.ones((M,), jnp.float32)
+
+    engine = FederationEngine(cfg, sc, task="cls",
+                              executor=SerialExecutor(),
+                              wire=WireConfig(dtype="fp32"))
+    # the train loop jits the in-process round step with its state donated
+    # (mirrors launch/train.py run_training)
+    step = jax.jit(make_round_step(cfg, sc, "cls"), donate_argnums=(0,))
+    return [
+        Trace("engine.round_step", "lowered",
+              lowered=engine._round_jit.lower(state, seed_ids, mask, keep,
+                                              batch),
+              meta={"arch": ARCHS[family]}),
+        Trace("train.round_step", "lowered",
+              lowered=step.lower(state, batch),
+              meta={"arch": ARCHS[family]}),
+    ]
+
+
+def sweep(families=None, tasks=TASKS, quick=False, K: int = 4) -> List[Trace]:
+    """The full registered entry-point sweep the lint runs."""
+    if families is None:
+        families = QUICK_FAMILIES if quick else tuple(ARCHS)
+    traces: List[Trace] = []
+    for fam in families:
+        for task in tasks:
+            traces += loss_traces(fam, task, K=K)
+        traces += grad_guard_traces(fam)
+    traces += serve_lowered("dense")
+    traces += serve_lowered("ssm")
+    traces += serving_engine_lowered("dense")
+    traces += round_step_lowered("ssm")
+    return traces

@@ -1,0 +1,95 @@
+"""The static-analysis lint CLI — the jaxpr/HLO-level correctness gate.
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu python -m repro.analysis.lint \
+        [--strict] [--quick] [--families dense,ssm] [--tasks lm,cls] \
+        [--generation v5e] [--json ANALYSIS.json]
+
+Traces every registered entry point (``analysis.entrypoints``) and checks
+the five rule classes (``analysis.rules``). Exit code: 0 when clean,
+1 on any error finding; ``--strict`` also fails on warnings. ``--json``
+writes the tracked ``ANALYSIS.json`` artifact (per-kernel VMEM residency
+table + findings audit trail) that ``benchmarks/check_schemas.py``
+validates in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Tuple
+
+from repro.analysis import entrypoints as eps
+from repro.analysis import rules as R
+from repro.analysis.report import render, summarize, to_doc, write_analysis
+from repro.analysis.vmem import (DEFAULT_GENERATION, VMEM_BYTES,
+                                 representative_kernel_rows)
+
+
+def run(families=None, tasks=eps.TASKS, quick=False, K=4,
+        generation=DEFAULT_GENERATION) -> Tuple[List[R.Finding], list, list]:
+    """Trace + check everything; returns (findings, vmem_rows, names)."""
+    traces = eps.sweep(families=families, tasks=tasks, quick=quick, K=K)
+    findings: List[R.Finding] = []
+    for t in traces:
+        if t.kind == "fused_loss":
+            findings += R.check_tangent_stack(t.name, t.jaxpr, t.K,
+                                              t.y_shape,
+                                              family=t.site_family)
+            findings += R.check_vmem(t.name, t.jaxpr, generation)
+            findings += R.check_dtype_policy(t.name, t.jaxpr)
+        elif t.kind == "standard_loss":
+            findings += R.record_expected_stack(t.name, t.jaxpr, t.K,
+                                                t.y_shape,
+                                                family=t.site_family)
+            findings += R.check_vmem(t.name, t.jaxpr, generation)
+            findings += R.check_dtype_policy(t.name, t.jaxpr)
+        elif t.kind == "grad_guard":
+            findings += R.check_transpose_reachability(t.name, t.jaxpr)
+        elif t.kind == "lowered":
+            findings += R.check_donation(t.name, t.lowered)
+    findings += R.check_wire_dtypes()
+    vmem_rows = representative_kernel_rows(generation)
+    findings += R.check_vmem_rows("kernels.representative", vmem_rows)
+    return findings, vmem_rows, [t.name for t in traces]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="jaxpr/HLO static-analysis gate "
+                    "(memory & AD-safety invariants)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on warnings too, not just errors")
+    ap.add_argument("--quick", action="store_true",
+                    help="dense+ssm only (CI smoke)")
+    ap.add_argument("--families", default=None,
+                    help="comma-separated registry families "
+                         f"(default: all of {', '.join(eps.ARCHS)})")
+    ap.add_argument("--tasks", default=",".join(eps.TASKS))
+    ap.add_argument("--k", type=int, default=4,
+                    help="K perturbations for the estimator traces")
+    ap.add_argument("--generation", default=DEFAULT_GENERATION,
+                    choices=sorted(VMEM_BYTES),
+                    help="TPU generation whose VMEM budget to enforce")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the ANALYSIS.json artifact here")
+    args = ap.parse_args(argv)
+
+    families = (tuple(f for f in args.families.split(",") if f)
+                if args.families else None)
+    tasks = tuple(t for t in args.tasks.split(",") if t)
+    findings, vmem_rows, names = run(
+        families=families, tasks=tasks, quick=args.quick, K=args.k,
+        generation=args.generation)
+    print(render(findings, vmem_rows, names))
+    if args.json:
+        write_analysis(args.json, to_doc(
+            findings, vmem_rows, names, args.generation,
+            VMEM_BYTES[args.generation]))
+        print(f"\nwrote {args.json}")
+    s = summarize(findings)
+    failed = s["errors"] > 0 or (args.strict and s["warnings"] > 0)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

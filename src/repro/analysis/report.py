@@ -1,0 +1,82 @@
+"""Findings rendering + the tracked ``ANALYSIS.json`` artifact.
+
+``ANALYSIS.json`` is the machine-readable output CI validates
+(``benchmarks/check_schemas.py``): the per-kernel VMEM residency table
+(closing the unmeasured-budget half of ROADMAP item 6), the rule list,
+every finding (including waived/info ones — the audit trail), and a
+summary the schema check and the real-TPU run key off."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List
+
+from repro.analysis.rules import RULES, Finding
+
+SCHEMA = "repro.analysis/v1"
+
+_SEV_ORDER = {"error": 0, "warning": 1, "info": 2}
+
+
+def sort_findings(findings: List[Finding]) -> List[Finding]:
+    return sorted(findings, key=lambda f: (_SEV_ORDER[f.severity], f.rule,
+                                           f.entrypoint, f.where))
+
+
+def summarize(findings: List[Finding]) -> Dict[str, int]:
+    out = {"errors": 0, "warnings": 0, "info": 0}
+    for f in findings:
+        out[{"error": "errors", "warning": "warnings",
+             "info": "info"}[f.severity]] += 1
+    return out
+
+
+def render(findings: List[Finding], vmem_rows: List[Dict],
+           entrypoints: List[str]) -> str:
+    lines = [f"repro.analysis: {len(entrypoints)} entry points, "
+             f"{len(RULES)} rules, {len(vmem_rows)} kernels in the VMEM "
+             f"table"]
+    lines.append("")
+    lines.append("per-kernel VMEM residency (per grid step, double-buffered "
+                 "blocks + scratch):")
+    for row in vmem_rows:
+        mark = "ok" if row["ok"] else "OVER BUDGET"
+        lines.append(
+            f"  {row['kernel']:28s} grid={str(row['grid']):14s} "
+            f"blocks={row['block_bytes'] / 1024:8.1f}KiB "
+            f"scratch={row['scratch_bytes'] / 1024:8.1f}KiB "
+            f"residency={row['residency_mib']:7.3f}MiB [{mark}]")
+    lines.append("")
+    s = summarize(findings)
+    if not findings:
+        lines.append("findings: none")
+    else:
+        lines.append(f"findings: {s['errors']} error(s), {s['warnings']} "
+                     f"warning(s), {s['info']} info")
+        for f in sort_findings(findings):
+            lines.append(f"  {f}")
+    return "\n".join(lines)
+
+
+def to_doc(findings: List[Finding], vmem_rows: List[Dict],
+           entrypoints: List[str], generation: str,
+           budget_bytes: int) -> Dict:
+    return {
+        "schema": SCHEMA,
+        "generated_by": "python -m repro.analysis.lint --json ANALYSIS.json",
+        "rules": list(RULES),
+        "budget": {"generation": generation,
+                   "vmem_bytes_per_core": int(budget_bytes)},
+        "entrypoints": list(entrypoints),
+        "vmem_kernels": vmem_rows,
+        "findings": [dataclasses.asdict(f) for f in sort_findings(findings)],
+        "summary": dict(summarize(findings),
+                        entrypoints=len(entrypoints),
+                        kernels=len(vmem_rows)),
+    }
+
+
+def write_analysis(path: str, doc: Dict) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")

@@ -1,0 +1,289 @@
+"""The rule classes: declared invariants checked against traced programs.
+
+Five rules, each a pure function from a traced artifact (closed jaxpr or
+``jax.jit(...).lower(...)`` Lowered) to ``Finding``s:
+
+``tangent-materialization``  no pallas_call inside a fused-contraction
+    trace writes a buffer as large as the (K,)+y tangent stack, and the
+    site lowers to exactly one ``_mt_jvps`` contraction epilogue.
+``vmem-budget``  every pallas_call's statically-computed per-grid-step
+    VMEM residency fits the selected TPU generation's per-core budget.
+``transpose-reachability``  a reverse-mode trace taken OUTSIDE
+    ``dispatch.forward_ad_region()`` must contain NO pallas_call: the
+    kernels ship no transpose rule, so reaching one under reverse-mode is
+    a latent trace-time crash only convention prevented until now.
+``donation``  jitted hot loops must donate their large carried buffers
+    (decode caches, round-threaded state); intentional non-donation is
+    waived by name with a recorded reason.
+``dtype-policy``  kernel accumulators (VMEM scratch, in-kernel
+    dot_generals) stay fp32, and the wire-payload dtype table matches the
+    declared widths of ``fl/runtime/messages.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.analysis import jaxpr_walker as jw
+from repro.analysis.vmem import DEFAULT_GENERATION, vmem_table
+
+RULES = (
+    "tangent-materialization",
+    "vmem-budget",
+    "transpose-reachability",
+    "donation",
+    "dtype-policy",
+)
+
+# intentional non-donation, by entrypoint name. A waiver downgrades the
+# finding to severity "info" with the recorded rationale instead of
+# silencing it — ANALYSIS.json keeps the audit trail.
+DONATION_WAIVERS = {
+    "engine.round_step": (
+        "FederationEngine.run_round borrows the caller's state; callers "
+        "(reference comparisons, benches) legitimately reuse it after the "
+        "round"),
+    "engine.clients": (
+        "wire-sim phase 1: the same state is re-read by engine.aggregate "
+        "in the same round"),
+    "engine.aggregate": (
+        "public wire-sim API borrows caller state (see engine.round_step)"),
+    "serve.tokenwise_default_decode": (
+        "tokenwise_prefill's fallback decode is intentionally non-donating "
+        "so callers keep using the cache they passed in"),
+}
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    severity: str           # "error" | "warning" | "info"
+    entrypoint: str
+    where: str
+    message: str
+    data: Dict = dataclasses.field(default_factory=dict)
+
+    def __str__(self):
+        return (f"[{self.severity:7s}] {self.rule} @ {self.entrypoint}: "
+                f"{self.message} ({self.where})")
+
+
+# ---------------------------------------------------------------------------
+# rule 1: tangent-materialization
+# ---------------------------------------------------------------------------
+
+def check_tangent_stack(entrypoint: str, jaxpr, K: int, y_shape,
+                        family: Optional[str] = None,
+                        expect_epilogue: bool = True) -> List[Finding]:
+    """Fused-contraction traces must lower the SITE to exactly one
+    ``_mt_jvps`` contraction epilogue whose outputs are per-block partials
+    — never a (K,)+y_shape tangent stack. Upstream scanned layers
+    legitimately materialize their per-layer mt tangents (only the final
+    mixer is epilogue-eligible), so with ``expect_epilogue`` the stack
+    check targets the epilogue call(s); with ``expect_epilogue=False``
+    (single-site toy traces) every pallas_call is checked."""
+    out = []
+    stack = jw.tangent_stack_size(K, y_shape)
+    calls = (jw.family_pallas_calls(jaxpr, family) if family
+             else jw.pallas_calls(jaxpr))
+    scan_calls = calls
+    if expect_epilogue:
+        jvps = [e for e in calls if "_mt_jvps_kernel" in jw.kernel_src(e)]
+        if len(jvps) != 1:
+            out.append(Finding(
+                "tangent-materialization", "error", entrypoint,
+                family or "<site>",
+                f"expected exactly ONE _mt_jvps contraction epilogue at "
+                f"the site, found {len(jvps)}",
+                {"n_epilogues": len(jvps), "n_site_calls": len(calls)}))
+        scan_calls = jvps
+    for eqn in scan_calls:
+        for var in eqn.outvars:
+            if var.aval.size >= stack:
+                out.append(Finding(
+                    "tangent-materialization", "error", entrypoint,
+                    jw.kernel_src(eqn),
+                    f"site kernel writes a tangent-stack-sized buffer "
+                    f"{tuple(var.aval.shape)} (>= K x y = {stack} elems)",
+                    {"K": K, "y_shape": list(map(int, y_shape)),
+                     "out_shape": list(map(int, var.aval.shape))}))
+    return out
+
+
+def record_expected_stack(entrypoint: str, jaxpr, K: int, y_shape,
+                          family: Optional[str] = None) -> List[Finding]:
+    """The standard (non-fused) route SHOULD materialize the site tangent
+    stack — recorded as an info finding so the no-stack rule is proven
+    non-vacuous on every lint run (the 'teeth' check)."""
+    hits = jw.tangent_stack_outputs(jaxpr, K, y_shape, family=family)
+    if hits:
+        return [Finding(
+            "tangent-materialization", "info", entrypoint,
+            jw.kernel_src(hits[0][0]),
+            f"standard route materializes the (K={K},)+y tangent stack as "
+            f"expected — rule has teeth", {"n_stack_outputs": len(hits)})]
+    return [Finding(
+        "tangent-materialization", "warning", entrypoint, family or "<site>",
+        "standard route did NOT materialize a tangent stack — the fused "
+        "no-stack assertion may be vacuous for this entrypoint", {})]
+
+
+# ---------------------------------------------------------------------------
+# rule 2: vmem-budget
+# ---------------------------------------------------------------------------
+
+def check_vmem(entrypoint: str, jaxpr,
+               generation: str = DEFAULT_GENERATION) -> List[Finding]:
+    out = []
+    for row in vmem_table(jaxpr, generation):
+        if not row["ok"]:
+            out.append(Finding(
+                "vmem-budget", "error", entrypoint, row["src"],
+                f"per-grid-step VMEM residency {row['residency_mib']} MiB "
+                f"exceeds the {generation} budget "
+                f"{row['budget_bytes'] / (1 << 20):.0f} MiB", row))
+    return out
+
+
+def check_vmem_rows(entrypoint: str, rows: List[Dict]) -> List[Finding]:
+    """Budget findings for precomputed residency rows (the representative
+    per-kernel table)."""
+    return [Finding(
+        "vmem-budget", "error", entrypoint, row["src"],
+        f"per-grid-step VMEM residency {row['residency_mib']} MiB exceeds "
+        f"the {row['generation']} budget "
+        f"{row['budget_bytes'] / (1 << 20):.0f} MiB", row)
+        for row in rows if not row["ok"]]
+
+
+# ---------------------------------------------------------------------------
+# rule 3: transpose-reachability
+# ---------------------------------------------------------------------------
+
+def check_transpose_reachability(entrypoint: str,
+                                 reverse_jaxpr) -> List[Finding]:
+    """``reverse_jaxpr`` must be a trace taken under reverse-mode AD with a
+    kernel backend selected but OUTSIDE ``forward_ad_region()`` — any
+    pallas_call in it is reachable by a transpose pass that has no rule to
+    apply, i.e. a latent crash."""
+    return [Finding(
+        "transpose-reachability", "error", entrypoint, jw.kernel_src(eqn),
+        "pallas_call reachable under reverse-mode outside "
+        "dispatch.forward_ad_region() — kernels have no transpose rule",
+        {"kernel": jw.kernel_name(eqn)})
+        for eqn in jw.pallas_calls(reverse_jaxpr)]
+
+
+# ---------------------------------------------------------------------------
+# rule 4: donation / aliasing
+# ---------------------------------------------------------------------------
+
+def _flat_args_info(lowered):
+    import jax.tree_util as jtu
+    args, kwargs = lowered.args_info
+    leaves = []
+    for tree in (args, kwargs):
+        for path, info in jtu.tree_flatten_with_path(tree)[0]:
+            leaves.append((jtu.keystr(path), info))
+    return leaves
+
+
+def check_donation(entrypoint: str, lowered, min_bytes: int = 1 << 20,
+                   waivers: Optional[Dict[str, str]] = None) -> List[Finding]:
+    """Large inputs of a jitted hot loop whose shape+dtype matches an
+    output (i.e. carried state XLA could update in place) must be donated.
+
+    ``lowered`` is ``jax.jit(f, ...).lower(*args)``; donation flags come
+    from ``args_info`` and candidate aliases from ``out_info`` — no
+    compile needed. A waiver for ``entrypoint`` downgrades to info."""
+    waivers = DONATION_WAIVERS if waivers is None else waivers
+    out_sigs = {}
+    import jax
+    for leaf in jax.tree_util.tree_leaves(lowered.out_info):
+        sig = (tuple(leaf.shape), np.dtype(leaf.dtype))
+        out_sigs[sig] = out_sigs.get(sig, 0) + 1
+    findings = []
+    for path, info in _flat_args_info(lowered):
+        aval = info._aval
+        nbytes = int(np.prod(aval.shape, dtype=np.int64)) * np.dtype(
+            aval.dtype).itemsize
+        sig = (tuple(aval.shape), np.dtype(aval.dtype))
+        if (info.donated or nbytes < min_bytes
+                or not out_sigs.get(sig)):
+            continue
+        waived = waivers.get(entrypoint)
+        findings.append(Finding(
+            "donation", "info" if waived else "error", entrypoint, path,
+            (f"donation waived: {waived}" if waived else
+             f"large carried buffer ({nbytes / (1 << 20):.1f} MiB, shape "
+             f"{tuple(aval.shape)}) matches an output but is not donated "
+             f"— add donate_argnums"),
+            {"bytes": nbytes, "shape": list(map(int, aval.shape)),
+             "dtype": str(aval.dtype), "waived": bool(waived)}))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule 5: dtype-policy
+# ---------------------------------------------------------------------------
+
+def check_dtype_policy(entrypoint: str, jaxpr) -> List[Finding]:
+    """Inside every pallas kernel body: VMEM scratch (the accumulators)
+    must be fp32, and every dot_general over floating inputs must emit an
+    fp32 result (``preferred_element_type`` discipline)."""
+    out = []
+    for eqn in jw.pallas_calls(jaxpr):
+        body = eqn.params["jaxpr"]
+        gm = eqn.params["grid_mapping"]
+        n_scratch = int(getattr(gm, "num_scratch_operands", 0))
+        for var in (body.invars[-n_scratch:] if n_scratch else []):
+            if np.dtype(var.aval.dtype) != np.float32:
+                out.append(Finding(
+                    "dtype-policy", "error", entrypoint, jw.kernel_src(eqn),
+                    f"kernel scratch accumulator is {var.aval.dtype}, "
+                    f"policy requires float32",
+                    {"shape": list(map(int, var.aval.shape)),
+                     "dtype": str(var.aval.dtype)}))
+        for inner in jw.walk_eqns(body):
+            if inner.primitive.name != "dot_general":
+                continue
+            in_dt = np.dtype(inner.invars[0].aval.dtype)
+            out_dt = np.dtype(inner.outvars[0].aval.dtype)
+            if np.issubdtype(in_dt, np.floating) and out_dt != np.float32:
+                out.append(Finding(
+                    "dtype-policy", "error", entrypoint, jw.kernel_src(eqn),
+                    f"in-kernel dot_general accumulates in {out_dt}, "
+                    f"policy requires float32 accumulation",
+                    {"in_dtype": str(in_dt), "out_dtype": str(out_dt)}))
+    return out
+
+
+def check_wire_dtypes(entrypoint: str = "wire.messages") -> List[Finding]:
+    """The wire-payload dtype table must carry the widths its names
+    declare (fp32=4B, fp16/bf16=2B) and round-trip through
+    ``wire_dtype``."""
+    from repro.fl.runtime import messages
+    declared = {"fp32": 4, "fp16": 2, "bf16": 2}
+    out = []
+    for name, width in declared.items():
+        if name not in messages.WIRE_DTYPES:
+            # bf16 is gated on ml_dtypes being importable — its absence is
+            # a recorded degradation, not a policy violation
+            sev = "info" if name == "bf16" else "error"
+            out.append(Finding(
+                "dtype-policy", sev, entrypoint, f"WIRE_DTYPES[{name}]",
+                f"wire dtype {name!r} unavailable in WIRE_DTYPES", {}))
+            continue
+        dt = np.dtype(messages.WIRE_DTYPES[name])
+        if dt.itemsize != width:
+            out.append(Finding(
+                "dtype-policy", "error", entrypoint, f"WIRE_DTYPES[{name}]",
+                f"wire dtype {name!r} is {dt} ({dt.itemsize}B), declared "
+                f"width is {width}B", {"dtype": str(dt)}))
+        if np.dtype(messages.wire_dtype(name)) != dt:
+            out.append(Finding(
+                "dtype-policy", "error", entrypoint, f"wire_dtype({name})",
+                f"wire_dtype({name!r}) does not round-trip WIRE_DTYPES", {}))
+    return out

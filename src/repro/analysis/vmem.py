@@ -1,0 +1,176 @@
+"""Static per-grid-step VMEM residency model for the Pallas kernels.
+
+A ``pallas_call`` eqn carries everything needed to bound its on-chip
+footprint WITHOUT compiling for TPU: the kernel body jaxpr's invars are
+``AbstractMemoryRef``s — first the per-grid-step operand/output blocks
+(shapes fixed by the BlockSpecs), then the VMEM scratch allocations
+(``pltpu.VMEM`` shapes: the tangent accumulators and jvp-partial buffers
+ROADMAP item 6 calls unmeasured). Per-grid-step residency is then
+
+    residency = 2 * (operand + output block bytes) + scratch bytes
+
+— the factor 2 because the Pallas pipeline double-buffers block operands
+(the next grid step's copies overlap the current compute), while scratch
+persists unbuffered across the grid. This is an upper-bound model (Mosaic
+may skip double-buffering for grid-invariant blocks), which is exactly
+what a budget gate wants.
+
+Budgets are per-core VMEM (~16 MB on current TPU generations, per the
+Pallas guide); the lint compares every kernel's residency against the
+selected generation's budget and ``ANALYSIS.json`` records the table.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.analysis.jaxpr_walker import kernel_name, kernel_src, pallas_calls
+
+MIB = 1 << 20
+
+# per-generation usable VMEM per core (the Pallas TPU guide's ~16 MB/core;
+# kept as a table so future generations with bigger VMEM slot in here)
+VMEM_BYTES = {
+    "v4": 16 * MIB,
+    "v5e": 16 * MIB,
+    "v5p": 16 * MIB,
+}
+DEFAULT_GENERATION = "v5e"
+
+
+def _ref_bytes(var) -> int:
+    aval = var.aval
+    return int(np.prod(aval.shape, dtype=np.int64)) * np.dtype(
+        aval.dtype).itemsize
+
+
+def _is_scratch(var) -> bool:
+    # operand/output block refs carry memory_space None; explicit scratch
+    # allocations are tagged 'vmem' (empirically stable on the pinned jax)
+    return "vmem" in str(getattr(var.aval, "memory_space", "")).lower()
+
+
+def kernel_vmem(eqn, generation: str = DEFAULT_GENERATION) -> Dict:
+    """One residency-table row for a pallas_call eqn."""
+    gm = eqn.params["grid_mapping"]
+    body = eqn.params["jaxpr"]
+    n_scratch = int(getattr(gm, "num_scratch_operands", 0))
+    invars = list(body.invars)
+    if n_scratch:
+        block_refs, scratch_refs = invars[:-n_scratch], invars[-n_scratch:]
+    else:
+        # fall back to the memory-space tag if the count is unavailable
+        block_refs = [v for v in invars if not _is_scratch(v)]
+        scratch_refs = [v for v in invars if _is_scratch(v)]
+    block_bytes = sum(_ref_bytes(v) for v in block_refs)
+    scratch_bytes = sum(_ref_bytes(v) for v in scratch_refs)
+    residency = 2 * block_bytes + scratch_bytes
+    budget = VMEM_BYTES[generation]
+    src = kernel_src(eqn)
+    family = next((f for f in ("lora_dual", "wkv6_scan", "swa_attention",
+                               "mamba2_scan") if f in src), "other")
+    return {
+        "kernel": f"{family}.{kernel_name(eqn)}",
+        "family": family,
+        "src": src,
+        "grid": [int(g) for g in gm.grid],
+        "block_shapes": [list(map(int, v.aval.shape)) for v in block_refs],
+        "scratch_shapes": [list(map(int, v.aval.shape))
+                           for v in scratch_refs],
+        "block_bytes": int(block_bytes),
+        "scratch_bytes": int(scratch_bytes),
+        "residency_bytes": int(residency),
+        "residency_mib": round(residency / MIB, 4),
+        "generation": generation,
+        "budget_bytes": int(budget),
+        "ok": bool(residency <= budget),
+    }
+
+
+def vmem_table(jaxpr, generation: str = DEFAULT_GENERATION) -> List[Dict]:
+    """Residency rows for every pallas_call in a traced program."""
+    return [kernel_vmem(e, generation) for e in pallas_calls(jaxpr)]
+
+
+def dedupe_rows(rows: List[Dict]) -> List[Dict]:
+    """Collapse repeated instantiations of the same kernel at the same
+    block/scratch shapes (scan bodies re-trace identical calls)."""
+    seen, out = set(), []
+    for row in rows:
+        key = (row["kernel"], row["src"].split(" at ")[-1],
+               tuple(map(tuple, row["block_shapes"])),
+               tuple(map(tuple, row["scratch_shapes"])))
+        if key not in seen:
+            seen.add(key)
+            out.append(row)
+    return out
+
+
+def representative_kernel_rows(
+        generation: str = DEFAULT_GENERATION) -> List[Dict]:
+    """Trace every shipped kernel family at representative (paper-scale
+    block) shapes and return its residency row — the per-kernel table
+    ANALYSIS.json tracks: lora_dual (mt / mt_jvps / multi), wkv6_scan,
+    swa_attention, mamba2_scan and their ``_mt_jvps`` epilogues.
+
+    Tracing is shape-level only (``jax.make_jaxpr`` on the jit'd dispatch
+    wrappers, interpret=True): nothing executes, so this runs on CPU."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.lora_dual.ops import (
+        lora_dual_mt, lora_dual_mt_jvps, lora_dual_multi)
+    from repro.kernels.mamba2_scan.ops import (
+        mamba2_scan_mt, mamba2_scan_mt_jvps)
+    from repro.kernels.swa_attention.ops import (
+        swa_attention_mt, swa_attention_mt_jvps)
+    from repro.kernels.wkv6_scan.ops import wkv6_scan_mt, wkv6_scan_mt_jvps
+
+    f32 = jnp.float32
+    T, r = 8, 8                       # K tangents / LoRA rank
+
+    def z(*shape):
+        return jnp.zeros(shape, f32)
+
+    # lora: M=B*S=256 tokens, d=512, one 128^3-blocked projection
+    M, Kd, N = 256, 512, 512
+    x, w, a, b = z(M, Kd), z(Kd, N), z(Kd, r), z(r, N)
+    ad, bd, xd = z(T, Kd, r), z(T, r, N), z(T, M, Kd)
+    gy = z(M, N)
+    # mixers: B=1, S=256, H=8 heads, hd=64, mamba2 state N=64
+    B, S, H, hd, Nst = 1, 256, 8, 64, 64
+    rr, kk, vv, ww, u = (z(B, S, H, hd),) * 4 + (z(H, hd),)
+    rds, kds, vds, wds = (z(T, B, S, H, hd),) * 4
+    gy_m = z(B, S, H, hd)
+    q, ks_, vs_ = z(B, H, S, hd), z(B, H, S, hd), z(B, H, S, hd)
+    qd, kd_, vd_ = (z(T, B, H, S, hd),) * 3
+    xdt, bm, cm = z(B, S, H, hd), z(B, S, Nst), z(B, S, Nst)
+    dec = z(B, S, H)
+    xdd, bdd, cdd, ddd = (z(T, B, S, H, hd), z(T, B, S, Nst),
+                          z(T, B, S, Nst), z(T, B, S, H))
+    idx = jnp.zeros((M,), jnp.int32)
+    a_st, b_st = z(4, Kd, r), z(4, r, N)
+
+    traces = [
+        lambda: lora_dual_mt(x, xd, w, a, ad, b, bd, interpret=True),
+        lambda: lora_dual_mt_jvps(x, w, a, ad, b, bd, gy, xdots=xd,
+                                  impl="kernel", interpret=True),
+        lambda: lora_dual_multi(x, idx, w, a_st, b_st, interpret=True),
+        lambda: wkv6_scan_mt(rr, kk, vv, ww, u, rds, kds, vds, wds,
+                             interpret=True),
+        lambda: wkv6_scan_mt_jvps(rr, kk, vv, ww, u, rds, kds, vds, wds,
+                                  gy_m, interpret=True),
+        lambda: swa_attention_mt(q, ks_, vs_, qd, kd_, vd_, window=128,
+                                 interpret=True),
+        lambda: swa_attention_mt_jvps(q, ks_, vs_, qd, kd_, vd_, gy_m,
+                                      window=128, interpret=True),
+        lambda: mamba2_scan_mt(xdt, bm, cm, dec, xdd, bdd, cdd, ddd,
+                               interpret=True),
+        lambda: mamba2_scan_mt_jvps(xdt, bm, cm, dec, xdd, bdd, cdd, ddd,
+                                    gy_m, interpret=True),
+    ]
+    rows = []
+    for thunk in traces:
+        rows += vmem_table(jax.make_jaxpr(thunk)(), generation)
+    return dedupe_rows(rows)

@@ -387,3 +387,55 @@ def analyse_hlo(hlo_text) -> Totals:
     if entry is None:
         return Totals()
     return analyse_computation(entry, comps, cache)
+
+
+# ---------------------------------------------------------------------------
+# donation / aliasing: entry parameters vs input_output_alias
+# ---------------------------------------------------------------------------
+
+_ALIAS_BLOCK_RE = re.compile(r"input_output_alias=\{(.*?)\}[,\s]", re.S)
+_ALIAS_ENTRY_RE = re.compile(r"\{([0-9,\s]*)\}\s*:\s*\((\d+)\s*,")
+_ENTRY_LAYOUT_RE = re.compile(
+    r"entry_computation_layout=\{\((.*?)\)\s*->", re.S)
+
+
+def parse_input_output_aliases(hlo_text):
+    """The module-level ``input_output_alias`` map of compiled HLO text as
+    ``{param_index: output_index}`` (tuple output indices flattened to their
+    leading position). Empty dict when the program donates nothing."""
+    m = _ALIAS_BLOCK_RE.search(hlo_text)
+    if not m:
+        return {}
+    aliases = {}
+    for out_idx, param in _ALIAS_ENTRY_RE.findall(m.group(1)):
+        first = out_idx.split(",")[0].strip()
+        aliases[int(param)] = int(first) if first else 0
+    return aliases
+
+
+def entry_parameter_bytes(hlo_text):
+    """Byte size of each entry parameter, in parameter order, from the
+    ``entry_computation_layout`` line (falls back to the ENTRY header's
+    parameter list for hand-written HLO)."""
+    m = _ENTRY_LAYOUT_RE.search(hlo_text)
+    if m:
+        return [_shape_bytes(p.strip())
+                for p in _split_top(m.group(1)) if p.strip()]
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        return []
+    out = []
+    for raw in _split_top(comps[entry]["params"]):
+        if ":" in raw:
+            out.append(_shape_bytes(raw.split(":", 1)[1].strip()))
+    return out
+
+
+def undonated_param_bytes(hlo_text, min_bytes=1 << 20):
+    """Parameters of at least ``min_bytes`` NOT covered by an
+    input_output_alias entry: ``[(param_index, nbytes), ...]``. The HLO-text
+    mirror of the jaxpr-level donation rule (``repro.analysis.rules``),
+    usable on dryrun/launch artifacts where only compiled text survives."""
+    aliases = parse_input_output_aliases(hlo_text)
+    return [(i, b) for i, b in enumerate(entry_parameter_bytes(hlo_text))
+            if b >= min_bytes and i not in aliases]

@@ -95,9 +95,13 @@ def build_serve_fns(cfg, model):
         donate_argnums=(2,))
     run_prefill = None
     if model.prefill is not None:
+        # the prompt cache is carried state exactly like the decode cache:
+        # every caller rebinds it (logits, cache = prefill(...)), so the
+        # pre-prefill buffers can be reused in place
         run_prefill = jax.jit(
             lambda base, peft, cache, toks: model.prefill(
-                cfg, base, peft, cache, toks))
+                cfg, base, peft, cache, toks),
+            donate_argnums=(2,))
     return {"decode": decode, "prefill": run_prefill}
 
 

@@ -76,11 +76,14 @@ class ServingEngine:
         fns = build_serve_fns(cfg, self.model)
         self._decode = fns["decode"]          # donates the batch cache
         self._prefill1 = fns["prefill"]
-        # non-donating B=1 decode for the tokenwise-prefill fallback (the
-        # admission cache is scattered into the batch cache afterwards)
+        # B=1 decode for the tokenwise-prefill fallback. The admission
+        # cache is engine-internal (rebound every step, then scattered into
+        # the batch cache), so its buffers are donated like the batch
+        # decode's — flagged by repro.analysis's donation rule.
         self._decode1 = jax.jit(
             lambda base, peft, cache, tok, pos: self.model.decode_step(
-                cfg, base, peft, cache, tok, pos))
+                cfg, base, peft, cache, tok, pos),
+            donate_argnums=(2,))
         self._scatter = jax.jit(_scatter_row, donate_argnums=(0,))
 
         self.cache = self.model.init_cache(cfg, max_batch, cache_len)

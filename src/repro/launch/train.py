@@ -14,6 +14,7 @@ import argparse
 import dataclasses
 import json
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +29,11 @@ from repro.core import (
 )
 from repro.core.baselines import make_backprop_round_step, make_zeroorder_round_step
 from repro.core.baselines.zeroorder import ZOState, init_zo_state
+
+# round-state donation through the jitted step: CPU sometimes declines
+# individual buffers — harmless, not worth a per-round warning
+warnings.filterwarnings("ignore",
+                        message="Some donated buffers were not usable")
 from repro.data import make_task
 from repro.data.loader import ClientDataset, stack_client_batches
 from repro.fl import dirichlet_partition, sample_clients
@@ -184,7 +190,9 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
 
     if engine is None:
         step_fn, kind = build_round_step(cfg, sc, method)
-        step_fn = jax.jit(step_fn)
+        # the round state is threaded round-to-round and never re-read, so
+        # its buffers update in place (CPU may decline — that is fine)
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
         if kind == "zo":
             state = init_zo_state(state)
 

@@ -1,10 +1,15 @@
-"""The checked-in BENCH JSON artifacts must conform to the schemas the CI
-bench-smoke job enforces (benchmarks/check_schemas.py) — and the checker
-itself must actually reject broken documents."""
+"""The checked-in BENCH/ANALYSIS JSON artifacts must conform to the schemas
+the CI jobs enforce (benchmarks/check_schemas.py) — and the checker itself
+must actually reject broken documents."""
 import json
 import pathlib
 
-from benchmarks.check_schemas import check_kernels, check_round, check_serve
+from benchmarks.check_schemas import (
+    check_analysis,
+    check_kernels,
+    check_round,
+    check_serve,
+)
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
@@ -25,6 +30,33 @@ def test_checked_in_bench_serve_conforms():
     # the artifact must record the continuous-batching win at scale
     assert any(s["n_adapters"] >= 8 and s["speedup"] > 1.5
                for s in doc["speedup"])
+
+
+def test_checked_in_analysis_conforms():
+    doc = json.load(open(REPO / "ANALYSIS.json"))
+    assert check_analysis(doc) == []
+    # the tracked artifact must be a CLEAN lint run: info findings (teeth
+    # records, donation waivers) are fine, errors/warnings are not
+    assert doc["summary"]["errors"] == 0
+    assert doc["summary"]["warnings"] == 0
+    # and every kernel in the residency table fits its budget
+    assert all(row["ok"] for row in doc["vmem_kernels"])
+
+
+def test_analysis_checker_rejects_broken_docs():
+    doc = json.load(open(REPO / "ANALYSIS.json"))
+    doc["schema"] = "something/else"
+    assert check_analysis(doc)
+    doc2 = json.load(open(REPO / "ANALYSIS.json"))
+    doc2["vmem_kernels"] = [r for r in doc2["vmem_kernels"]
+                            if r["family"] != "mamba2_scan"]
+    assert check_analysis(doc2)
+    doc3 = json.load(open(REPO / "ANALYSIS.json"))
+    doc3["vmem_kernels"][0].pop("residency_bytes")
+    assert check_analysis(doc3)
+    doc4 = json.load(open(REPO / "ANALYSIS.json"))
+    doc4["summary"].pop("errors")
+    assert check_analysis(doc4)
 
 
 def test_checker_rejects_broken_docs():

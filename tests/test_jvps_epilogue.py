@@ -16,6 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import (
+    assert_no_tangent_stack,
+    family_pallas_calls,
+    kernel_src,
+    pallas_calls,
+    tangent_stack_outputs,
+)
 from repro.core.forward_grad import (
     SplitLoss,
     forward_gradient,
@@ -237,36 +244,11 @@ def test_swa_jvps_stacked_bitwise_equals_single_tangent_passes():
 # ---------------------------------------------------------------------------
 # dispatch: cotangent-known route (vmap-of-tangents -> ONE _jvps call,
 # NO (K, ..., N) tangent output anywhere)
+#
+# jaxpr inspection goes through the shared repro.analysis pass; the old
+# per-test _walk_eqns/_pallas_calls/_assert_no_tangent_stack_output
+# helpers live there now.
 # ---------------------------------------------------------------------------
-
-def _walk_eqns(j):
-    for eqn in j.eqns:
-        yield eqn
-        for p in eqn.params.values():
-            inner = getattr(p, "jaxpr", None)
-            if inner is not None:
-                yield from _walk_eqns(inner if hasattr(inner, "eqns")
-                                      else inner.jaxpr)
-
-
-def _pallas_calls(closed_jaxpr):
-    return [e for e in _walk_eqns(closed_jaxpr.jaxpr)
-            if e.primitive.name == "pallas_call"]
-
-
-def _assert_no_tangent_stack_output(closed_jaxpr, K, y_shape):
-    """No pallas_call (the site kernels) may WRITE a buffer as large as the
-    (K,) + y_shape tangent stack the epilogue exists to remove. (Site INPUT
-    tangents of that size are unavoidable — they are the kernel's operands
-    — so the check targets kernel outputs, the buffers the mt_tangents
-    route materializes; the epilogue writes only per-block partials, orders
-    of magnitude smaller.)"""
-    stack_size = K * int(np.prod(y_shape))
-    for eqn in _pallas_calls(closed_jaxpr):
-        for var in eqn.outvars:
-            assert var.aval.size < stack_size, (
-                f"kernel writes a tangent-stack-sized buffer "
-                f"{var.aval.shape} (>= K x y = {stack_size} elems): {eqn}")
 
 
 @pytest.mark.parametrize("kind", ["lora", "wkv6", "swa", "mamba2"])
@@ -322,12 +304,12 @@ def test_vmap_of_contract_traces_jvps_epilogue(kind):
     finally:
         dispatch.set_backend(None)
 
-    calls = _pallas_calls(jaxpr)
+    calls = pallas_calls(jaxpr)
     assert len(calls) == 1, f"expected ONE _jvps pallas_call, got {calls}"
     (out_aval,) = [v.aval for v in calls[0].outvars]
     # per-block partials: trailing tangent axis K, tiny total size
     assert out_aval.shape[-1] == K
-    _assert_no_tangent_stack_output(jaxpr, K, y_shape)
+    assert_no_tangent_stack(jaxpr, K, y_shape)
 
 
 # ---------------------------------------------------------------------------
@@ -498,22 +480,13 @@ def test_fused_route_jaxpr_has_no_tangent_stack_at_site(kind):
     family = {"lora": "lora_dual", "wkv6": "wkv6_scan",
               "swa": "swa_attention", "mamba2": "mamba2_scan"}[kind]
 
-    def site_calls(jaxpr):
-        # upstream (non-site) mixers in ``pre`` legitimately materialize
-        # their tangents — only the SITE family's kernels are under test
-        return [e for e in _pallas_calls(jaxpr)
-                if family in str(e.params.get("name_and_src_info"))]
-
-    stack_size = K * int(np.prod(y_shape))
-    fused_site = site_calls(fused_jaxpr)
+    # upstream (non-site) mixers in ``pre`` legitimately materialize their
+    # tangents — only the SITE family's kernels are under test
+    fused_site = family_pallas_calls(fused_jaxpr, family)
     assert fused_site, "fused route lost the site kernel entirely"
     for eqn in fused_site:
-        assert "_mt_jvps_kernel" in str(eqn.params.get("name_and_src_info"))
-        for var in eqn.outvars:
-            assert var.aval.size < stack_size, (
-                f"fused site kernel writes a tangent-stack-sized buffer "
-                f"{var.aval.shape}: {eqn}")
-    found = any(v.aval.size >= stack_size
-                for e in site_calls(std_jaxpr) for v in e.outvars)
-    assert found, ("standard route should materialize the site tangent "
-                   "stack — the no-stack assertion would be vacuous")
+        assert "_mt_jvps_kernel" in kernel_src(eqn)
+    assert_no_tangent_stack(fused_jaxpr, K, y_shape, family=family)
+    assert tangent_stack_outputs(std_jaxpr, K, y_shape, family=family), (
+        "standard route should materialize the site tangent stack — the "
+        "no-stack assertion would be vacuous")

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import pallas_calls
 from repro.core.forward_grad import forward_gradient
 from repro.kernels import dispatch
 from repro.kernels.swa_attention import (
@@ -257,20 +258,6 @@ def test_swa_mt_forced_pad_hd():
 # dispatch: estimator routing (vmap-of-tangents -> ONE mt pallas_call)
 # ---------------------------------------------------------------------------
 
-def _pallas_calls(closed_jaxpr):
-    """All pallas_call eqns anywhere in a (nested) jaxpr."""
-    def walk(j):
-        for eqn in j.eqns:
-            if eqn.primitive.name == "pallas_call":
-                yield eqn
-            for p in eqn.params.values():
-                inner = getattr(p, "jaxpr", None)
-                if inner is not None:
-                    yield from walk(inner if hasattr(inner, "eqns")
-                                    else inner.jaxpr)
-    return list(walk(closed_jaxpr.jaxpr))
-
-
 def test_vmap_of_lora_tangents_traces_mt_route():
     """vmap of lora_proj tangents inside forward_ad_region() must lower to
     the multi-tangent kernel directly — ONE pallas_call whose tangent output
@@ -298,7 +285,7 @@ def test_vmap_of_lora_tangents_traces_mt_route():
     finally:
         dispatch.set_backend(None)
 
-    calls = _pallas_calls(jaxpr)
+    calls = pallas_calls(jaxpr)
     assert len(calls) == 1, f"expected ONE fused mt pallas_call, got {calls}"
     (out_aval,) = [v.aval for v in calls[0].outvars]
     assert out_aval.ndim == 3 and out_aval.shape[0] == K, (
@@ -339,7 +326,7 @@ def test_vmap_of_mixer_tangents_traces_mt_route(mixer):
     finally:
         dispatch.set_backend(None)
 
-    calls = _pallas_calls(jaxpr)
+    calls = pallas_calls(jaxpr)
     assert len(calls) == 1, f"expected ONE fused mt pallas_call, got {calls}"
     (out_aval,) = [v.aval for v in calls[0].outvars]
     assert out_aval.shape[0] == K, (
