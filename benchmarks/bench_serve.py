@@ -88,23 +88,38 @@ def bench_arch(arch, adapter_counts, n_new, max_batch, quick):
                                 cache_len=P_PROMPT + n_new,
                                 fused_prefill=fused)
             eng.run(warm)
+            cs0 = ac.stats()
             t0 = time.time()
             eng_out = eng.run(reqs)
             eng_wall = time.time() - t0
+            cs1 = ac.stats()
+            # cache traffic of the TIMED run only (warmup excluded)
+            c_hits = cs1["hits"] - cs0["hits"]
+            c_miss = cs1["misses"] - cs0["misses"]
 
             for rid, ids in seq_out.items():
                 assert eng_out[rid] == ids, (arch, n_adapters, fused, rid)
             gen = n_requests * n_new
             for mode, wall in (("sequential", seq_wall),
                                ("continuous", eng_wall)):
-                rows.append({
+                row = {
                     "arch": arch, "mode": mode, "n_adapters": n_adapters,
                     "max_batch": max_batch, "fused_prefill": fused,
                     "requests": n_requests, "gen_tokens": gen,
                     "wall_s": round(wall, 4),
                     "requests_per_sec": round(n_requests / wall, 3),
                     "decode_tok_per_sec": round(gen / wall, 2),
-                })
+                }
+                if mode == "continuous":
+                    row.update({
+                        "cache_hits": c_hits,
+                        "cache_misses": c_miss,
+                        "cache_evictions": cs1["evictions"]
+                        - cs0["evictions"],
+                        "cache_hit_rate": round(
+                            c_hits / max(1, c_hits + c_miss), 4),
+                    })
+                rows.append(row)
             rps[("seq", fused)] = n_requests / seq_wall
             rps[("eng", fused)] = n_requests / eng_wall
             print(f"[serve] {arch} adapters={n_adapters} fused={fused}: "

@@ -49,6 +49,18 @@ _SERVE_SPEEDUP_ROW = {
     "continuous_rps", "speedup",
 }
 
+# continuous-batching rows additionally carry the adapter-cache traffic of
+# the timed run (the paged-LRU behaviour is part of what the bench measures)
+_SERVE_CACHE_KEYS = {
+    "cache_hits", "cache_misses", "cache_evictions", "cache_hit_rate",
+}
+
+_ROOFLINE_ROW = {
+    "arch", "shape", "compute_s", "memory_s", "collective_s", "dominant",
+    "useful_flop_ratio", "flops_per_device", "collective_bytes_per_device",
+    "peak_bytes", "tpu_adjusted_peak_bytes",
+}
+
 _ANALYSIS_VMEM_ROW = {
     "kernel", "family", "grid", "block_bytes", "scratch_bytes",
     "residency_bytes", "generation", "budget_bytes", "ok",
@@ -119,8 +131,73 @@ def check_serve(doc) -> list:
     _require({"sequential", "continuous"} <= modes,
              "serve_bench: must cover sequential AND continuous modes",
              errors)
+    for i, row in enumerate(doc.get("serve_bench", [])):
+        if row.get("mode") == "continuous":
+            missing = _SERVE_CACHE_KEYS - set(row)
+            _require(not missing,
+                     f"serve_bench[{i}] (continuous): missing adapter-cache "
+                     f"keys {sorted(missing)}", errors)
     _check_rows(doc.get("speedup", []), _SERVE_SPEEDUP_ROW, "speedup",
                 errors)
+    return errors
+
+
+def check_roofline(doc) -> list:
+    errors = []
+    _require("roofline" in doc, "BENCH_roofline: missing 'roofline'", errors)
+    rows = doc.get("roofline", [])
+    _require(isinstance(rows, list) and rows,
+             "roofline: empty or not a list", errors)
+    analysed = 0
+    for i, row in enumerate(rows or []):
+        if row.get("skipped"):
+            _require("reason" in row,
+                     f"roofline[{i}]: skipped row needs a 'reason'", errors)
+            continue
+        analysed += 1
+        missing = _ROOFLINE_ROW - set(row)
+        _require(not missing,
+                 f"roofline[{i}]: missing keys {sorted(missing)}", errors)
+        _require(row.get("dominant") in ("compute", "memory", "collective"),
+                 f"roofline[{i}]: bad dominant {row.get('dominant')!r}",
+                 errors)
+    _require(analysed > 0, "roofline: every row skipped", errors)
+    _require(not doc.get("meta", {}).get("failures"),
+             f"roofline: meta.failures non-empty "
+             f"({doc.get('meta', {}).get('failures')})", errors)
+    return errors
+
+
+# telemetry JSONL run artifacts (repro.obs) — validated by the CI telemetry
+# smoke step rather than tracked in-repo
+_TELEMETRY_REQUIRED = {"ts", "kind", "run_id"}
+
+
+def check_telemetry_jsonl(path, expect_kinds=()) -> list:
+    """Validate a telemetry JSONL event log: every line parses, every event
+    carries the envelope keys, and ``expect_kinds`` all occur."""
+    errors = []
+    kinds = set()
+    try:
+        with open(path) as f:
+            lines = [ln for ln in f if ln.strip()]
+    except OSError as e:
+        return [f"{path}: unreadable ({e})"]
+    _require(lines, f"{path}: empty event log", errors)
+    for i, line in enumerate(lines):
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path}:{i + 1}: bad JSONL ({e})")
+            continue
+        missing = _TELEMETRY_REQUIRED - set(ev)
+        _require(not missing,
+                 f"{path}:{i + 1}: missing envelope keys {sorted(missing)}",
+                 errors)
+        kinds.add(ev.get("kind"))
+    for kind in expect_kinds:
+        _require(kind in kinds,
+                 f"{path}: no {kind!r} events (saw {sorted(kinds)})", errors)
     return errors
 
 
@@ -162,13 +239,16 @@ def check_analysis(doc) -> list:
 
 
 def main(kernels_path="BENCH_kernels.json", round_path="BENCH_round.json",
-         serve_path="BENCH_serve.json", analysis_path="ANALYSIS.json"):
+         serve_path="BENCH_serve.json", analysis_path="ANALYSIS.json",
+         roofline_path="BENCH_roofline.json"):
     errors = []
-    paths = (kernels_path, round_path, serve_path, analysis_path)
+    paths = (kernels_path, round_path, serve_path, analysis_path,
+             roofline_path)
     for path, check in ((kernels_path, check_kernels),
                         (round_path, check_round),
                         (serve_path, check_serve),
-                        (analysis_path, check_analysis)):
+                        (analysis_path, check_analysis),
+                        (roofline_path, check_roofline)):
         try:
             errors += check(json.load(open(path)))
         except (OSError, json.JSONDecodeError) as e:

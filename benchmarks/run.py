@@ -39,7 +39,7 @@ SUITES = {
     "fig2_memory": lambda quick: bench_memory.main(
         archs=("roberta-large-lora",) if quick
         else ("roberta-large-lora", "llama2-7b")),
-    "roofline": lambda quick: bench_roofline.main(),
+    "roofline": lambda quick: bench_roofline.main(quick=quick),
     "fig3_convergence": lambda quick: bench_convergence.main(
         rounds=20 if quick else 50),
     "fig5_ablation": lambda quick: bench_ablations.main(),

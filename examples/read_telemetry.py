@@ -1,0 +1,57 @@
+"""Read a run's telemetry JSONL programmatically.
+
+Generate a log first (2 runtime federation rounds), then point this script
+at it:
+
+    PYTHONPATH=src JAX_PLATFORMS=cpu python -m repro.launch.train \
+        --arch roberta-large-lora --method spry --rounds 2 --clients 2 \
+        --total-clients 4 --runtime --telemetry run.jsonl
+    PYTHONPATH=src python examples/read_telemetry.py run.jsonl
+
+Every line is one JSON event with an envelope (``ts``, ``run_id``,
+``kind``); the pre-built summary tables live in ``repro.obs.report``
+(``python -m repro.obs.report run.jsonl``) — this shows the raw access
+pattern for custom analysis.
+"""
+import sys
+
+from repro.obs.report import load_events
+
+
+def main(path):
+    events = load_events(path)
+    by_kind = {}
+    for e in events:
+        by_kind.setdefault(e["kind"], []).append(e)
+    print(f"{path}: {len(events)} events "
+          f"({', '.join(f'{k}={len(v)}' for k, v in sorted(by_kind.items()))})")
+
+    # loss trajectory straight off the round events
+    rounds = by_kind.get("round", [])
+    if rounds:
+        losses = [e["loss"] for e in rounds]
+        print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+              f"over {len(losses)} rounds")
+        up = sum(e.get("bytes_up", 0) for e in rounds)
+        if up:
+            print(f"total bytes on the wire (up): {up}")
+
+    # per-request serving latencies
+    for e in by_kind.get("request", []):
+        print(f"request {e['request_id']}: ttft={e['ttft_s']}s "
+              f"latency={e['latency_s']}s ({e['gen_tokens']} tokens)")
+
+    # the final metrics snapshot aggregates everything the run counted
+    metrics = by_kind.get("metrics", [])
+    if metrics:
+        snap = metrics[-1]["metrics"]
+        for name, value in sorted(snap.get("counters", {}).items()):
+            print(f"counter {name} = {value}")
+        for name, h in sorted(snap.get("histograms", {}).items()):
+            if h.get("count"):
+                print(f"histogram {name}: count={h['count']} "
+                      f"p50={h['p50']:.4g} p95={h['p95']:.4g}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "telemetry.jsonl")

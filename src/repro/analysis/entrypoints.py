@@ -17,6 +17,8 @@ Registered entry points (each returns ``Trace`` records):
   decode, for the donation rule.
 * ``round_step_lowered`` — the runtime FederationEngine round jits and the
   train-loop round step, lowered for the donation rule.
+* ``telemetry_pair_lowered`` — the instrumented engines lowered twice,
+  telemetry disabled vs enabled, for the telemetry-neutrality rule.
 
 Everything runs at ``reduce_config`` scale (B=1, S=16) — tracing only,
 nothing executes, so the whole sweep is CPU-cheap.
@@ -227,6 +229,77 @@ def round_step_lowered(family: str = "ssm") -> List[Trace]:
     ]
 
 
+def telemetry_pair_lowered(family: str = "ssm") -> List[Trace]:
+    """The instrumented engines built twice — telemetry disabled vs an
+    enabled in-memory Telemetry — and their jits lowered both ways. The
+    telemetry-neutrality rule demands the lowered texts be IDENTICAL:
+    recording happens host-side on returned values only, so enabling
+    telemetry must not reach any traced program."""
+    from repro.core.assignment import enumerate_units
+    from repro.core.spry import init_state
+    from repro.fl.runtime import FederationEngine, SerialExecutor, WireConfig
+    from repro.launch.adapter_cache import (AdapterCache,
+                                            SyntheticAdapterStore)
+    from repro.launch.serving import ServingEngine
+    from repro.obs import InMemorySink, Telemetry
+
+    cfg = _cfg(family)
+    sc = SpryConfig(n_clients_per_round=2, n_total_clients=4,
+                    k_perturbations=2)
+    key = jax.random.PRNGKey(0)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, sc)
+    state = init_state(base, peft)
+    M, B, S = 2, 2, 16
+    batch = {"tokens": jax.random.randint(key, (M, B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (M, B), 0, cfg.n_classes)}
+    n_units = enumerate_units(peft).n_units
+    seed_ids = jnp.arange(M, dtype=jnp.int32)
+    mask = jnp.ones((M, n_units), jnp.float32)
+    keep = jnp.ones((M,), jnp.float32)
+
+    def engine_round_text(telemetry):
+        eng = FederationEngine(cfg, sc, task="cls",
+                               executor=SerialExecutor(),
+                               wire=WireConfig(dtype="fp32"),
+                               telemetry=telemetry)
+        return eng._round_jit.lower(state, seed_ids, mask, keep,
+                                    batch).as_text()
+
+    def serving_texts(telemetry):
+        eng = ServingEngine(
+            cfg, base,
+            AdapterCache(SyntheticAdapterStore(cfg), capacity=2,
+                         telemetry=telemetry),
+            max_batch=2, cache_len=16, telemetry=telemetry)
+        peft1 = eng.adapters.page_tree(eng.adapters.acquire(0))
+        cache1 = model.init_cache(cfg, 1, eng.cache_len)
+        tok = jnp.zeros((1, 1), jnp.int32)
+        return {
+            "decode1": eng._decode1.lower(base, peft1, cache1, tok,
+                                          jnp.int32(0)).as_text(),
+            "scatter": eng._scatter.lower(eng.cache, cache1, 0).as_text(),
+        }
+
+    def tel_on():
+        return Telemetry(run_id="analysis", sinks=[InMemorySink()])
+
+    traces = [Trace(f"telemetry.engine.round_step.{family}",
+                    "telemetry_pair",
+                    meta={"arch": ARCHS[family],
+                          "text_off": engine_round_text(None),
+                          "text_on": engine_round_text(tel_on())})]
+    off, on = serving_texts(None), serving_texts(tel_on())
+    for name in off:
+        traces.append(Trace(f"telemetry.serving.{name}.{family}",
+                            "telemetry_pair",
+                            meta={"arch": ARCHS[family],
+                                  "text_off": off[name],
+                                  "text_on": on[name]}))
+    return traces
+
+
 def sweep(families=None, tasks=TASKS, quick=False, K: int = 4) -> List[Trace]:
     """The full registered entry-point sweep the lint runs."""
     if families is None:
@@ -240,4 +313,5 @@ def sweep(families=None, tasks=TASKS, quick=False, K: int = 4) -> List[Trace]:
     traces += serve_lowered("ssm")
     traces += serving_engine_lowered("dense")
     traces += round_step_lowered("ssm")
+    traces += telemetry_pair_lowered("ssm")
     return traces

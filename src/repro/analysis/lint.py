@@ -5,7 +5,7 @@
         [--generation v5e] [--json ANALYSIS.json]
 
 Traces every registered entry point (``analysis.entrypoints``) and checks
-the five rule classes (``analysis.rules``). Exit code: 0 when clean,
+the six rule classes (``analysis.rules``). Exit code: 0 when clean,
 1 on any error finding; ``--strict`` also fails on warnings. ``--json``
 writes the tracked ``ANALYSIS.json`` artifact (per-kernel VMEM residency
 table + findings audit trail) that ``benchmarks/check_schemas.py``
@@ -46,6 +46,9 @@ def run(families=None, tasks=eps.TASKS, quick=False, K=4,
             findings += R.check_transpose_reachability(t.name, t.jaxpr)
         elif t.kind == "lowered":
             findings += R.check_donation(t.name, t.lowered)
+        elif t.kind == "telemetry_pair":
+            findings += R.check_telemetry_neutrality(
+                t.name, t.meta["text_off"], t.meta["text_on"])
     findings += R.check_wire_dtypes()
     vmem_rows = representative_kernel_rows(generation)
     findings += R.check_vmem_rows("kernels.representative", vmem_rows)

@@ -1,6 +1,6 @@
 """The rule classes: declared invariants checked against traced programs.
 
-Five rules, each a pure function from a traced artifact (closed jaxpr or
+Six rules, each a pure function from a traced artifact (closed jaxpr or
 ``jax.jit(...).lower(...)`` Lowered) to ``Finding``s:
 
 ``tangent-materialization``  no pallas_call inside a fused-contraction
@@ -18,6 +18,10 @@ Five rules, each a pure function from a traced artifact (closed jaxpr or
 ``dtype-policy``  kernel accumulators (VMEM scratch, in-kernel
     dot_generals) stay fp32, and the wire-payload dtype table matches the
     declared widths of ``fl/runtime/messages.py``.
+``telemetry-neutrality``  engines built with telemetry enabled vs disabled
+    must lower every jit to IDENTICAL text — the repro.obs contract is
+    host-side recording on returned values only, so telemetry must never
+    reach a traced program.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ RULES = (
     "transpose-reachability",
     "donation",
     "dtype-policy",
+    "telemetry-neutrality",
 )
 
 # intentional non-donation, by entrypoint name. A waiver downgrades the
@@ -258,6 +263,33 @@ def check_dtype_policy(entrypoint: str, jaxpr) -> List[Finding]:
                     f"policy requires float32 accumulation",
                     {"in_dtype": str(in_dt), "out_dtype": str(out_dt)}))
     return out
+
+
+# ---------------------------------------------------------------------------
+# rule 6: telemetry-neutrality
+# ---------------------------------------------------------------------------
+
+def check_telemetry_neutrality(entrypoint: str, text_off: str,
+                               text_on: str) -> List[Finding]:
+    """Lowered texts of the same jit built with telemetry disabled vs
+    enabled. Any divergence means instrumentation leaked into a traced
+    program — an error; identity is recorded as an info finding so the
+    rule is proven non-vacuous on every lint run."""
+    if text_off == text_on:
+        return [Finding(
+            "telemetry-neutrality", "info", entrypoint, "<lowered>",
+            "telemetry-on lowers identically to telemetry-off "
+            f"({len(text_off)} chars compared)",
+            {"chars": len(text_off)})]
+    diff_at = next((i for i, (a, b) in enumerate(
+        zip(text_off.splitlines(), text_on.splitlines())) if a != b),
+        min(len(text_off.splitlines()), len(text_on.splitlines())))
+    return [Finding(
+        "telemetry-neutrality", "error", entrypoint, f"line {diff_at + 1}",
+        "telemetry-enabled build lowers DIFFERENTLY from telemetry-off — "
+        "instrumentation reached the traced program",
+        {"first_diff_line": diff_at + 1,
+         "len_off": len(text_off), "len_on": len(text_on)})]
 
 
 def check_wire_dtypes(entrypoint: str = "wire.messages") -> List[Finding]:

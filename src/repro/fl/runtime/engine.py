@@ -28,6 +28,7 @@ aggregation; fp32 framing is bit-exact.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -51,6 +52,7 @@ from repro.fl.runtime.executor import (
 from repro.fl.runtime.messages import ClientUpdate, wire_dtype
 from repro.fl.runtime.population import CohortPlan
 from repro.fl.server import server_update
+from repro.obs import NULL
 from repro.utils.pytree import tree_size
 
 
@@ -95,10 +97,25 @@ def _ideal_plan(round_idx: int, M: int, n_units: int) -> CohortPlan:
 class FederationEngine:
     def __init__(self, cfg, spry_cfg, task: str = "cls",
                  comm_mode: Optional[str] = None, executor=None,
-                 wire: Optional[WireConfig] = None):
+                 wire: Optional[WireConfig] = None, telemetry=None):
         self.cfg = cfg
         self.spry_cfg = spry_cfg
         self.task = task
+        # host-side telemetry on already-returned values ONLY: the jitted
+        # round bodies below never see this object, so telemetry-on traces
+        # the identical program (tests/test_telemetry_neutrality.py)
+        tel = telemetry if telemetry is not None else NULL
+        self.telemetry = tel
+        self._tc_rounds = tel.counter("fl.rounds")
+        self._tc_bytes_up = tel.counter("fl.bytes_up")
+        self._tc_bytes_down = tel.counter("fl.bytes_down")
+        self._tc_stragglers = tel.counter("fl.stragglers")
+        self._tg_survivors = tel.gauge("fl.survivors")
+        self._tg_mask_units = tel.gauge("fl.surviving_mask_units")
+        self._tg_loss = tel.gauge("fl.loss")
+        self._tg_jvp = tel.gauge("fl.jvp_abs_mean")
+        self._tg_delta = tel.gauge("fl.delta_norm")
+        self._th_round_s = tel.histogram("fl.round_seconds")
         self.comm_mode = comm_mode or spry_cfg.comm_mode
         if self.comm_mode not in ("per_epoch", "per_iteration"):
             raise ValueError(self.comm_mode)
@@ -240,19 +257,24 @@ class FederationEngine:
     def run_round(self, state, plan: CohortPlan, batch):
         """Execute one scheduled round. ``batch`` leaves lead with the plan's
         cohort axis. Returns (state, metrics, RoundReport)."""
+        tel = self.telemetry
+        t_round = time.perf_counter()
         index = enumerate_units(state.peft)
         keep = np.asarray(plan.keep, np.float32)
         seed_ids, mask_rows, batch_p, keep_p, C = pad_cohort(
             self.executor, np.asarray(plan.seed_ids, np.int32),
             plan.mask_matrix, batch, keep)
 
-        if self.wire.simulate:
-            new_state, metrics, bytes_up = self._run_simulated(
-                state, seed_ids, mask_rows, keep_p, batch_p, plan, C)
-        else:
-            new_state, metrics = self._round_jit(
-                state, seed_ids, mask_rows, keep_p, batch_p)
-            bytes_up = self._estimate_uplink(state.peft, index, plan)
+        with tel.span("fl.round", round=int(plan.round_idx),
+                      cohort=plan.cohort_size, comm_mode=self.comm_mode):
+            if self.wire.simulate:
+                new_state, metrics, bytes_up = self._run_simulated(
+                    state, seed_ids, mask_rows, keep_p, batch_p, plan, C)
+            else:
+                with tel.span("fl.execute"):
+                    new_state, metrics = self._round_jit(
+                        state, seed_ids, mask_rows, keep_p, batch_p)
+                bytes_up = self._estimate_uplink(state.peft, index, plan)
 
         peft_bytes = tree_size(state.peft) * 4
         m = self.executor.microbatch or (len(seed_ids)
@@ -273,38 +295,89 @@ class FederationEngine:
             agg_bytes_streaming=(m + 1) * peft_bytes,
             agg_bytes_stacked=len(seed_ids) * peft_bytes,
         )
+        if tel.enabled:
+            self._record_round(plan, metrics, report,
+                               time.perf_counter() - t_round)
         return new_state, metrics, report
+
+    def _record_round(self, plan: CohortPlan, metrics, report: RoundReport,
+                      wall_s: float) -> None:
+        """Host-side recording on the round's RETURNED values: the float()
+        conversions below force a device sync on already-computed arrays,
+        never a recompute — the metrics tree handed back to the caller is
+        untouched (bitwise-identity asserted in tests)."""
+        host = {k: float(v) for k, v in metrics.items()}
+        stragglers = report.cohort_size - report.n_survivors
+        mask_units = float(
+            np.asarray(plan.mask_matrix)[np.asarray(plan.keep, bool)].sum())
+        self._tc_rounds.inc()
+        self._tc_bytes_up.add(report.bytes_up)
+        self._tc_bytes_down.add(report.bytes_down)
+        self._tc_stragglers.add(stragglers)
+        self._tg_survivors.set(report.n_survivors)
+        self._tg_mask_units.set(mask_units)
+        self._tg_loss.set(host["loss"])
+        if "jvp_abs_mean" in host:
+            self._tg_jvp.set(host["jvp_abs_mean"])
+        if "delta_norm" in host:
+            self._tg_delta.set(host["delta_norm"])
+        self._th_round_s.observe(wall_s)
+        self.telemetry.event(
+            "round",
+            round=report.round_idx,
+            comm_mode=self.comm_mode,
+            route=("fused" if host.get("fused_route") else "standard"),
+            loss=host["loss"],
+            jvp_abs_mean=host.get("jvp_abs_mean"),
+            delta_norm=host.get("delta_norm"),
+            bytes_up=report.bytes_up,
+            bytes_down=report.bytes_down,
+            cohort=report.cohort_size,
+            survivors=report.n_survivors,
+            stragglers=stragglers,
+            dropped=report.dropped_client_ids,
+            surviving_mask_units=mask_units,
+            executor=report.executor,
+            wire=report.wire,
+            n_devices=report.n_devices,
+            wall_s=round(wall_s, 6),
+        )
 
     # -- wire simulation ------------------------------------------------
 
     def _run_simulated(self, state, seed_ids, mask_rows, keep, batch, plan,
                        C):
-        payload, losses, jvps = self._clients_jit(
-            state, seed_ids, mask_rows, keep, batch)
-        updates = self.pack_updates(state.peft, payload, jvps, losses, plan)
-        bytes_up = sum(u.byte_size() for u in updates)
-        # the server only sees what arrived: unpack frames back into the
-        # cohort stack (zeros for dropped clients). Frames carry the fold-in
-        # seed_id; cohort POSITION comes from keep order (pack_updates emits
-        # survivors in plan order).
-        survivor_pos = np.flatnonzero(plan.keep)
-        index = enumerate_units(state.peft)
-        if self.comm_mode == "per_epoch":
-            template = jax.tree.map(np.zeros_like, jax.tree.map(
-                lambda x: np.asarray(x[0]), payload))
-            rows = {int(pos): u.to_delta(template, index)
-                    for pos, u in zip(survivor_pos, updates)}
-            stacked = jax.tree.map(
-                lambda *xs: jnp.asarray(np.stack(xs)),
-                *[rows.get(i, template) for i in range(len(seed_ids))])
-        else:
-            K = jvps.shape[-1]
-            arr = np.zeros((len(seed_ids), K), np.float32)
-            for pos, u in zip(survivor_pos, updates):
-                arr[int(pos)] = np.asarray(u.jvps, np.float32)
-            stacked = jnp.asarray(arr)
-        new_state, metrics = self._aggregate_jit(
-            state, stacked, seed_ids, mask_rows, keep, losses, jvps)
+        tel = self.telemetry
+        with tel.span("fl.clients"):
+            payload, losses, jvps = self._clients_jit(
+                state, seed_ids, mask_rows, keep, batch)
+        with tel.span("fl.wire", n_survivors=plan.n_survivors):
+            updates = self.pack_updates(state.peft, payload, jvps, losses,
+                                        plan)
+            bytes_up = sum(u.byte_size() for u in updates)
+            # the server only sees what arrived: unpack frames back into the
+            # cohort stack (zeros for dropped clients). Frames carry the
+            # fold-in seed_id; cohort POSITION comes from keep order
+            # (pack_updates emits survivors in plan order).
+            survivor_pos = np.flatnonzero(plan.keep)
+            index = enumerate_units(state.peft)
+            if self.comm_mode == "per_epoch":
+                template = jax.tree.map(np.zeros_like, jax.tree.map(
+                    lambda x: np.asarray(x[0]), payload))
+                rows = {int(pos): u.to_delta(template, index)
+                        for pos, u in zip(survivor_pos, updates)}
+                stacked = jax.tree.map(
+                    lambda *xs: jnp.asarray(np.stack(xs)),
+                    *[rows.get(i, template) for i in range(len(seed_ids))])
+            else:
+                K = jvps.shape[-1]
+                arr = np.zeros((len(seed_ids), K), np.float32)
+                for pos, u in zip(survivor_pos, updates):
+                    arr[int(pos)] = np.asarray(u.jvps, np.float32)
+                stacked = jnp.asarray(arr)
+        with tel.span("fl.aggregate"):
+            new_state, metrics = self._aggregate_jit(
+                state, stacked, seed_ids, mask_rows, keep, losses, jvps)
         return new_state, metrics, bytes_up
 
     def pack_updates(self, peft, payload, jvps, losses,

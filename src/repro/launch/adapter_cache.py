@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.io import load_pytree, save_pytree
 from repro.configs import SpryConfig
+from repro.obs import NULL
 from repro.peft import init_peft
 
 # peft groups whose LoRA factors are stacked on a leading n_layers axis
@@ -97,7 +98,7 @@ class AdapterCache:
     single-adapter tree (bitwise-identical to what the store loaded).
     """
 
-    def __init__(self, store, capacity: int):
+    def __init__(self, store, capacity: int, telemetry=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.store = store
@@ -109,6 +110,15 @@ class AdapterCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # the ints above stay the source of truth (stats() is telemetry-free
+        # API); the counters mirror them into the shared metrics registry
+        tel = telemetry if telemetry is not None else NULL
+        self.telemetry = tel
+        self._tc_hits = tel.counter("adapter_cache.hits")
+        self._tc_misses = tel.counter("adapter_cache.misses")
+        self._tc_evictions = tel.counter("adapter_cache.evictions")
+        self._tc_pins = tel.counter("adapter_cache.pins")
+        self._tg_resident = tel.gauge("adapter_cache.resident")
 
         template = store.template()
         for group, gtree in template.items():
@@ -139,9 +149,11 @@ class AdapterCache:
         """Page index for ``aid``, materialising (and evicting) if needed."""
         if aid in self._pages:
             self.hits += 1
+            self._tc_hits.inc()
             self._pages.move_to_end(aid)
             return self._pages[aid]
         self.misses += 1
+        self._tc_misses.inc()
         if self._free:
             page = self._free.pop()
         else:
@@ -153,13 +165,17 @@ class AdapterCache:
                     "requests; raise the cache capacity or max batch")
             page = self._pages.pop(victim)
             self.evictions += 1
-        self._materialize(page, self.store.load(aid))
+            self._tc_evictions.inc()
+        with self.telemetry.span("adapter_cache.load", aid=aid):
+            self._materialize(page, self.store.load(aid))
         self._pages[aid] = page
+        self._tg_resident.set(len(self._pages))
         return page
 
     def pin(self, aid: int) -> int:
         page = self.acquire(aid)
         self._pins[aid] = self._pins.get(aid, 0) + 1
+        self._tc_pins.inc()
         return page
 
     def unpin(self, aid: int) -> None:
@@ -220,4 +236,5 @@ class AdapterCache:
     def stats(self):
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
-                "resident": len(self._pages), "capacity": self.capacity}
+                "resident": len(self._pages), "capacity": self.capacity,
+                "pinned": sum(self._pins.values())}

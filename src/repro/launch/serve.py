@@ -151,6 +151,32 @@ def greedy_generate(cfg, base, peft, prompt_tokens, n_steps, cache_len=None,
     return jnp.concatenate(out, axis=1)
 
 
+def run_engine(cfg, n_requests, prompt_len, steps, max_batch=4,
+               cache_capacity=4, telemetry=None, seed=0):
+    """Drive the multi-tenant ServingEngine with ``n_requests`` requests on
+    distinct synthetic adapters (the CLI/CI smoke path for the engine +
+    adapter cache + telemetry stack). Returns (outputs, engine)."""
+    from repro.launch.adapter_cache import AdapterCache, SyntheticAdapterStore
+    from repro.launch.serving import Request, ServingEngine
+
+    key = jax.random.PRNGKey(seed)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    store = SyntheticAdapterStore(cfg, SpryConfig(), seed=seed)
+    cache = AdapterCache(store, capacity=cache_capacity, telemetry=telemetry)
+    engine = ServingEngine(cfg, base, cache, max_batch=max_batch,
+                           cache_len=prompt_len + steps,
+                           telemetry=telemetry)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(request_id=f"req-{i}", adapter_id=i % max(1, n_requests),
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=prompt_len).astype(np.int32),
+                    max_new_tokens=steps)
+            for i in range(n_requests)]
+    outputs = engine.run(reqs)
+    return outputs, engine
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-1.6b")
@@ -158,11 +184,50 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--engine", type=int, default=0, metavar="N",
+                    help="serve N multi-tenant requests through the "
+                         "continuous-batching ServingEngine instead of the "
+                         "single-tenant greedy loop")
+    ap.add_argument("--cache-capacity", type=int, default=4,
+                    help="resident adapter pages in the AdapterCache "
+                         "(engine mode)")
+    ap.add_argument("--telemetry", default=None,
+                    help="JSONL event-log path ('off' disables)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON (Perfetto-loadable) "
+                         "of the run's spans to this path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = reduce_config(cfg)
+
+    if args.engine:
+        from repro.obs import make_telemetry
+        tel = make_telemetry(
+            jsonl=(None if args.telemetry in (None, "off", "none", "")
+                   else args.telemetry),
+            run_id=f"serve-{args.arch}", workload="serve")
+        if tel.enabled:
+            tel.event("run_meta", workload="serve", arch=args.arch,
+                      n_requests=args.engine, prompt_len=args.prompt_len,
+                      steps=args.steps, max_batch=args.batch,
+                      cache_capacity=args.cache_capacity)
+        outputs, engine = run_engine(
+            cfg, args.engine, args.prompt_len, args.steps,
+            max_batch=args.batch, cache_capacity=args.cache_capacity,
+            telemetry=tel)
+        print(f"[serve] engine: {len(outputs)} requests drained in "
+              f"{engine.steps} decode steps; adapter cache {engine.adapters.stats()}")
+        if tel.enabled:
+            if args.trace_out:
+                tel.export_chrome_trace(args.trace_out)
+            tel.close()
+            print(f"[telemetry] events -> {args.telemetry}"
+                  + (f"  trace -> {args.trace_out}" if args.trace_out
+                     else ""))
+        return
+
     key = jax.random.PRNGKey(0)
     model = get_model(cfg)
     base = model.init_base(cfg, key)

@@ -18,6 +18,7 @@ prefill logits, each decode step appends one).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -32,6 +33,7 @@ from repro.launch.serve import (
 )
 from repro.models import get_model
 from repro.models.encdec import encode as encdec_encode
+from repro.obs import NULL
 
 
 @dataclasses.dataclass
@@ -64,7 +66,8 @@ class ServingEngine:
     """
 
     def __init__(self, cfg, base, adapter_cache, max_batch: int,
-                 cache_len: int, fused_prefill: bool = True):
+                 cache_len: int, fused_prefill: bool = True,
+                 telemetry=None):
         self.cfg = cfg
         self.base = base
         self.adapters = adapter_cache
@@ -72,6 +75,24 @@ class ServingEngine:
         self.cache_len = cache_len
         self.fused_prefill = fused_prefill
         self.model = get_model(cfg)
+        # host-side telemetry on returned token ids/timestamps only — the
+        # decode/prefill jits never see this object, and per-request ids
+        # stay bitwise those of isolated greedy serving (tested)
+        tel = telemetry if telemetry is not None else NULL
+        self.telemetry = tel
+        self._tc_requests = tel.counter("serve.requests")
+        self._tc_tokens = tel.counter("serve.gen_tokens")
+        self._tc_steps = tel.counter("serve.decode_steps")
+        self._tg_queue = tel.gauge("serve.queue_depth")
+        self._tg_inflight = tel.gauge("serve.in_flight")
+        self._tg_tps = tel.gauge("serve.decode_tok_per_sec")
+        self._th_ttft = tel.histogram("serve.ttft_s")
+        self._th_latency = tel.histogram("serve.request_latency_s")
+        self._th_step = tel.histogram("serve.decode_step_s")
+        self._t_submit = {}             # request_id -> perf_counter stamp
+        self._ttft = {}                 # request_id -> observed TTFT
+        self._decode_tokens = 0         # steady-state accounting (decode
+        self._decode_time = 0.0         # steps only, admissions excluded)
 
         fns = build_serve_fns(cfg, self.model)
         self._decode = fns["decode"]          # donates the batch cache
@@ -91,6 +112,7 @@ class ServingEngine:
         # host-side per-row state
         self._active = np.zeros(max_batch, bool)
         self._pos = np.zeros(max_batch, np.int32)
+        self._plen = np.zeros(max_batch, np.int32)
         self._tok = np.zeros(max_batch, np.int32)
         self._page = np.zeros(max_batch, np.int32)
         self._aid = np.zeros(max_batch, np.int64)
@@ -102,7 +124,10 @@ class ServingEngine:
     # -- admission -----------------------------------------------------------
 
     def submit(self, request: Request) -> None:
+        if self.telemetry.enabled:
+            self._t_submit[request.request_id] = time.perf_counter()
         self._queue.append(request)
+        self._tg_queue.set(len(self._queue))
 
     def _admit(self, b: int, req: Request) -> None:
         prompt = jnp.asarray(req.prompt, jnp.int32).reshape(1, -1)
@@ -112,39 +137,70 @@ class ServingEngine:
                 f"request {req.request_id!r}: prompt {P} + "
                 f"{req.max_new_tokens} new tokens exceeds cache_len "
                 f"{self.cache_len}")
-        page = self.adapters.pin(req.adapter_id)
-        peft1 = self.adapters.page_tree(page)
-        cache1 = self.model.init_cache(self.cfg, 1, self.cache_len)
-        if req.frames is not None:
-            frames = jnp.asarray(req.frames)
-            if frames.ndim == 2:
-                frames = frames[None]
-            memory = encdec_encode(self.cfg, self.base, frames, peft1)
-            cache1 = dict(cache1,
-                          memory=memory.astype(cache1["memory"].dtype))
-        if self.fused_prefill and can_fuse_prefill(self.cfg, self.model,
-                                                   cache1, P):
-            logits, cache1 = self._prefill1(self.base, peft1, cache1, prompt)
-        else:
-            logits, cache1 = tokenwise_prefill(
-                self.cfg, self.model, self.base, peft1, cache1, prompt,
-                decode=self._decode1)
-        self.cache = self._scatter(self.cache, cache1, b)
-        t0 = int(jnp.argmax(logits[0]))
+        with self.telemetry.span("serve.admit", request=req.request_id,
+                                 prompt_len=int(P)):
+            page = self.adapters.pin(req.adapter_id)
+            peft1 = self.adapters.page_tree(page)
+            cache1 = self.model.init_cache(self.cfg, 1, self.cache_len)
+            if req.frames is not None:
+                frames = jnp.asarray(req.frames)
+                if frames.ndim == 2:
+                    frames = frames[None]
+                memory = encdec_encode(self.cfg, self.base, frames, peft1)
+                cache1 = dict(cache1,
+                              memory=memory.astype(cache1["memory"].dtype))
+            if self.fused_prefill and can_fuse_prefill(self.cfg, self.model,
+                                                       cache1, P):
+                logits, cache1 = self._prefill1(self.base, peft1, cache1,
+                                                prompt)
+            else:
+                logits, cache1 = tokenwise_prefill(
+                    self.cfg, self.model, self.base, peft1, cache1, prompt,
+                    decode=self._decode1)
+            self.cache = self._scatter(self.cache, cache1, b)
+            t0 = int(jnp.argmax(logits[0]))
         self._active[b] = True
         self._pos[b] = P
+        self._plen[b] = P
         self._tok[b] = t0
         self._page[b] = page
         self._aid[b] = req.adapter_id
         self._remaining[b] = req.max_new_tokens - 1
         self._rid[b] = req.request_id
         self.outputs[req.request_id] = [t0]
+        if self.telemetry.enabled:
+            # first token exists HERE (the prefill logits produced it):
+            # time-to-first-token runs from submit to this point
+            ttft = time.perf_counter() - self._t_submit.get(
+                req.request_id, time.perf_counter())
+            self._ttft[req.request_id] = ttft
+            self._th_ttft.observe(ttft)
+            self._tc_requests.inc()
+            self._tg_queue.set(len(self._queue))
         if self._remaining[b] == 0:
             self._finish(b)
 
     def _finish(self, b: int) -> None:
         self._active[b] = False
         self.adapters.unpin(int(self._aid[b]))
+        if self.telemetry.enabled:
+            rid = self._rid[b]
+            done = time.perf_counter()
+            latency = done - self._t_submit.pop(rid, done)
+            self._th_latency.observe(latency)
+            n_tok = len(self.outputs.get(rid, ()))
+            self._tc_tokens.add(n_tok)
+            self.telemetry.event(
+                "request",
+                request_id=rid,
+                adapter_id=int(self._aid[b]),
+                prompt_len=int(self._plen[b]),
+                gen_tokens=n_tok,
+                ttft_s=round(self._ttft.pop(rid, float("nan")), 6),
+                latency_s=round(latency, 6),
+                tok_per_sec=(round(n_tok / latency, 3) if latency > 0
+                             else None),
+            )
         self._rid[b] = None
 
     # -- stepping ------------------------------------------------------------
@@ -169,10 +225,16 @@ class ServingEngine:
         tok = jnp.asarray(np.where(self._active, self._tok, 0),
                           jnp.int32)[:, None]
         pos = jnp.asarray(np.where(self._active, self._pos, 0), jnp.int32)
+        n_active = int(self._active.sum())
+        t_step = time.perf_counter() if self.telemetry.enabled else 0.0
         logits, self.cache = self._decode(self.base, peft, self.cache, tok,
                                           pos)
         self.steps += 1
         next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        if self.telemetry.enabled:
+            # next_tok is on host, so the decode step has fully resolved
+            dt = time.perf_counter() - t_step
+            self._record_step(dt, n_active)
         for b in range(self.max_batch):
             if not self._active[b]:
                 continue
@@ -183,6 +245,17 @@ class ServingEngine:
             if self._remaining[b] == 0:
                 self._finish(b)
         return int(self._active.sum())
+
+    def _record_step(self, dt: float, n_active: int) -> None:
+        self._tc_steps.inc()
+        self._th_step.observe(dt)
+        self._tg_inflight.set(n_active)
+        # steady-state decode throughput: batched decode steps only, the
+        # admission prefills (cold path) are deliberately excluded
+        self._decode_tokens += n_active
+        self._decode_time += dt
+        if self._decode_time > 0:
+            self._tg_tps.set(self._decode_tokens / self._decode_time)
 
     def run(self, requests=None):
         """Submit ``requests`` (if given) and step until drained. Returns

@@ -26,6 +26,7 @@ from repro.core import (
     init_state,
     make_round_step,
     make_round_step_per_iteration,
+    run_fields,
 )
 from repro.core.baselines import make_backprop_round_step, make_zeroorder_round_step
 from repro.core.baselines.zeroorder import ZOState, init_zo_state
@@ -39,6 +40,7 @@ from repro.data.loader import ClientDataset, stack_client_batches
 from repro.fl import dirichlet_partition, sample_clients
 from repro.models import cls_logits, get_model
 from repro.models.common import accuracy_from_logits
+from repro.obs import NULL, MemoryProbe, make_telemetry
 from repro.peft import init_peft
 
 
@@ -107,7 +109,9 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                  fused_contraction=False, log=print,
                  runtime=False, runtime_executor="serial",
                  runtime_microbatch=None, over_select=1.0, deadline=None,
-                 dropout_rate=0.0, wire_dtype="fp32", wire_simulate=False):
+                 dropout_rate=0.0, wire_dtype="fp32", wire_simulate=False,
+                 telemetry=None):
+    tel = telemetry if telemetry is not None else NULL
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_config(cfg)
@@ -139,6 +143,11 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
     )
 
     route = estimator_route(sc)
+    if tel.enabled:
+        tel.event("run_meta", workload="train", method=method, arch=arch,
+                  task=task, rounds=rounds, clients_per_round=clients_per_round,
+                  total_clients=total_clients, batch_size=batch_size,
+                  runtime=runtime, seed=seed, **run_fields(sc))
     if method in ("spry", "spry_periter", "fedfgd"):
         # surface the active gradient-estimator route (satellite of the
         # split-forward refactor: --fused-contraction no longer falls back
@@ -179,7 +188,8 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                     else SerialExecutor(microbatch=runtime_microbatch))
         engine = FederationEngine(
             cfg, sc, task="cls", comm_mode=comm_mode, executor=executor,
-            wire=WireConfig(dtype=wire_dtype, simulate=wire_simulate))
+            wire=WireConfig(dtype=wire_dtype, simulate=wire_simulate),
+            telemetry=tel)
         n_units = enumerate_units(state.peft).n_units
         client_data = [ClientDataset(x_tr, y_tr, population.shard(c))
                        for c in range(min(total_clients, 8))]
@@ -208,8 +218,10 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
 
     history = []
     bytes_up_total = bytes_down_total = 0
+    probe = MemoryProbe(tel) if tel.enabled else None
     t0 = time.time()
     for r in range(rounds):
+        t_round = time.perf_counter()
         if engine is not None:
             plan = scheduler.plan_round(r, n_units, sc.seed)
             bx, by = scheduler.round_batch(plan, batch_size)
@@ -222,8 +234,24 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
             chosen = sample_clients(rng, total_clients, clients_per_round)
             bx, by = stack_client_batches([client_data[c] for c in chosen],
                                           rng, batch_size)
-            state, metrics = step_fn(state, {"tokens": jnp.asarray(bx),
-                                             "labels": jnp.asarray(by)})
+            with tel.span("train.round", round=r, method=method):
+                state, metrics = step_fn(state, {"tokens": jnp.asarray(bx),
+                                                 "labels": jnp.asarray(by)})
+            if tel.enabled:
+                # engine emits "round" events itself on the runtime path;
+                # the in-process path emits its own here (one per round)
+                ev = {"round": r, "method": method,
+                      "loss": float(metrics["loss"]),
+                      "wall_s": round(time.perf_counter() - t_round, 6)}
+                for k in ("jvp_abs_mean", "delta_norm"):
+                    if k in metrics:
+                        ev[k] = float(metrics[k])
+                if "fused_route" in metrics:
+                    ev["route"] = ("fused" if float(metrics["fused_route"])
+                                   else "standard")
+                tel.event("round", **ev)
+        if probe is not None and r == 0:
+            probe.sample("post_round_1")
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             st = the_state(state)
             accs = []
@@ -247,9 +275,17 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                          f"survivors={report.n_survivors}/"
                          f"{report.cohort_size}")
             history.append(entry)
+            if tel.enabled:
+                ev = {k: v for k, v in entry.items() if k != "t"}
+                ev["round"] = r   # 0-based, matching the "round" events
+                tel.event("eval", **ev)
             log(f"[{method}] round {r+1:4d} loss={float(metrics['loss']):.4f} "
                 f"test_acc={acc:.4f} ({time.time()-t0:.0f}s){extra}")
     history[-1]["personalized_acc"] = eval_personalized()
+    if tel.enabled:
+        probe.sample("end_of_run")
+        tel.event("personalized_eval",
+                  personalized_acc=history[-1]["personalized_acc"])
     log(f"[{method}] personalized_acc={history[-1]['personalized_acc']:.4f}")
     return history
 
@@ -296,7 +332,19 @@ def main():
     ap.add_argument("--wire-simulate", action="store_true",
                     help="route every update through a serialized frame")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--telemetry", default="telemetry.jsonl",
+                    help="JSONL event-log path (machine-readable round "
+                         "reporting, on by default; 'off' disables)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON (Perfetto-loadable) "
+                         "of the run's spans to this path")
+    ap.add_argument("--prom-out", default=None,
+                    help="Prometheus textfile-collector snapshot path")
     args = ap.parse_args()
+    tel = make_telemetry(
+        jsonl=None if args.telemetry in ("off", "none", "") else args.telemetry,
+        prometheus=args.prom_out, run_id=f"train-{args.method}-{args.seed}",
+        workload="train")
     hist = run_training(arch=args.arch, task=args.task, method=args.method,
                         rounds=args.rounds, clients_per_round=args.clients,
                         total_clients=args.total_clients,
@@ -313,7 +361,14 @@ def main():
                         over_select=args.over_select, deadline=args.deadline,
                         dropout_rate=args.dropout_rate,
                         wire_dtype=args.wire_dtype,
-                        wire_simulate=args.wire_simulate)
+                        wire_simulate=args.wire_simulate,
+                        telemetry=tel)
+    if tel.enabled:
+        if args.trace_out:
+            tel.export_chrome_trace(args.trace_out)
+        tel.close()
+        print(f"[telemetry] events -> {args.telemetry}"
+              + (f"  trace -> {args.trace_out}" if args.trace_out else ""))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(hist, f, indent=1)

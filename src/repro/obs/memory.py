@@ -1,0 +1,102 @@
+"""Memory probes: modeled-vs-measured residency in ONE artifact.
+
+``repro.analysis`` / ``launch.hlo_analysis.peak_live_bytes`` give the
+STATIC side — a buffer-liveness walk over compiled HLO bounding a
+program's peak live bytes before anything runs. This module adds the
+RUNTIME side — ``jax.live_arrays()`` totals and per-device
+``memory_stats()`` sampled at probe points — and pairs the two in a
+single ``memory`` telemetry event, so the real-TPU validation run
+(ROADMAP item 6) reads modeled and measured residency from the same
+JSONL row instead of reconciling two tools.
+
+Probing is host-side and read-only: sampling allocates nothing on device
+and never touches a traced program.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+
+def live_array_bytes() -> int:
+    """Total bytes of every live device array in the process."""
+    import jax
+
+    total = 0
+    for a in jax.live_arrays():
+        try:
+            total += int(a.nbytes)
+        except Exception:       # deleted/donated arrays can race the walk
+            continue
+    return total
+
+
+def device_memory_stats() -> Dict[str, Dict]:
+    """Per-device allocator stats where the backend exposes them (TPU/GPU;
+    the CPU backend returns none — the live-array total still applies)."""
+    import jax
+
+    out = {}
+    for dev in jax.local_devices():
+        try:
+            stats = dev.memory_stats()
+        except Exception:
+            stats = None
+        if stats:
+            out[f"{dev.platform}:{dev.id}"] = {
+                k: int(v) for k, v in stats.items()
+                if isinstance(v, (int, float))}
+    return out
+
+
+def modeled_peak_bytes(compiled_or_text) -> Optional[float]:
+    """Static peak-live-bytes of a compiled program (the PR 4 HLO
+    liveness analyzer). Accepts a ``jax.stages.Compiled`` or HLO text."""
+    from repro.launch.hlo_analysis import peak_live_bytes
+
+    text = (compiled_or_text if isinstance(compiled_or_text, str)
+            else compiled_or_text.as_text())
+    try:
+        return float(peak_live_bytes(text))
+    except Exception:
+        return None
+
+
+def modeled_peak_of(jit_fn, *args, **kwargs) -> Optional[float]:
+    """Lower+compile a jitted fn at the given avals and return its modeled
+    peak. jax caches the executable, so a subsequent call at the same
+    shapes reuses this compilation — probing costs no extra compile on
+    the hot path."""
+    try:
+        compiled = jit_fn.lower(*args, **kwargs).compile()
+    except Exception:
+        return None
+    return modeled_peak_bytes(compiled)
+
+
+class MemoryProbe:
+    """Samples runtime residency into gauges + ``memory`` events.
+
+    ``sample(label)`` records live-array bytes (and device stats when
+    available); pass ``modeled_bytes`` to pair the static number with the
+    measurement in the same event — the modeled-vs-measured artifact.
+    """
+
+    def __init__(self, telemetry):
+        self.telemetry = telemetry
+        self._g_live = telemetry.gauge("mem.live_array_bytes")
+        self._g_modeled = telemetry.gauge("mem.modeled_peak_bytes")
+
+    def sample(self, label: str,
+               modeled_bytes: Optional[float] = None) -> Dict:
+        rec = {"label": label, "live_bytes": live_array_bytes()}
+        stats = device_memory_stats()
+        if stats:
+            rec["device_stats"] = stats
+            rec["device_bytes_in_use"] = sum(
+                s.get("bytes_in_use", 0) for s in stats.values())
+        if modeled_bytes is not None:
+            rec["modeled_peak_bytes"] = float(modeled_bytes)
+            self._g_modeled.set(float(modeled_bytes))
+        self._g_live.set(rec["live_bytes"])
+        self.telemetry.event("memory", **rec)
+        return rec

@@ -7,6 +7,7 @@ import pathlib
 from benchmarks.check_schemas import (
     check_analysis,
     check_kernels,
+    check_roofline,
     check_round,
     check_serve,
 )
@@ -30,6 +31,21 @@ def test_checked_in_bench_serve_conforms():
     # the artifact must record the continuous-batching win at scale
     assert any(s["n_adapters"] >= 8 and s["speedup"] > 1.5
                for s in doc["speedup"])
+    # ...and the adapter-cache traffic of every continuous run
+    for row in doc["serve_bench"]:
+        if row["mode"] == "continuous":
+            assert 0.0 <= row["cache_hit_rate"] <= 1.0
+
+
+def test_checked_in_bench_roofline_conforms():
+    doc = json.load(open(REPO / "BENCH_roofline.json"))
+    assert check_roofline(doc) == []
+    rows = [r for r in doc["roofline"] if not r.get("skipped")]
+    # the tracked artifact covers the full assigned sweep
+    assert len({r["arch"] for r in rows}) >= 8
+    assert {"train_4k", "decode_32k"} <= {r["shape"] for r in rows}
+    for r in rows:
+        assert r["peak_bytes"] > 0
 
 
 def test_checked_in_analysis_conforms():
@@ -76,3 +92,15 @@ def test_checker_rejects_broken_docs():
     sdoc2 = json.load(open(REPO / "BENCH_serve.json"))
     sdoc2["speedup"][0].pop("speedup")
     assert check_serve(sdoc2)
+    sdoc3 = json.load(open(REPO / "BENCH_serve.json"))
+    next(r for r in sdoc3["serve_bench"]
+         if r["mode"] == "continuous").pop("cache_hits")
+    assert check_serve(sdoc3)
+    rfdoc = json.load(open(REPO / "BENCH_roofline.json"))
+    rfdoc["roofline"] = [dict(r, skipped=True, reason="x")
+                         for r in rfdoc["roofline"]]
+    assert check_roofline(rfdoc)
+    rfdoc2 = json.load(open(REPO / "BENCH_roofline.json"))
+    next(r for r in rfdoc2["roofline"]
+         if not r.get("skipped")).pop("dominant")
+    assert check_roofline(rfdoc2)
