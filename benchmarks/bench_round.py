@@ -12,6 +12,9 @@ motivates the streaming executor:
   cohort size   sweep past the in-process M — the stacked (C, |peft|)
                 aggregation grows linearly while the streaming accumulator
                 stays O(|peft|) per device (agg_bytes_* fields)
+  fault rate    chaos sweep (0 / 5 / 20%% crash+corrupt+loss): rounds/sec
+                and the effective-survivor fraction the quarantine +
+                validation stack leaves for aggregation
 
 Results append machine-readably to BENCH_round.json:
 
@@ -35,6 +38,7 @@ from repro.core import enumerate_units, init_state
 from repro.fl.runtime import (
     ClientPopulation,
     CohortScheduler,
+    FaultConfig,
     FederationEngine,
     SerialExecutor,
     ShardedExecutor,
@@ -81,6 +85,55 @@ def _time_rounds(engine, scheduler, state, n_units, sc, cohort, reps):
     jax.block_until_ready(jax.tree.leaves(st.peft))
     dt = (time.perf_counter() - t0) / reps
     return dt, report
+
+
+def _fault_sweep(cfg, sc, state, pop, n_units, reps):
+    """Chaos overhead: rounds/sec + effective-survivor fraction as the
+    fault rate climbs (rate applied to crash, corrupt, and loss alike).
+    Rate 0 runs the clean simulated wire — the chaos path's baseline."""
+    rows = []
+    C = 8
+    for rate in (0.0, 0.05, 0.2):
+        scheduler = CohortScheduler(pop, cohort_size=C, over_select=1.0,
+                                    deadline=float("inf"), seed=0)
+        faults = (FaultConfig(crash_rate=rate, corrupt_rate=rate,
+                              loss_rate=rate, seed=0) if rate > 0 else None)
+        engine = FederationEngine(
+            cfg, sc, comm_mode="per_epoch", executor=SerialExecutor(),
+            wire=WireConfig(simulate=True), faults=faults)
+        plans, batches = [], []
+        for r in range(reps + 1):
+            plan = scheduler.plan_round(r, n_units, sc.seed,
+                                        client_ids=np.arange(C))
+            bx, by = scheduler.round_batch(plan, B)
+            plans.append(plan)
+            batches.append({"tokens": jnp.asarray(bx),
+                            "labels": jnp.asarray(by)})
+        st, _, _ = engine.run_round(state, plans[0], batches[0])  # warmup
+        jax.block_until_ready(jax.tree.leaves(st.peft))
+        fracs, t0 = [], time.perf_counter()
+        for r in range(1, reps + 1):
+            st, _, report = engine.run_round(st, plans[r], batches[r])
+            fracs.append(report.n_validated / report.cohort_size)
+        jax.block_until_ready(jax.tree.leaves(st.peft))
+        dt = (time.perf_counter() - t0) / reps
+        h = report.health
+        row = {
+            "fault_rate": rate,
+            "rounds_per_sec": 1.0 / dt,
+            "sec_per_round": dt,
+            "survivor_fraction": float(np.mean(fracs)),
+            "bytes_up": report.bytes_up,
+            "quarantined": 0 if h is None else h.quarantined,
+            "lost": 0 if h is None else h.lost,
+            "retries": 0 if h is None else h.retries,
+        }
+        rows.append(row)
+        print(f"[bench_round] fault_sweep rate={rate:4.2f} "
+              f"{1.0/dt:6.2f} rounds/s  "
+              f"survivors={row['survivor_fraction']:.2f}  "
+              f"quarantined={row['quarantined']} lost={row['lost']}")
+    return rows
 
 
 def main(quick: bool = False, json_path: str = "BENCH_round.json"):
@@ -139,6 +192,7 @@ def main(quick: bool = False, json_path: str = "BENCH_round.json"):
     for r in stream:
         by_cohort.setdefault(r["cohort"], r["agg_bytes_streaming"])
     flat = len(set(by_cohort.values())) == 1
+    fault_rows = _fault_sweep(cfg, sc, state, pop, n_units, reps)
     doc = {
         "arch": ARCH,
         "peft_params": int(peft_params),
@@ -148,6 +202,7 @@ def main(quick: bool = False, json_path: str = "BENCH_round.json"):
         "n_devices": n_dev,
         "streaming_agg_flat_in_cohort": bool(flat),
         "results": results,
+        "fault_sweep": fault_rows,
     }
     out = {}
     if os.path.exists(json_path):

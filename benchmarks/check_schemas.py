@@ -39,6 +39,11 @@ _ROUND_RESULT_ROW = {
     "sec_per_round", "bytes_up", "bytes_down",
 }
 
+_FAULT_SWEEP_ROW = {
+    "fault_rate", "rounds_per_sec", "sec_per_round", "survivor_fraction",
+    "quarantined", "lost", "retries",
+}
+
 _SERVE_ROW = {
     "arch", "mode", "n_adapters", "max_batch", "fused_prefill", "requests",
     "gen_tokens", "wall_s", "requests_per_sec", "decode_tok_per_sec",
@@ -118,6 +123,18 @@ def check_round(doc) -> list:
                      errors)
         _check_rows(bench.get("results", []), _ROUND_RESULT_ROW,
                     f"round_bench[{i}].results", errors)
+        sweep = bench.get("fault_sweep", [])
+        _check_rows(sweep, _FAULT_SWEEP_ROW,
+                    f"round_bench[{i}].fault_sweep", errors)
+        rates = {row.get("fault_rate") for row in sweep}
+        _require(0.0 in rates and any(r > 0 for r in rates if r is not None),
+                 f"round_bench[{i}].fault_sweep: needs a clean baseline "
+                 f"(rate 0) AND at least one faulty rate", errors)
+        for j, row in enumerate(sweep):
+            frac = row.get("survivor_fraction")
+            _require(isinstance(frac, (int, float)) and 0.0 <= frac <= 1.0,
+                     f"round_bench[{i}].fault_sweep[{j}]: "
+                     f"survivor_fraction {frac!r} not in [0, 1]", errors)
     return errors
 
 

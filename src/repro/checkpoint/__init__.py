@@ -1,1 +1,9 @@
-from repro.checkpoint.io import save_pytree, load_pytree
+from repro.checkpoint.io import CheckpointError, load_pytree, save_pytree
+from repro.checkpoint.manifest import (
+    RunManifest,
+    load_checkpoint,
+    read_manifest,
+    save_checkpoint,
+    tree_content_hash,
+    write_manifest,
+)

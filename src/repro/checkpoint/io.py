@@ -2,6 +2,14 @@
 
 Keys are '/'-joined pytree paths; structure is reconstructed on load from the
 reference tree (the usual "restore into like-structured template" pattern).
+
+``save_pytree`` is ATOMIC: the npz is written to a same-directory ``*.tmp``
+file, fsync'd, and ``os.replace``d into place, so a crash mid-write can
+never leave a torn checkpoint at the target path — readers see either the
+old complete file or the new complete file. ``load_pytree`` is STRICT: the
+stored key set must match the template's exactly (missing or extra keys
+raise ``CheckpointError`` up front, instead of KeyError-ing mid-restore
+with a half-built leaf list).
 """
 from __future__ import annotations
 
@@ -11,31 +19,77 @@ import jax
 import numpy as np
 
 
+class CheckpointError(ValueError):
+    """A checkpoint that cannot be restored into the given template."""
+
+
 def _flatten_with_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-                       for p in path)
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
         out[key] = np.asarray(leaf)
     return out
 
 
+def _fsync_dir(dirpath: str) -> None:
+    """Durably record the directory entry (rename) itself."""
+    try:
+        fd = os.open(dirpath, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platforms without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_pytree(path: str, tree) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **_flatten_with_paths(tree))
+    """Atomically write ``tree`` to ``path`` (npz). tmp + fsync + rename."""
+    path = path if path.endswith(".npz") else path + ".npz"
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    # np.savez appends .npz to *names* but writes file OBJECTS verbatim, so
+    # handing it an open handle keeps the tmp path under our control
+    with open(tmp, "wb") as f:
+        np.savez(f, **_flatten_with_paths(tree))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path))
 
 
 def load_pytree(path: str, like):
-    """Load arrays saved by ``save_pytree`` into the structure of ``like``."""
+    """Load arrays saved by ``save_pytree`` into the structure of ``like``.
+
+    Strict: the checkpoint's key set must equal the template's — a renamed
+    field, a missing leaf, or a stale extra leaf fails BEFORE any leaf is
+    restored, never mid-restore.
+    """
     data = np.load(path if path.endswith(".npz") else path + ".npz")
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
+    keyed = []
     for pth, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-                       for p in pth)
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in pth)
+        keyed.append((key, leaf))
+    want = {k for k, _ in keyed}
+    have = set(data.files)
+    if want != have:
+        missing, extra = sorted(want - have), sorted(have - want)
+        raise CheckpointError(
+            f"checkpoint/template key mismatch: missing {missing[:5]}"
+            f"{'...' if len(missing) > 5 else ''}, extra {extra[:5]}"
+            f"{'...' if len(extra) > 5 else ''}")
+    leaves = []
+    for key, leaf in keyed:
         arr = data[key]
-        if arr.shape != leaf.shape:
-            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
-        leaves.append(arr.astype(leaf.dtype))
+        if arr.shape != np.shape(leaf):
+            raise CheckpointError(
+                f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -6,16 +6,25 @@ from repro.fl.runtime.engine import (
     FederationEngine,
     RoundReport,
     WireConfig,
+    WireHealth,
 )
 from repro.fl.runtime.executor import (
     SerialExecutor,
     ShardedExecutor,
     pad_cohort,
 )
+from repro.fl.runtime.faults import (
+    FaultConfig,
+    FaultCounters,
+    FaultInjector,
+)
 from repro.fl.runtime.messages import (
     ClientUpdate,
     TaskAssignment,
     WIRE_DTYPES,
+    WIRE_SCHEMA,
+    WireError,
+    decode_frame,
     wire_dtype,
 )
 from repro.fl.runtime.population import (

@@ -24,10 +24,23 @@ Wire simulation (``WireConfig(simulate=True)``) routes every surviving
 client's payload through a real serialized ``ClientUpdate`` frame
 (measured bytes, configurable fp32/bf16/fp16 scalar quantization) before
 aggregation; fp32 framing is bit-exact.
+
+Fault tolerance (``faults=`` + ``quorum=``): with a ``FaultInjector`` the
+simulated wire becomes chaotic — crashes, corruption, loss-with-retry,
+duplication, poisoned payloads — and the server side gains the full
+defensive stack: strict decode quarantines bad frames (counted, never
+aggregated), payload validation rejects NaN/Inf and norm-outlier updates,
+dedupe drops duplicate deliveries, and quorum gating either re-extends the
+cohort deterministically from the over-selection pool (stragglers whose
+updates were already computed) or skips the server step and carries the
+round forward. Dropout-corrected unit counts and all survivor metrics
+derive from the VALIDATED survivor set only. With faults disabled the
+engine takes the exact pre-existing code paths (bit-identity preserved).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -49,7 +62,13 @@ from repro.fl.runtime.executor import (
     _weighted,
     pad_cohort,
 )
-from repro.fl.runtime.messages import ClientUpdate, wire_dtype
+from repro.fl.runtime.faults import FaultConfig, FaultInjector
+from repro.fl.runtime.messages import (
+    ClientUpdate,
+    WireError,
+    decode_frame,
+    wire_dtype,
+)
 from repro.fl.runtime.population import CohortPlan
 from repro.fl.server import server_update
 from repro.obs import NULL
@@ -67,6 +86,25 @@ class WireConfig:
 
 
 @dataclasses.dataclass
+class WireHealth:
+    """Per-round tally of the chaotic uplink and the server's defenses."""
+    sent: int = 0            # frames serialized for transmission
+    transmissions: int = 0   # uplink attempts (every one burns bytes)
+    delivered: int = 0       # frames that reached the server at all
+    accepted: int = 0        # strict-decoded OK after dedupe
+    validated: int = 0       # passed defensive payload validation
+    crashed: int = 0         # clients that died before transmitting
+    lost: int = 0            # frames that exhausted every retry
+    retries: int = 0         # attempts beyond the first
+    backoff_s: float = 0.0   # total simulated retry backoff
+    quarantined: int = 0     # delivered frames rejected by strict decode
+    duplicates: int = 0      # deliveries deduped at the server
+    invalid: int = 0         # decoded OK but failed payload validation
+    requorumed: int = 0      # pool clients activated to reach quorum
+    failure_kinds: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
 class RoundReport:
     round_idx: int
     cohort_size: int                 # scheduled (over-selected) cohort
@@ -81,6 +119,17 @@ class RoundReport:
     n_devices: int
     agg_bytes_streaming: int         # accumulator bytes (O(peft) / device)
     agg_bytes_stacked: int           # (C, peft) materialization equivalent
+    # fault-tolerance fields (defaulted: clean-path constructors unchanged)
+    n_validated: int = -1            # survivors the aggregator actually used
+    dropped_frame_ids: List[int] = dataclasses.field(default_factory=list)
+    quorum: int = 0                  # resolved quorum (0 = ungated)
+    quorum_met: bool = True
+    round_skipped: bool = False      # below quorum: server step skipped
+    health: Optional[WireHealth] = None
+
+    def __post_init__(self):
+        if self.n_validated < 0:
+            self.n_validated = self.n_survivors
 
 
 def _ideal_plan(round_idx: int, M: int, n_units: int) -> CohortPlan:
@@ -97,10 +146,26 @@ def _ideal_plan(round_idx: int, M: int, n_units: int) -> CohortPlan:
 class FederationEngine:
     def __init__(self, cfg, spry_cfg, task: str = "cls",
                  comm_mode: Optional[str] = None, executor=None,
-                 wire: Optional[WireConfig] = None, telemetry=None):
+                 wire: Optional[WireConfig] = None, telemetry=None,
+                 faults=None, quorum: Optional[float] = None,
+                 norm_outlier_mult: float = 100.0):
         self.cfg = cfg
         self.spry_cfg = spry_cfg
         self.task = task
+        self.wire = wire or WireConfig()
+        if isinstance(faults, FaultConfig):
+            faults = FaultInjector(faults)
+        if faults is not None and not self.wire.simulate:
+            raise ValueError(
+                "fault injection perturbs serialized frames — it requires "
+                "WireConfig(simulate=True)")
+        self.faults: Optional[FaultInjector] = faults
+        # quorum: fraction of the requested cohort in (0, 1], or an
+        # absolute survivor count >= 1; None disables the gate
+        if quorum is not None and quorum <= 0:
+            raise ValueError(f"quorum must be positive, got {quorum}")
+        self.quorum = quorum
+        self.norm_outlier_mult = float(norm_outlier_mult)
         # host-side telemetry on already-returned values ONLY: the jitted
         # round bodies below never see this object, so telemetry-on traces
         # the identical program (tests/test_telemetry_neutrality.py)
@@ -116,11 +181,21 @@ class FederationEngine:
         self._tg_jvp = tel.gauge("fl.jvp_abs_mean")
         self._tg_delta = tel.gauge("fl.delta_norm")
         self._th_round_s = tel.histogram("fl.round_seconds")
+        # fault-tolerance observability (host-side, zero-cost when clean)
+        self._tc_quarantined = tel.counter("fl.quarantined")
+        self._tc_corrupt = tel.counter("fl.corrupt_frames")
+        self._tc_lost = tel.counter("fl.lost_updates")
+        self._tc_crashed = tel.counter("fl.crashed_clients")
+        self._tc_dups = tel.counter("fl.duplicate_frames")
+        self._tc_retried = tel.counter("fl.retried_attempts")
+        self._tc_invalid = tel.counter("fl.invalid_payloads")
+        self._tc_requorumed = tel.counter("fl.requorumed")
+        self._tc_skipped = tel.counter("fl.rounds_skipped")
+        self._th_retries = tel.histogram("fl.retries_per_round")
         self.comm_mode = comm_mode or spry_cfg.comm_mode
         if self.comm_mode not in ("per_epoch", "per_iteration"):
             raise ValueError(self.comm_mode)
         self.executor = executor if executor is not None else SerialExecutor()
-        self.wire = wire or WireConfig()
         # whole-cohort serial execution can materialize the client stack and
         # reuse the reference aggregation verbatim (bit-identity); any
         # microbatched/sharded executor streams instead
@@ -254,27 +329,100 @@ class FederationEngine:
         state, metrics, _ = self.run_round(state, plan, batch)
         return state, metrics
 
+    def _resolve_quorum(self, plan: CohortPlan) -> int:
+        """Resolve the quorum knob to an absolute validated-survivor count:
+        a float <= 1.0 is a fraction of the REQUESTED cohort, anything else
+        an absolute count. 0 = gate disabled."""
+        if self.quorum is None:
+            return 0
+        q = self.quorum
+        if isinstance(q, float) and q <= 1.0:
+            return int(math.ceil(q * plan.n_requested))
+        return int(q)
+
+    def _requorum_prejit(self, plan: CohortPlan, quorum_n: int):
+        """Clean-path quorum: deterministically re-extend the survivor set
+        from the over-selection pool in latency order (the next-fastest
+        stragglers — their compute exists, only their deadline was missed).
+        Returns (effective_keep, n_requorumed, quorum_met)."""
+        keep = np.asarray(plan.keep, bool).copy()
+        requorumed = 0
+        if quorum_n and int(keep.sum()) < quorum_n:
+            pool = np.flatnonzero(~keep)
+            pool = pool[np.argsort(plan.latencies[pool], kind="stable")]
+            for i in pool:
+                if int(keep.sum()) >= quorum_n:
+                    break
+                keep[i] = True
+                requorumed += 1
+        met = (not quorum_n) or int(keep.sum()) >= quorum_n
+        return keep, requorumed, met
+
+    def _skip_round(self, state):
+        """Below quorum with the pool exhausted: skip the server step and
+        carry the round index forward (the caller sees NaN metrics)."""
+        new_state = SpryState(state.base, state.peft, state.server,
+                              state.round_idx + 1)
+        nan = jnp.float32(float("nan"))
+        metrics = {"loss": nan, "jvp_abs_mean": nan,
+                   "fused_route": jnp.float32(self.spry_cfg.fused_contraction)}
+        if self.comm_mode == "per_epoch":
+            metrics["delta_norm"] = nan
+        return new_state, metrics
+
     def run_round(self, state, plan: CohortPlan, batch):
         """Execute one scheduled round. ``batch`` leaves lead with the plan's
         cohort axis. Returns (state, metrics, RoundReport)."""
         tel = self.telemetry
         t_round = time.perf_counter()
         index = enumerate_units(state.peft)
-        keep = np.asarray(plan.keep, np.float32)
+        quorum_n = self._resolve_quorum(plan)
+        extra: Dict[str, Any] = {}
+        if self.faults is None:
+            keep_eff, requorumed, quorum_met = self._requorum_prejit(
+                plan, quorum_n)
+        else:  # chaos path re-quorums post-validation, not pre-jit
+            keep_eff, requorumed, quorum_met = (
+                np.asarray(plan.keep, bool), 0, True)
+        keep = np.asarray(keep_eff, np.float32)
         seed_ids, mask_rows, batch_p, keep_p, C = pad_cohort(
             self.executor, np.asarray(plan.seed_ids, np.int32),
             plan.mask_matrix, batch, keep)
 
         with tel.span("fl.round", round=int(plan.round_idx),
                       cohort=plan.cohort_size, comm_mode=self.comm_mode):
-            if self.wire.simulate:
+            if self.faults is not None:
+                new_state, metrics, bytes_up, extra = self._run_chaos(
+                    state, seed_ids, mask_rows, keep_p, batch_p, plan, C,
+                    quorum_n)
+            elif not quorum_met:
+                new_state, metrics = self._skip_round(state)
+                bytes_up = 0
+            elif self.wire.simulate:
                 new_state, metrics, bytes_up = self._run_simulated(
-                    state, seed_ids, mask_rows, keep_p, batch_p, plan, C)
+                    state, seed_ids, mask_rows, keep_p, batch_p, plan, C,
+                    keep_eff)
             else:
                 with tel.span("fl.execute"):
                     new_state, metrics = self._round_jit(
                         state, seed_ids, mask_rows, keep_p, batch_p)
-                bytes_up = self._estimate_uplink(state.peft, index, plan)
+                bytes_up = self._estimate_uplink(state.peft, index, plan,
+                                                 keep_override=keep_eff)
+
+        if self.faults is None:
+            skipped = not quorum_met
+            n_validated = 0 if skipped else int(keep_eff.sum())
+            health = None
+            dropped_frame_ids: List[int] = []
+            if quorum_n:
+                health = WireHealth(validated=n_validated,
+                                    requorumed=requorumed)
+        else:
+            skipped = extra["round_skipped"]
+            quorum_met = extra["quorum_met"]
+            n_validated = extra["n_validated"]
+            health = extra["health"]
+            dropped_frame_ids = extra["dropped_frame_ids"]
 
         peft_bytes = tree_size(state.peft) * 4
         m = self.executor.microbatch or (len(seed_ids)
@@ -294,6 +442,12 @@ class FederationEngine:
             n_devices=self.executor.n_devices,
             agg_bytes_streaming=(m + 1) * peft_bytes,
             agg_bytes_stacked=len(seed_ids) * peft_bytes,
+            n_validated=n_validated,
+            dropped_frame_ids=dropped_frame_ids,
+            quorum=quorum_n,
+            quorum_met=bool(quorum_met),
+            round_skipped=bool(skipped),
+            health=health,
         )
         if tel.enabled:
             self._record_round(plan, metrics, report,
@@ -307,14 +461,17 @@ class FederationEngine:
         never a recompute — the metrics tree handed back to the caller is
         untouched (bitwise-identity asserted in tests)."""
         host = {k: float(v) for k, v in metrics.items()}
-        stragglers = report.cohort_size - report.n_survivors
+        # survivors/stragglers derive from the VALIDATED survivor set the
+        # aggregator actually used (n_validated == n_survivors on the clean
+        # path), so telemetry can never drift from the aggregation
+        stragglers = report.cohort_size - report.n_validated
         mask_units = float(
             np.asarray(plan.mask_matrix)[np.asarray(plan.keep, bool)].sum())
         self._tc_rounds.inc()
         self._tc_bytes_up.add(report.bytes_up)
         self._tc_bytes_down.add(report.bytes_down)
         self._tc_stragglers.add(stragglers)
-        self._tg_survivors.set(report.n_survivors)
+        self._tg_survivors.set(report.n_validated)
         self._tg_mask_units.set(mask_units)
         self._tg_loss.set(host["loss"])
         if "jvp_abs_mean" in host:
@@ -322,6 +479,29 @@ class FederationEngine:
         if "delta_norm" in host:
             self._tg_delta.set(host["delta_norm"])
         self._th_round_s.observe(wall_s)
+        if report.round_skipped:
+            self._tc_skipped.inc()
+        h = report.health
+        if h is not None:
+            self._tc_quarantined.add(h.quarantined)
+            self._tc_corrupt.add(h.failure_kinds.get("corrupt", 0)
+                                 + h.failure_kinds.get("truncated", 0))
+            self._tc_lost.add(h.lost)
+            self._tc_crashed.add(h.crashed)
+            self._tc_dups.add(h.duplicates)
+            self._tc_retried.add(h.retries)
+            self._tc_invalid.add(h.invalid)
+            self._tc_requorumed.add(h.requorumed)
+            self._th_retries.observe(h.retries)
+            self.telemetry.event(
+                "wire_health",
+                round=report.round_idx,
+                quorum=report.quorum,
+                quorum_met=report.quorum_met,
+                round_skipped=report.round_skipped,
+                dropped_frame_ids=report.dropped_frame_ids,
+                **dataclasses.asdict(h),
+            )
         self.telemetry.event(
             "round",
             round=report.round_idx,
@@ -333,7 +513,7 @@ class FederationEngine:
             bytes_up=report.bytes_up,
             bytes_down=report.bytes_down,
             cohort=report.cohort_size,
-            survivors=report.n_survivors,
+            survivors=report.n_validated,
             stragglers=stragglers,
             dropped=report.dropped_client_ids,
             surviving_mask_units=mask_units,
@@ -345,66 +525,220 @@ class FederationEngine:
 
     # -- wire simulation ------------------------------------------------
 
+    def _stack_arrived(self, payload, jvps, seed_ids, index, rows):
+        """Rebuild the cohort payload stack from what ARRIVED: ``rows`` maps
+        cohort position -> decoded ClientUpdate; everyone else gets zeros."""
+        if self.comm_mode == "per_epoch":
+            template = jax.tree.map(np.zeros_like, jax.tree.map(
+                lambda x: np.asarray(x[0]), payload))
+            deltas = {pos: u.to_delta(template, index)
+                      for pos, u in rows.items()}
+            return jax.tree.map(
+                lambda *xs: jnp.asarray(np.stack(xs)),
+                *[deltas.get(i, template) for i in range(len(seed_ids))])
+        arr = np.zeros((len(seed_ids),) + tuple(np.shape(jvps)[1:]),
+                       np.float32)
+        for pos, u in rows.items():
+            arr[pos] = np.asarray(u.jvps, np.float32)
+        return jnp.asarray(arr)
+
     def _run_simulated(self, state, seed_ids, mask_rows, keep, batch, plan,
-                       C):
+                       C, keep_eff):
         tel = self.telemetry
         with tel.span("fl.clients"):
             payload, losses, jvps = self._clients_jit(
                 state, seed_ids, mask_rows, keep, batch)
-        with tel.span("fl.wire", n_survivors=plan.n_survivors):
+        with tel.span("fl.wire", n_survivors=int(keep_eff.sum())):
             updates = self.pack_updates(state.peft, payload, jvps, losses,
-                                        plan)
+                                        plan, keep_override=keep_eff)
             bytes_up = sum(u.byte_size() for u in updates)
             # the server only sees what arrived: unpack frames back into the
             # cohort stack (zeros for dropped clients). Frames carry the
             # fold-in seed_id; cohort POSITION comes from keep order
             # (pack_updates emits survivors in plan order).
-            survivor_pos = np.flatnonzero(plan.keep)
+            survivor_pos = np.flatnonzero(keep_eff)
             index = enumerate_units(state.peft)
-            if self.comm_mode == "per_epoch":
-                template = jax.tree.map(np.zeros_like, jax.tree.map(
-                    lambda x: np.asarray(x[0]), payload))
-                rows = {int(pos): u.to_delta(template, index)
-                        for pos, u in zip(survivor_pos, updates)}
-                stacked = jax.tree.map(
-                    lambda *xs: jnp.asarray(np.stack(xs)),
-                    *[rows.get(i, template) for i in range(len(seed_ids))])
-            else:
-                K = jvps.shape[-1]
-                arr = np.zeros((len(seed_ids), K), np.float32)
-                for pos, u in zip(survivor_pos, updates):
-                    arr[int(pos)] = np.asarray(u.jvps, np.float32)
-                stacked = jnp.asarray(arr)
+            rows = {int(pos): u for pos, u in zip(survivor_pos, updates)}
+            stacked = self._stack_arrived(payload, jvps, seed_ids, index,
+                                          rows)
         with tel.span("fl.aggregate"):
             new_state, metrics = self._aggregate_jit(
                 state, stacked, seed_ids, mask_rows, keep, losses, jvps)
         return new_state, metrics, bytes_up
 
-    def pack_updates(self, peft, payload, jvps, losses,
-                     plan: CohortPlan) -> List[ClientUpdate]:
+    def _pack_one(self, index, payload, jvps, losses, plan: CohortPlan,
+                  i: int) -> ClientUpdate:
+        """Serialize cohort row ``i``'s uplink frame."""
+        cid, sid = int(plan.client_ids[i]), int(plan.seed_ids[i])
+        if self.comm_mode == "per_epoch":
+            delta_i = jax.tree.map(lambda x: np.asarray(x[i]), payload)
+            unit_ids = np.flatnonzero(plan.mask_matrix[i] > 0)
+            return ClientUpdate.from_delta(
+                delta_i, index, unit_ids, round_idx=plan.round_idx,
+                client_id=cid, seed_id=sid, wire=self.wire.dtype,
+                loss=float(losses[i]), include_head=self.wire.include_head)
+        return ClientUpdate.from_jvps(
+            np.asarray(jvps[i]), round_idx=plan.round_idx, client_id=cid,
+            seed_id=sid, wire=self.wire.dtype, loss=float(losses[i]))
+
+    def pack_updates(self, peft, payload, jvps, losses, plan: CohortPlan,
+                     keep_override=None) -> List[ClientUpdate]:
         """Serialize every SURVIVING client's uplink frame."""
         index = enumerate_units(peft)
-        out = []
-        for i, (cid, k) in enumerate(zip(plan.client_ids, plan.keep)):
-            if not k:
-                continue
-            sid = int(plan.seed_ids[i])   # the fold-in seed ref ON THE WIRE
-            if self.comm_mode == "per_epoch":
-                delta_i = jax.tree.map(lambda x: np.asarray(x[i]), payload)
-                unit_ids = np.flatnonzero(plan.mask_matrix[i] > 0)
-                out.append(ClientUpdate.from_delta(
-                    delta_i, index, unit_ids, round_idx=plan.round_idx,
-                    client_id=int(cid), seed_id=sid, wire=self.wire.dtype,
-                    loss=float(losses[i]),
-                    include_head=self.wire.include_head))
-            else:
-                out.append(ClientUpdate.from_jvps(
-                    np.asarray(jvps[i]), round_idx=plan.round_idx,
-                    client_id=int(cid), seed_id=sid, wire=self.wire.dtype,
-                    loss=float(losses[i])))
-        return out
+        keep_vec = plan.keep if keep_override is None else keep_override
+        return [self._pack_one(index, payload, jvps, losses, plan, i)
+                for i in range(len(plan.client_ids)) if keep_vec[i]]
 
-    def _estimate_uplink(self, peft, index, plan: CohortPlan) -> int:
+    # -- chaos path -----------------------------------------------------
+
+    def _update_arrays(self, u: ClientUpdate):
+        arrs = []
+        if u.mode == "delta":
+            for uid in sorted(u.unit_payload or {}):
+                arrs.extend(u.unit_payload[uid])
+            if u.head_payload is not None:
+                arrs.extend(u.head_payload)
+        elif u.jvps is not None:
+            arrs.append(u.jvps)
+        return arrs
+
+    def _poison_update(self, u: ClientUpdate, mode: str) -> None:
+        """Client-side numeric poisoning BEFORE framing: the frame's CRC is
+        valid — only defensive payload validation can catch these."""
+        inj = self.faults
+        if u.mode == "delta":
+            u.unit_payload = {
+                k: [inj.poison_array(np.asarray(a), mode) for a in v]
+                for k, v in (u.unit_payload or {}).items()}
+            if u.head_payload is not None:
+                u.head_payload = [inj.poison_array(np.asarray(a), mode)
+                                  for a in u.head_payload]
+        else:
+            u.jvps = inj.poison_array(np.asarray(u.jvps), mode)
+
+    def _validate_updates(self, accepted) -> set:
+        """Defensive payload validation: reject NaN/Inf outright; with a
+        crowd (>= 4 finite updates) also reject norm outliers beyond
+        ``norm_outlier_mult`` x the median survivor norm."""
+        norms = {}
+        for pos, u in accepted.items():
+            sq, ok = 0.0, True
+            for a in self._update_arrays(u):
+                a = np.asarray(a, np.float64)
+                if not np.all(np.isfinite(a)):
+                    ok = False
+                    break
+                sq += float(np.sum(a * a))
+            norms[pos] = math.sqrt(sq) if ok else None
+        valid = {p for p, n in norms.items() if n is not None}
+        if len(valid) >= 4:
+            med = float(np.median([norms[p] for p in valid]))
+            if med > 0.0:
+                valid = {p for p in valid
+                         if norms[p] <= self.norm_outlier_mult * med}
+        return valid
+
+    def _run_chaos(self, state, seed_ids, mask_rows, keep, batch, plan, C,
+                   quorum_n):
+        """Wire simulation under fault injection: every kept client's frame
+        runs the full gauntlet (crash -> poison -> retry/loss -> corrupt ->
+        strict decode -> dedupe -> validate), quorum re-extends from the
+        over-selection pool through the SAME gauntlet, and aggregation sees
+        only validated survivors. Returns (state', metrics, bytes_up,
+        extra-dict for the RoundReport)."""
+        tel = self.telemetry
+        inj = self.faults
+        inj.take_counters()          # fresh per-round injector tally
+        with tel.span("fl.clients"):
+            payload, losses, jvps = self._clients_jit(
+                state, seed_ids, mask_rows, keep, batch)
+        index = enumerate_units(state.peft)
+        health = WireHealth()
+        accepted: Dict[int, ClientUpdate] = {}
+        attempted: List[int] = []
+        bytes_up = 0
+
+        def push(i: int) -> None:
+            nonlocal bytes_up
+            cid = int(plan.client_ids[i])
+            attempted.append(i)
+            scale = (float(plan.crash_scales[i])
+                     if plan.crash_scales is not None else 1.0)
+            if inj.crashes(cid, plan.round_idx, scale):
+                health.crashed += 1
+                return
+            u = self._pack_one(index, payload, jvps, losses, plan, i)
+            mode = inj.poison_mode(cid, plan.round_idx)
+            if mode is not None:
+                self._poison_update(u, mode)
+            frame = u.to_bytes()
+            health.sent += 1
+            delivered, attempts, _ = inj.transmit(frame, cid, plan.round_idx)
+            bytes_up += len(frame) * attempts   # every attempt burns uplink
+            health.transmissions += attempts
+            health.retries += attempts - 1
+            if not delivered:
+                health.lost += 1
+                return
+            for fb in delivered:
+                health.delivered += 1
+                if i in accepted:       # at-least-once delivery: dedupe
+                    health.duplicates += 1
+                    continue
+                try:
+                    dec = decode_frame(fb)
+                except WireError as e:
+                    health.quarantined += 1
+                    health.failure_kinds[e.kind] = \
+                        health.failure_kinds.get(e.kind, 0) + 1
+                    continue
+                accepted[i] = dec
+
+        with tel.span("fl.wire", chaos=True):
+            for i in np.flatnonzero(np.asarray(plan.keep, bool)):
+                push(int(i))
+            valid = self._validate_updates(accepted)
+            # quorum gate: re-extend deterministically from the
+            # over-selection pool in latency order; pool clients run the
+            # same chaotic gauntlet (they may crash/corrupt too)
+            pool = np.flatnonzero(~np.asarray(plan.keep, bool))
+            pool = pool[np.argsort(plan.latencies[pool], kind="stable")]
+            pi = 0
+            while quorum_n and len(valid) < quorum_n and pi < len(pool):
+                i = int(pool[pi])
+                pi += 1
+                health.requorumed += 1
+                push(i)
+                valid = self._validate_updates(accepted)
+
+        health.accepted = len(accepted)
+        health.validated = len(valid)
+        health.invalid = len(accepted) - len(valid)
+        health.backoff_s = inj.take_counters().backoff_s
+        quorum_met = (not quorum_n) or len(valid) >= quorum_n
+        extra = {
+            "n_validated": len(valid),
+            "dropped_frame_ids": sorted(int(plan.seed_ids[i])
+                                        for i in attempted if i not in valid),
+            "quorum_met": quorum_met,
+            "round_skipped": not quorum_met,
+            "health": health,
+        }
+        if not quorum_met:
+            new_state, metrics = self._skip_round(state)
+            return new_state, metrics, bytes_up, extra
+        keep_valid = np.zeros(len(seed_ids), np.float32)
+        keep_valid[sorted(valid)] = 1.0
+        rows = {p: accepted[p] for p in valid}
+        stacked = self._stack_arrived(payload, jvps, seed_ids, index, rows)
+        with tel.span("fl.aggregate"):
+            new_state, metrics = self._aggregate_jit(
+                state, stacked, seed_ids, mask_rows, keep_valid, losses,
+                jvps)
+        return new_state, metrics, bytes_up, extra
+
+    def _estimate_uplink(self, peft, index, plan: CohortPlan,
+                         keep_override=None) -> int:
         """Measured frame size of zero-filled template updates. Frame size
         depends only on the unit-id set and the header-int digit widths, so
         sizes are memoized — no per-round O(|peft|) serialization."""
@@ -414,7 +748,8 @@ class FederationEngine:
                 lambda x: np.zeros(x.shape, np.float32), peft)
         total = 0
         K = self.spry_cfg.k_perturbations
-        for i, (cid, k) in enumerate(zip(plan.client_ids, plan.keep)):
+        keep_vec = plan.keep if keep_override is None else keep_override
+        for i, (cid, k) in enumerate(zip(plan.client_ids, keep_vec)):
             if not k:
                 continue
             sid = int(plan.seed_ids[i])

@@ -12,11 +12,23 @@
                                                        the perturbations
                                                        from the shared seed)
 
-Both messages serialize to a self-describing binary frame:
+Both messages serialize to a self-describing, integrity-sealed binary frame
+(wire schema v2):
 
     MAGIC(4) | header_len uint32 LE | header json (utf-8) | raw buffers
+    [| fixed trailer] | crc32 uint32 LE over everything preceding it
 
-and ``byte_size()`` is MEASURED from the actual serialized frame — the
+The magic's 4th byte is the wire VERSION and the header carries a redundant
+``schema`` tag plus the raw-payload byte count (``blen``), so strict decode
+can classify exactly what went wrong on a flaky uplink: ``WireError.kind``
+is one of ``truncated`` / ``corrupt`` (checksum) / ``version_mismatch`` /
+``bad_magic`` / ``schema_mismatch`` / ``shape_mismatch``. A frame that
+decodes without raising is byte-for-byte the frame that was sent (CRC32
+over the full body) — there is no silent third outcome, which is the
+contract the engine's quarantine path and tests/test_wire_integrity.py
+are built on.
+
+``byte_size()`` is MEASURED from the actual serialized frame — the
 reconciliation against the analytic ``fl/comm.py`` Table-2 parameter counts
 is asserted in tests/test_messages.py. Scalar payloads are quantized on the
 wire with a configurable dtype (fp32 lossless / bf16 / fp16); fp32 framing
@@ -27,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -37,8 +50,31 @@ try:  # bf16 comes with jax's ml_dtypes dependency; fall back gracefully
 except Exception:  # pragma: no cover - ml_dtypes ships with jax
     _BF16 = None
 
-MAGIC_ASSIGN = b"SPA1"
-MAGIC_UPDATE = b"SPU1"
+WIRE_SCHEMA = 2          # header schema tag; bump with the magic version
+MAGIC_ASSIGN = b"SPA2"
+MAGIC_UPDATE = b"SPU2"
+
+FAILURE_KINDS = ("truncated", "corrupt", "version_mismatch", "bad_magic",
+                 "schema_mismatch", "shape_mismatch")
+
+
+class WireError(ValueError):
+    """A frame that failed strict decode, classified by ``kind``.
+
+    truncated         frame shorter than its own declared layout
+    corrupt           CRC32 mismatch or unparseable header (bit flips)
+    version_mismatch  right message family, different wire version byte
+    bad_magic         not one of our frames at all
+    schema_mismatch   header's redundant schema tag disagrees
+    shape_mismatch    lengths/meta internally inconsistent (trailing bytes,
+                      buffer meta not matching the raw section, bad fields)
+    """
+
+    def __init__(self, kind: str, detail: str = ""):
+        if kind not in FAILURE_KINDS:
+            raise AssertionError(f"unknown failure kind {kind!r}")
+        self.kind = kind
+        super().__init__(f"[{kind}] {detail}" if detail else kind)
 
 WIRE_DTYPES: Dict[str, np.dtype] = {
     "fp32": np.dtype(np.float32),
@@ -68,29 +104,108 @@ def _encode_buffers(buffers):
 
 def _decode_buffers(meta, raw: bytes):
     out, off = [], 0
+    if not isinstance(meta, list):
+        raise WireError("shape_mismatch", "buffer meta is not a list")
     for m in meta:
-        dt = _BF16 if (m["dtype"] == "bfloat16" and _BF16 is not None) \
-            else np.dtype(m["dtype"])
-        n = int(np.prod(m["shape"], dtype=np.int64)) * dt.itemsize
-        out.append(np.frombuffer(raw[off:off + n], dtype=dt)
-                   .reshape(m["shape"]))
+        try:
+            dt = _BF16 if (m["dtype"] == "bfloat16" and _BF16 is not None) \
+                else np.dtype(m["dtype"])
+            shape = [int(s) for s in m["shape"]]
+        except (KeyError, TypeError, ValueError) as e:
+            raise WireError("shape_mismatch", f"bad buffer meta: {e}")
+        if any(s < 0 for s in shape):
+            raise WireError("shape_mismatch", f"negative dim in {shape}")
+        n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        if off + n > len(raw):
+            raise WireError("truncated",
+                            f"buffer needs {n} bytes, {len(raw) - off} left")
+        out.append(np.frombuffer(raw[off:off + n], dtype=dt).reshape(shape))
         off += n
     if off != len(raw):
-        raise ValueError(f"trailing bytes in frame: {len(raw) - off}")
+        raise WireError("shape_mismatch",
+                        f"trailing bytes in frame: {len(raw) - off}")
     return out
 
 
-def _frame(magic: bytes, header: dict, raw: bytes) -> bytes:
+def _frame(magic: bytes, header: dict, raw: bytes,
+           trailer: bytes = b"") -> bytes:
+    """Seal a frame: header gains the schema tag + raw byte count, and a
+    CRC32 over the whole body rides as a 4-byte suffix."""
+    header = dict(header)
+    header["schema"] = WIRE_SCHEMA
+    header["blen"] = len(raw)
     hj = json.dumps(header, separators=(",", ":")).encode()
-    return magic + np.uint32(len(hj)).tobytes() + hj + raw
+    body = magic + np.uint32(len(hj)).tobytes() + hj + raw + trailer
+    return body + np.uint32(zlib.crc32(body)).tobytes()
 
 
-def _unframe(magic: bytes, data: bytes) -> Tuple[dict, bytes]:
-    if data[:4] != magic:
-        raise ValueError(f"bad magic {data[:4]!r} (want {magic!r})")
+def _unframe(magic: bytes, data: bytes,
+             trailer_len: int = 0) -> Tuple[dict, bytes, bytes]:
+    """Strict decode of a sealed frame -> (header, raw, trailer).
+
+    Classification order is structural-first so the taxonomy is useful:
+    magic/version, declared lengths, header parse, schema tag, CRC. Every
+    failure raises ``WireError``; success implies the bytes are exactly
+    what the sender sealed (CRC32 over the full body).
+    """
+    data = bytes(data)
+    if len(data) < 12 + trailer_len:
+        raise WireError("truncated", f"{len(data)} bytes < minimum frame")
+    got = data[:4]
+    if got != magic:
+        if got[:3] == magic[:3]:
+            raise WireError("version_mismatch", f"{got!r} (want {magic!r})")
+        raise WireError("bad_magic", f"{got!r} (want {magic!r})")
     hlen = int(np.frombuffer(data[4:8], np.uint32)[0])
-    header = json.loads(data[8:8 + hlen].decode())
-    return header, data[8 + hlen:]
+    if 8 + hlen + trailer_len + 4 > len(data):
+        raise WireError("truncated",
+                        f"header claims {hlen} bytes, frame has {len(data)}")
+    try:
+        header = json.loads(data[8:8 + hlen].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError("corrupt", f"unparseable header: {e}")
+    if not isinstance(header, dict) or "schema" not in header:
+        raise WireError("schema_mismatch", "header missing schema tag")
+    if header["schema"] != WIRE_SCHEMA:
+        raise WireError("schema_mismatch",
+                        f"schema {header['schema']!r} != {WIRE_SCHEMA}")
+    try:
+        blen = int(header["blen"])
+    except (KeyError, TypeError, ValueError):
+        raise WireError("shape_mismatch", "header missing/bad blen")
+    expected = 8 + hlen + blen + trailer_len + 4
+    if len(data) < expected:
+        raise WireError("truncated",
+                        f"frame {len(data)} bytes < declared {expected}")
+    if len(data) > expected:
+        raise WireError("shape_mismatch",
+                        f"frame {len(data)} bytes > declared {expected}")
+    body, crc = data[:-4], data[-4:]
+    if zlib.crc32(body) != int(np.frombuffer(crc, np.uint32)[0]):
+        raise WireError("corrupt", "checksum mismatch")
+    raw = data[8 + hlen:8 + hlen + blen]
+    trailer = data[8 + hlen + blen:8 + hlen + blen + trailer_len]
+    return header, raw, trailer
+
+
+def decode_frame(data: bytes):
+    """Strict decode of an unknown frame -> TaskAssignment | ClientUpdate.
+
+    The single entry point the engine's quarantine path uses: either the
+    decoded message is returned (bitwise-faithful, CRC-verified) or a
+    ``WireError`` classifies the failure — never a silently-wrong value.
+    """
+    head = bytes(data[:4]) if len(data) >= 4 else bytes(data)
+    if head == MAGIC_ASSIGN:
+        return TaskAssignment.from_bytes(data)
+    if head == MAGIC_UPDATE:
+        return ClientUpdate.from_bytes(data)
+    if len(data) < 12:
+        raise WireError("truncated", f"{len(data)} bytes < minimum frame")
+    for magic in (MAGIC_ASSIGN, MAGIC_UPDATE):
+        if head[:3] == magic[:3]:
+            raise WireError("version_mismatch", f"{head!r} (want {magic!r})")
+    raise WireError("bad_magic", f"{head!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -111,7 +226,7 @@ class TaskAssignment:
     seed_id: int
     cohort_size: int
     seed: int                    # global algorithm seed; the chain is
-                                 # fold_in(fold_in(PRNGKey(seed), round), seed_id)
+                                 # fold_in(fold_in(key, round), seed_id)
     n_units: int                 # U — so the mask row can be rebuilt
     unit_ids: np.ndarray         # (n_assigned,) int32
     hparams: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -138,9 +253,19 @@ class TaskAssignment:
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "TaskAssignment":
-        header, raw = _unframe(MAGIC_ASSIGN, data)
-        (unit_ids,) = _decode_buffers(header.pop("buffers"), raw)
-        return cls(unit_ids=unit_ids.astype(np.int32), **header)
+        header, raw, _ = _unframe(MAGIC_ASSIGN, data)
+        try:
+            (unit_ids,) = _decode_buffers(header["buffers"], raw)
+            return cls(round_idx=int(header["round_idx"]),
+                       client_id=int(header["client_id"]),
+                       seed_id=int(header["seed_id"]),
+                       cohort_size=int(header["cohort_size"]),
+                       seed=int(header["seed"]),
+                       n_units=int(header["n_units"]),
+                       unit_ids=unit_ids.astype(np.int32),
+                       hparams=header["hparams"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise WireError("shape_mismatch", f"bad assignment header: {e}")
 
     def byte_size(self) -> int:
         return len(self.to_bytes())
@@ -267,29 +392,43 @@ class ClientUpdate:
         }
         # loss telemetry rides as a FIXED 4-byte trailer (a json float field
         # would make the frame size value-dependent, breaking the shape-only
-        # byte accounting the engine's streamed estimate relies on)
+        # byte accounting the engine's streamed estimate relies on); the CRC
+        # seals it along with the rest of the body
         trailer = np.float32(self.loss).tobytes()
-        return _frame(MAGIC_UPDATE, header, raw) + trailer
+        return _frame(MAGIC_UPDATE, header, raw, trailer)
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "ClientUpdate":
-        header, raw = _unframe(MAGIC_UPDATE, data[:-4])
-        loss = float(np.frombuffer(data[-4:], np.float32)[0])
-        bufs = _decode_buffers(header["buffers"], raw)
-        out = cls(round_idx=header["round_idx"], client_id=header["client_id"],
-                  seed_id=header["seed_id"], mode=header["mode"],
-                  wire=header["wire"], loss=loss)
+        header, raw, trailer = _unframe(MAGIC_UPDATE, data, trailer_len=4)
+        loss = float(np.frombuffer(trailer, np.float32)[0])
+        try:
+            bufs = _decode_buffers(header["buffers"], raw)
+            out = cls(round_idx=int(header["round_idx"]),
+                      client_id=int(header["client_id"]),
+                      seed_id=int(header["seed_id"]), mode=header["mode"],
+                      wire=header["wire"], loss=loss)
+            layout = header["layout"]
+        except (KeyError, TypeError, ValueError) as e:
+            raise WireError("shape_mismatch", f"bad update header: {e}")
+        if out.mode not in ("delta", "jvp"):
+            raise WireError("shape_mismatch", f"unknown mode {out.mode!r}")
         off = 0
         if out.mode == "delta":
             out.unit_payload = {}
-            for entry in header["layout"]:
-                chunk = bufs[off:off + entry["n"]]
-                off += entry["n"]
-                if entry["unit"] == -1:
-                    out.head_payload = chunk
-                else:
-                    out.unit_payload[int(entry["unit"])] = chunk
+            try:
+                for entry in layout:
+                    chunk = bufs[off:off + entry["n"]]
+                    off += entry["n"]
+                    if entry["unit"] == -1:
+                        out.head_payload = chunk
+                    else:
+                        out.unit_payload[int(entry["unit"])] = chunk
+            except (KeyError, TypeError, ValueError) as e:
+                raise WireError("shape_mismatch", f"bad layout: {e}")
         else:
+            if len(bufs) != 1:
+                raise WireError("shape_mismatch",
+                                f"jvp update carries {len(bufs)} buffers")
             out.jvps = bufs[0]
         return out
 

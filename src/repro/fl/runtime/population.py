@@ -51,12 +51,13 @@ class DeviceTier:
     name: str
     flops_scale: float       # relative client compute speed
     base_latency: float      # mean round-trip seconds at scale 1.0
+    crash_scale: float = 1.0  # multiplier on the FaultInjector's crash rate
 
 
 DEFAULT_TIERS: Tuple[DeviceTier, ...] = (
-    DeviceTier("hi_end_phone", 1.0, 4.0),
-    DeviceTier("mid_phone", 0.5, 8.0),
-    DeviceTier("iot_board", 0.2, 20.0),
+    DeviceTier("hi_end_phone", 1.0, 4.0, crash_scale=0.5),
+    DeviceTier("mid_phone", 0.5, 8.0, crash_scale=1.0),
+    DeviceTier("iot_board", 0.2, 20.0, crash_scale=2.5),
 )
 DEFAULT_TIER_PROBS: Tuple[float, ...] = (0.3, 0.5, 0.2)
 
@@ -158,6 +159,7 @@ class CohortPlan:
     keep: np.ndarray                # (C,) bool — update arrived in time
     assignments: List[TaskAssignment]
     n_requested: int                # cohort size before over-selection
+    crash_scales: Optional[np.ndarray] = None  # (C,) per-tier fault scaling
 
     @property
     def cohort_size(self) -> int:
@@ -252,11 +254,14 @@ class CohortScheduler:
                 round_idx=int(round_idx), client_id=int(cid),
                 seed_id=int(seed_ids[i]), cohort_size=C, seed=int(spry_seed),
                 n_units=int(n_units), unit_ids=unit_ids, hparams=hparams))
+        crash_scales = np.asarray(
+            [pop.device_tier(int(c)).crash_scale for c in client_ids],
+            np.float64)
         return CohortPlan(
             round_idx=int(round_idx), client_ids=client_ids,
             seed_ids=seed_ids, mask_matrix=mask_matrix, latencies=latencies,
             deadline=deadline, keep=keep, assignments=assignments,
-            n_requested=self.cohort_size)
+            n_requested=self.cohort_size, crash_scales=crash_scales)
 
     def round_batch(self, plan: CohortPlan, batch_size: int):
         """Stack each planned client's local minibatch to (C, B, ...)."""

@@ -110,8 +110,21 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                  runtime=False, runtime_executor="serial",
                  runtime_microbatch=None, over_select=1.0, deadline=None,
                  dropout_rate=0.0, wire_dtype="fp32", wire_simulate=False,
-                 telemetry=None):
+                 telemetry=None, faults=None, quorum=None,
+                 checkpoint_dir=None, checkpoint_every=1, resume=False):
     tel = telemetry if telemetry is not None else NULL
+    # fault injection rides the simulated wire (frames must exist to be
+    # corrupted), so --faults implies --wire-simulate on the runtime path
+    from repro.fl.runtime.faults import FaultConfig
+    if isinstance(faults, str):
+        faults = FaultConfig.parse(faults, seed=seed)
+    if faults is not None and not faults.any_faults:
+        faults = None
+    if faults is not None:
+        if not runtime:
+            raise ValueError("--faults requires --runtime (the chaotic wire "
+                             "lives in the federation engine)")
+        wire_simulate = True
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_config(cfg)
@@ -189,7 +202,7 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
         engine = FederationEngine(
             cfg, sc, task="cls", comm_mode=comm_mode, executor=executor,
             wire=WireConfig(dtype=wire_dtype, simulate=wire_simulate),
-            telemetry=tel)
+            telemetry=tel, faults=faults, quorum=quorum)
         n_units = enumerate_units(state.peft).n_units
         client_data = [ClientDataset(x_tr, y_tr, population.shard(c))
                        for c in range(min(total_clients, 8))]
@@ -218,9 +231,52 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
 
     history = []
     bytes_up_total = bytes_down_total = 0
+    start_round = 0
+    if resume:
+        # crash-safe resume: the manifest carries everything the loop
+        # consumes host-side (round idx, host RNG state, history, byte
+        # totals); the jitted round key is fold_in(PRNGKey(seed),
+        # round_idx), so restoring the state + round index replays the
+        # remaining trajectory bit-identically
+        from repro.checkpoint import load_checkpoint
+        if not checkpoint_dir:
+            raise ValueError("--resume requires --checkpoint-dir")
+        state, man = load_checkpoint(checkpoint_dir, state)
+        if man.algo_seed != seed:
+            raise ValueError(f"checkpoint seed {man.algo_seed} != run seed "
+                             f"{seed}: refusing to splice trajectories")
+        start_round = man.round_idx
+        history = list(man.history)
+        bytes_up_total = int(man.extra.get("bytes_up_total", 0))
+        bytes_down_total = int(man.extra.get("bytes_down_total", 0))
+        if man.rng_state is not None:
+            rng.bit_generator.state = man.rng_state
+        log(f"[{method}] resumed from {checkpoint_dir} at round "
+            f"{start_round}")
+
+    def maybe_checkpoint(r):
+        if not checkpoint_dir:
+            return
+        if (r + 1) % max(1, checkpoint_every) != 0 and r != rounds - 1:
+            return
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(
+            checkpoint_dir, state, round_idx=r + 1, algo_seed=seed,
+            rng_state=rng.bit_generator.state, history=history,
+            extra={"bytes_up_total": bytes_up_total,
+                   "bytes_down_total": bytes_down_total})
+
     probe = MemoryProbe(tel) if tel.enabled else None
     t0 = time.time()
-    for r in range(rounds):
+    if start_round >= rounds:
+        # the checkpoint already covers the whole run; only the final
+        # personalized eval may be outstanding
+        if history and "personalized_acc" not in history[-1]:
+            history[-1]["personalized_acc"] = eval_personalized()
+            log(f"[{method}] personalized_acc="
+                f"{history[-1]['personalized_acc']:.4f}")
+        return history
+    for r in range(start_round, rounds):
         t_round = time.perf_counter()
         if engine is not None:
             plan = scheduler.plan_round(r, n_units, sc.seed)
@@ -272,8 +328,10 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                 entry["bytes_down"] = bytes_down_total
                 extra = (f" up={bytes_up_total/1e6:.2f}MB "
                          f"down={bytes_down_total/1e6:.2f}MB "
-                         f"survivors={report.n_survivors}/"
+                         f"survivors={report.n_validated}/"
                          f"{report.cohort_size}")
+                if report.round_skipped:
+                    extra += " [below quorum: round skipped]"
             history.append(entry)
             if tel.enabled:
                 ev = {k: v for k, v in entry.items() if k != "t"}
@@ -281,6 +339,7 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                 tel.event("eval", **ev)
             log(f"[{method}] round {r+1:4d} loss={float(metrics['loss']):.4f} "
                 f"test_acc={acc:.4f} ({time.time()-t0:.0f}s){extra}")
+        maybe_checkpoint(r)
     history[-1]["personalized_acc"] = eval_personalized()
     if tel.enabled:
         probe.sample("end_of_run")
@@ -331,6 +390,22 @@ def main():
                     choices=("fp32", "bf16", "fp16"))
     ap.add_argument("--wire-simulate", action="store_true",
                     help="route every update through a serialized frame")
+    ap.add_argument("--faults", default=None,
+                    help="chaos schedule: 'mild'/'aggressive' preset or "
+                         "'crash_rate=0.1,corrupt_rate=0.2,...' (implies "
+                         "--wire-simulate; requires --runtime)")
+    ap.add_argument("--quorum", type=float, default=None,
+                    help="min validated survivors per round: fraction of "
+                         "the requested cohort if <= 1.0, else an absolute "
+                         "count; below quorum the cohort is re-extended or "
+                         "the server step is skipped")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="crash-safe checkpoint directory (atomic state + "
+                         "manifest written every --checkpoint-every rounds)")
+    ap.add_argument("--checkpoint-every", type=int, default=1)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint-dir's manifest, "
+                         "replaying the remaining rounds bit-identically")
     ap.add_argument("--out", default=None)
     ap.add_argument("--telemetry", default="telemetry.jsonl",
                     help="JSONL event-log path (machine-readable round "
@@ -362,7 +437,11 @@ def main():
                         dropout_rate=args.dropout_rate,
                         wire_dtype=args.wire_dtype,
                         wire_simulate=args.wire_simulate,
-                        telemetry=tel)
+                        telemetry=tel, faults=args.faults,
+                        quorum=args.quorum,
+                        checkpoint_dir=args.checkpoint_dir,
+                        checkpoint_every=args.checkpoint_every,
+                        resume=args.resume)
     if tel.enabled:
         if args.trace_out:
             tel.export_chrome_trace(args.trace_out)

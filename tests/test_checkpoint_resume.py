@@ -1,0 +1,260 @@
+"""Crash-safe checkpointing: atomic writes, strict restore, manifest
+integrity, and the headline kill-and-resume bitwise-replay contract."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointError,
+    RunManifest,
+    load_checkpoint,
+    load_pytree,
+    read_manifest,
+    save_checkpoint,
+    save_pytree,
+    tree_content_hash,
+    write_manifest,
+)
+from repro.checkpoint.manifest import MANIFEST_NAME, MANIFEST_SCHEMA
+
+
+def _tree(scale=1.0):
+    rng = np.random.default_rng(0)
+    return {"a": {"w": (scale * rng.normal(size=(4, 3))).astype(np.float32),
+                  "b": (scale * rng.normal(size=(3,))).astype(np.float32)},
+            "head": [np.arange(6, dtype=np.float32) * scale]}
+
+
+def assert_trees_equal(a, b, what=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# save_pytree / load_pytree: atomic + strict
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, t)
+    assert_trees_equal(t, load_pytree(p, jax.tree.map(np.zeros_like, t)))
+
+
+def test_save_leaves_no_tmp_file(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, _tree())
+    assert os.path.exists(p)
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_save_overwrites_stale_tmp(tmp_path):
+    """A tmp file abandoned by a previous crash must not break the save."""
+    p = str(tmp_path / "ck.npz")
+    with open(p + ".tmp", "wb") as f:
+        f.write(b"torn garbage from a crashed writer")
+    save_pytree(p, _tree())
+    assert_trees_equal(_tree(),
+                       load_pytree(p, jax.tree.map(np.zeros_like, _tree())))
+
+
+def test_load_rejects_missing_keys(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, {"a": np.ones(3, np.float32)})
+    like = {"a": np.zeros(3, np.float32), "new": np.zeros(2, np.float32)}
+    with pytest.raises(CheckpointError, match="missing"):
+        load_pytree(p, like)
+
+
+def test_load_rejects_extra_keys(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, {"a": np.ones(3, np.float32),
+                    "stale": np.zeros(2, np.float32)})
+    with pytest.raises(CheckpointError, match="extra"):
+        load_pytree(p, {"a": np.zeros(3, np.float32)})
+
+
+def test_load_rejects_shape_mismatch(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, {"a": np.ones((3, 2), np.float32)})
+    with pytest.raises(CheckpointError, match="shape"):
+        load_pytree(p, {"a": np.zeros((2, 3), np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# manifest: content hash, schema strictness, ordering, gc
+# ---------------------------------------------------------------------------
+
+def test_content_hash_is_value_identity():
+    t1, t2 = _tree(), _tree()
+    assert tree_content_hash(t1) == tree_content_hash(t2)
+    t2["a"]["w"][0, 0] += 1
+    assert tree_content_hash(t1) != tree_content_hash(t2)
+
+
+def test_save_load_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    rng = np.random.default_rng(7)
+    rng.random(5)                       # advance: a mid-run rng state
+    man = save_checkpoint(str(tmp_path), t, round_idx=3, algo_seed=11,
+                          rng_state=rng.bit_generator.state,
+                          history=[{"round": 1, "loss": 0.5}],
+                          extra={"bytes_up_total": 123})
+    assert man.round_idx == 3 and man.schema == MANIFEST_SCHEMA
+    state, got = load_checkpoint(str(tmp_path),
+                                 jax.tree.map(np.zeros_like, t))
+    assert_trees_equal(t, state)
+    assert got.algo_seed == 11
+    assert got.history == [{"round": 1, "loss": 0.5}]
+    assert got.extra == {"bytes_up_total": 123}
+    # the restored host-RNG state replays the exact draw stream
+    rng2 = np.random.default_rng(0)
+    rng2.bit_generator.state = got.rng_state
+    np.testing.assert_array_equal(rng.random(8),
+                                  rng2.random(8))
+
+
+def test_manifest_rejects_unknown_schema_and_keys():
+    doc = json.loads(RunManifest(round_idx=1, algo_seed=0, content_hash="x",
+                                 state_file="s.npz").to_json())
+    bad = dict(doc, schema="repro.checkpoint/v999")
+    with pytest.raises(CheckpointError, match="schema"):
+        RunManifest.from_json(json.dumps(bad))
+    bad = dict(doc, surprise=1)
+    with pytest.raises(CheckpointError, match="unknown manifest keys"):
+        RunManifest.from_json(json.dumps(bad))
+
+
+def test_tampered_state_detected(tmp_path):
+    t = _tree()
+    man = save_checkpoint(str(tmp_path), t, round_idx=1, algo_seed=0)
+    # bit-rot / tamper: rewrite the state file with different VALUES but
+    # identical keys and shapes — only the content hash can catch this
+    save_pytree(str(tmp_path / man.state_file), _tree(scale=2.0))
+    with pytest.raises(CheckpointError, match="content hash"):
+        load_checkpoint(str(tmp_path), jax.tree.map(np.zeros_like, t))
+
+
+def test_manifest_points_at_missing_state(tmp_path):
+    man = save_checkpoint(str(tmp_path), _tree(), round_idx=1, algo_seed=0)
+    os.remove(str(tmp_path / man.state_file))
+    with pytest.raises(CheckpointError, match="missing state"):
+        load_checkpoint(str(tmp_path), _tree())
+    with pytest.raises(CheckpointError, match="no manifest"):
+        read_manifest(str(tmp_path / "nowhere"))
+
+
+def test_gc_keeps_newest_and_current(tmp_path):
+    t = _tree()
+    for r in (1, 2, 3, 4):
+        save_checkpoint(str(tmp_path), t, round_idx=r, algo_seed=0,
+                        keep_last=2)
+    states = sorted(f for f in os.listdir(tmp_path)
+                    if f.startswith("state_"))
+    assert states == ["state_000003.npz", "state_000004.npz"]
+    state, man = load_checkpoint(str(tmp_path),
+                                 jax.tree.map(np.zeros_like, t))
+    assert man.round_idx == 4
+    assert_trees_equal(t, state)
+
+
+def test_crash_between_state_and_manifest_resumes_previous(tmp_path):
+    """The crash window the write ORDER protects: the round-N state landed
+    but the manifest didn't. Resume must cleanly land on round N-1."""
+    t1, t2 = _tree(), _tree(scale=3.0)
+    save_checkpoint(str(tmp_path), t1, round_idx=1, algo_seed=0)
+    # simulate a crash mid-save_checkpoint: new state written, manifest not
+    save_pytree(str(tmp_path / "state_000002.npz"), t2)
+    state, man = load_checkpoint(str(tmp_path),
+                                 jax.tree.map(np.zeros_like, t1))
+    assert man.round_idx == 1
+    assert_trees_equal(t1, state)
+
+
+def test_write_manifest_atomic(tmp_path):
+    man = RunManifest(round_idx=1, algo_seed=0, content_hash="h",
+                      state_file="s.npz")
+    write_manifest(str(tmp_path), man)
+    assert not os.path.exists(str(tmp_path / MANIFEST_NAME) + ".tmp")
+    assert read_manifest(str(tmp_path)).content_hash == "h"
+
+
+# ---------------------------------------------------------------------------
+# HEADLINE: kill the run at an arbitrary round, resume, and the final state
+# is bitwise identical to the uninterrupted run
+# ---------------------------------------------------------------------------
+
+def test_kill_and_resume_bitwise_identical(tmp_path):
+    from repro.configs import SpryConfig, get_config, reduce_config
+    from repro.core import init_state
+    from repro.fl.runtime import FederationEngine
+    from repro.models import get_model
+    from repro.peft import init_peft
+
+    cfg = reduce_config(get_config("roberta-large-lora"))
+    sc = SpryConfig(n_clients_per_round=4, local_iters=1, local_lr=1e-2,
+                    server_lr=1e-2, k_perturbations=2)
+    key = jax.random.PRNGKey(0)
+    model = get_model(cfg)
+    state0 = init_state(model.init_base(cfg, key), init_peft(cfg, key, sc))
+    batch = {"tokens": jax.random.randint(key, (4, 2, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (4, 2), 0, cfg.n_classes)}
+    eng = FederationEngine(cfg, sc, comm_mode="per_epoch")
+
+    ROUNDS, KILL_AT = 4, 2
+    # uninterrupted trajectory (the round key folds in state.round_idx, so
+    # each round is distinct and order matters)
+    s = state0
+    for _ in range(ROUNDS):
+        s, _ = eng.run_ideal(s, batch)
+    straight = s
+
+    # killed-and-resumed trajectory: run to the kill point, checkpoint,
+    # throw EVERYTHING away, restore from disk into a fresh template, and
+    # replay the remaining rounds
+    s = state0
+    for _ in range(KILL_AT):
+        s, _ = eng.run_ideal(s, batch)
+    save_checkpoint(str(tmp_path), s, round_idx=KILL_AT, algo_seed=sc.seed)
+    del s                                        # the "crash"
+
+    restored, man = load_checkpoint(str(tmp_path), state0)
+    assert man.round_idx == KILL_AT
+    assert int(np.asarray(restored.round_idx)) == KILL_AT
+    for _ in range(ROUNDS - KILL_AT):
+        restored, _ = eng.run_ideal(restored, batch)
+
+    assert tree_content_hash(straight.peft) == \
+        tree_content_hash(restored.peft)
+    assert_trees_equal(straight.peft, restored.peft, "peft")
+    assert_trees_equal(straight.server, restored.server, "server")
+    assert int(np.asarray(restored.round_idx)) == ROUNDS
+
+
+@pytest.mark.slow
+def test_run_training_resume_bitwise(tmp_path):
+    """End-to-end --resume: kill a runtime training run after 2 of 4 rounds
+    and resume; the history losses must match the uninterrupted run."""
+    from repro.launch.train import run_training
+
+    kw = dict(arch="roberta-large-lora", task="sst2", method="spry",
+              rounds=4, clients_per_round=4, total_clients=8,
+              batch_size=2, seed=3, eval_every=1, runtime=True,
+              log=lambda *a, **k: None)
+    full = run_training(**kw)
+
+    ck = str(tmp_path / "ck")
+    run_training(rounds=2, checkpoint_dir=ck,
+                 **{k: v for k, v in kw.items() if k != "rounds"})
+    resumed = run_training(checkpoint_dir=ck, resume=True, **kw)
+
+    assert len(full) == len(resumed) == 4
+    for a, b in zip(full, resumed):
+        assert a["round"] == b["round"]
+        assert np.float32(a["loss"]).tobytes() == \
+            np.float32(b["loss"]).tobytes()
+        assert a["acc"] == b["acc"]

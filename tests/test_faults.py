@@ -1,0 +1,406 @@
+"""Fault injection + the engine's defensive stack.
+
+Key contracts: the injector is deterministic in (seed, client, round,
+attempt); a chaos engine with all rates at zero is BITWISE the clean
+wire-sim engine; a quarantined/poisoned client is BITWISE equivalent to
+that client having been excluded from the round; duplicates dedupe away.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SpryConfig, get_config, reduce_config
+from repro.core import enumerate_units, init_state
+from repro.core.assignment import assignment_matrix
+from repro.fl.runtime import (
+    CohortPlan,
+    FederationEngine,
+    FaultConfig,
+    FaultInjector,
+    WireConfig,
+)
+from repro.models import get_model
+from repro.peft import init_peft
+
+
+def _setup(arch="roberta-large-lora", M=5, B=2, S=16, k=2):
+    cfg = reduce_config(get_config(arch))
+    sc = SpryConfig(n_clients_per_round=M, local_iters=1, local_lr=1e-2,
+                    server_lr=1e-2, k_perturbations=k)
+    key = jax.random.PRNGKey(0)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, sc)
+    state = init_state(base, peft)
+    batch = {"tokens": jax.random.randint(key, (M, B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (M, B), 0, cfg.n_classes)}
+    return cfg, sc, state, batch
+
+
+def _plan(round_idx, M, n_units, keep=None, latencies=None):
+    mask = np.asarray(assignment_matrix(n_units, M, round_idx % M),
+                      np.float32)
+    return CohortPlan(
+        round_idx=round_idx, client_ids=np.arange(M, dtype=np.int64),
+        seed_ids=np.arange(M, dtype=np.int32), mask_matrix=mask,
+        latencies=(np.zeros(M) if latencies is None
+                   else np.asarray(latencies, np.float64)),
+        deadline=float("inf"),
+        keep=(np.ones(M, bool) if keep is None else np.asarray(keep, bool)),
+        assignments=[], n_requested=M)
+
+
+def assert_trees_equal(a, b, what=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# injector unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_injector_deterministic_replay():
+    cfg = FaultConfig(crash_rate=0.3, corrupt_rate=0.4, loss_rate=0.3,
+                      seed=7)
+    frame = bytes(range(256)) * 4
+    a, b = FaultInjector(cfg), FaultInjector(cfg)
+    for cid in range(40):
+        for r in range(3):
+            assert a.crashes(cid, r) == b.crashes(cid, r)
+            da, na, ba = a.transmit(frame, cid, r)
+            db, nb, bb = b.transmit(frame, cid, r)
+            assert da == db and na == nb and ba == bb
+    assert dataclasses.asdict(a.take_counters()) == \
+        dataclasses.asdict(b.take_counters())
+
+
+def test_transmit_retry_bounds_and_loss():
+    inj = FaultInjector(FaultConfig(loss_rate=1.0, max_retries=3,
+                                    backoff_base=0.5, seed=0))
+    delivered, attempts, backoff = inj.transmit(b"x" * 64, 0, 0)
+    assert delivered == [] and attempts == 3
+    assert backoff == pytest.approx(0.5 + 1.0)   # 0.5 * 2**0 + 0.5 * 2**1
+    assert inj.counters.lost == 1 and inj.counters.retries == 2
+
+    inj = FaultInjector(FaultConfig(loss_rate=0.0, max_retries=3, seed=0))
+    delivered, attempts, backoff = inj.transmit(b"x" * 64, 0, 0)
+    assert delivered == [b"x" * 64] and attempts == 1 and backoff == 0.0
+
+
+def test_crash_tier_scaling():
+    inj = FaultInjector(FaultConfig(crash_rate=0.5, seed=1))
+    assert not inj.crashes(0, 0, scale=0.0)     # scaled to rate 0
+    inj = FaultInjector(FaultConfig(crash_rate=0.5, seed=1))
+    assert all(inj.crashes(c, 0, scale=1e9) for c in range(20))  # rate -> 1
+    # higher tier scale can only increase the per-client crash set
+    lo = FaultInjector(FaultConfig(crash_rate=0.2, seed=3))
+    hi = FaultInjector(FaultConfig(crash_rate=0.2, seed=3))
+    crashed_lo = {c for c in range(200) if lo.crashes(c, 0, scale=0.5)}
+    crashed_hi = {c for c in range(200) if hi.crashes(c, 0, scale=2.5)}
+    assert crashed_lo < crashed_hi
+
+
+def test_mangle_never_a_noop():
+    inj = FaultInjector(FaultConfig(corrupt_rate=1.0, seed=5))
+    frame = bytes(range(200))
+    for i in range(30):
+        out = inj._mangle(frame, np.random.default_rng(i))
+        assert out != frame
+
+
+def test_parse_presets_and_specs():
+    assert not FaultConfig.parse("off").any_faults
+    assert not FaultConfig.parse(None).any_faults
+    agg = FaultConfig.parse("aggressive", seed=9)
+    assert agg.any_faults and agg.seed == 9 and agg.crash_rate > 0
+    c = FaultConfig.parse("crash_rate=0.1,loss_rate=0.25,max_retries=5")
+    assert (c.crash_rate, c.loss_rate, c.max_retries) == (0.1, 0.25, 5)
+    with pytest.raises(ValueError):
+        FaultConfig.parse("bogus_knob=1")
+    with pytest.raises(ValueError):
+        FaultConfig(crash_rate=1.5)
+
+
+def test_poison_array_modes():
+    inj = FaultInjector(FaultConfig(nan_rate=1.0, blowup_scale=1e6))
+    a = np.ones((8,), np.float32)
+    nan = inj.poison_array(a, "nan")
+    assert np.isnan(nan).any() and not np.isnan(a).any()
+    blown = inj.poison_array(a, "blowup")
+    assert np.abs(blown).max() == pytest.approx(1e6)
+    zeros = inj.poison_array(np.zeros((4,), np.float32), "blowup")
+    assert np.abs(zeros).max() > 0     # all-zero payload still outliers
+
+
+def test_faults_require_wire_simulation():
+    cfg, sc, _, _ = _setup(M=2)
+    with pytest.raises(ValueError):
+        FederationEngine(cfg, sc, comm_mode="per_epoch",
+                         faults=FaultConfig(crash_rate=0.5))
+
+
+# ---------------------------------------------------------------------------
+# engine-level chaos + quorum contracts
+#
+# Engine construction compiles the jitted round bodies, so ALL tests below
+# share two module-scoped engines (clean wire-sim reference + chaos) and
+# swap the injector / quorum knobs per test — the jits don't depend on
+# either.
+# ---------------------------------------------------------------------------
+
+J = 4          # target client: shares unit 0 with client 0 (M=5 > U=4)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    cfg, sc, state, batch = _setup()
+    index = enumerate_units(state.peft)
+    plan = _plan(0, 5, index.n_units)
+    keep_excl = np.ones(5, bool)
+    keep_excl[J] = False
+    ref = FederationEngine(cfg, sc, comm_mode="per_epoch",
+                           wire=WireConfig(simulate=True))
+    chaos = FederationEngine(cfg, sc, comm_mode="per_epoch",
+                             wire=WireConfig(simulate=True),
+                             faults=FaultConfig(seed=3))
+    # reference runs shared by the bitwise-exclusion tests below
+    full = ref.run_round(state, plan, batch)
+    excl = ref.run_round(state, _plan(0, 5, index.n_units, keep=keep_excl),
+                         batch)
+    ns = type("Ctx", (), {})()
+    ns.cfg, ns.sc, ns.state, ns.batch = cfg, sc, state, batch
+    ns.index, ns.plan, ns.ref, ns.chaos = index, plan, ref, chaos
+    ns.full, ns.excl, ns.keep_excl = full, excl, keep_excl
+    return ns
+
+
+def _arm(eng, faults=None, quorum=None):
+    """Swap the chaos knobs on a shared engine (jits are knob-independent)."""
+    if isinstance(faults, FaultConfig):
+        faults = FaultInjector(faults)
+    eng.faults = faults
+    eng.quorum = quorum
+    return eng
+
+
+def test_zero_rate_chaos_bitwise_equals_clean_wire(ctx):
+    """The chaos plumbing itself is neutral: all rates 0 => bitwise equal
+    to the plain simulated wire."""
+    eng = _arm(ctx.chaos, FaultConfig(seed=3))
+    s2, m2, r2 = eng.run_round(ctx.state, ctx.plan, ctx.batch)
+    s1, m1, r1 = ctx.full
+    assert_trees_equal(s1.peft, s2.peft, "peft")
+    assert_trees_equal(s1.server, s2.server, "server")
+    assert_trees_equal(m1, m2, "metrics")
+    assert r2.health.validated == r2.n_validated == r1.n_survivors
+    assert r2.health.quarantined == 0 and r2.dropped_frame_ids == []
+    assert r1.bytes_up == r2.bytes_up
+
+
+def test_zero_rate_chaos_bitwise_per_iteration():
+    """Same neutrality for the jvp wire (separate engines: other jits)."""
+    cfg, sc, state, batch = _setup()
+    index = enumerate_units(state.peft)
+    plan = _plan(0, 5, index.n_units)
+    clean = FederationEngine(cfg, sc, comm_mode="per_iteration",
+                             wire=WireConfig(simulate=True))
+    s1, m1, _ = clean.run_round(state, plan, batch)
+    chaos = FederationEngine(cfg, sc, comm_mode="per_iteration",
+                             wire=WireConfig(simulate=True),
+                             faults=FaultConfig(seed=3))
+    s2, m2, r2 = chaos.run_round(state, plan, batch)
+    assert_trees_equal(s1.peft, s2.peft, "peft")
+    assert_trees_equal(m1, m2, "metrics")
+    assert r2.n_validated == 5 and not r2.round_skipped
+
+
+class _TargetCorrupt(FaultInjector):
+    """Deterministically corrupt exactly one client's frame."""
+
+    def __init__(self, target):
+        super().__init__(FaultConfig(seed=0))
+        self.target = target
+
+    def transmit(self, frame, client_id, round_idx):
+        if client_id == self.target:
+            bad = bytearray(frame)
+            bad[len(bad) // 2] ^= 0x10
+            self.counters.corrupted += 1
+            return [bytes(bad)], 1, 0.0
+        return [frame], 1, 0.0
+
+
+class _TargetPoison(FaultInjector):
+    """Deterministically NaN-poison exactly one client's payload."""
+
+    def __init__(self, target):
+        super().__init__(FaultConfig(seed=0))
+        self.target = target
+
+    def poison_mode(self, client_id, round_idx):
+        return "nan" if client_id == self.target else None
+
+
+class _TargetBlowup(FaultInjector):
+    """Finite but absurd payload for one client (norm-outlier case)."""
+
+    def __init__(self, target):
+        super().__init__(FaultConfig(blowup_scale=1e8, seed=0))
+        self.target = target
+
+    def poison_mode(self, client_id, round_idx):
+        return "blowup" if client_id == self.target else None
+
+
+class _TargetDuplicate(FaultInjector):
+    """Deliver exactly one client's frame twice."""
+
+    def __init__(self, target):
+        super().__init__(FaultConfig(seed=0))
+        self.target = target
+
+    def transmit(self, frame, client_id, round_idx):
+        if client_id == self.target:
+            self.counters.duplicated += 1
+            return [frame, frame], 1, 0.0
+        return [frame], 1, 0.0
+
+
+@pytest.mark.parametrize("injector_cls,health_field",
+                         [(_TargetCorrupt, "quarantined"),
+                          (_TargetPoison, "invalid"),
+                          (_TargetBlowup, "invalid")])
+def test_bad_client_bitwise_equals_excluded_client(ctx, injector_cls,
+                                                   health_field):
+    """A quarantined (corrupt frame) or rejected (NaN / norm-outlier
+    payload) client is aggregated EXACTLY as if its update never arrived."""
+    eng = _arm(ctx.chaos, injector_cls(J))
+    sd, md, rd = eng.run_round(ctx.state, ctx.plan, ctx.batch)
+    assert getattr(rd.health, health_field) == 1
+    assert rd.n_validated == 4
+    assert rd.dropped_frame_ids == [J]
+
+    se, me, _ = ctx.excl
+    assert_trees_equal(sd.peft, se.peft, "peft")
+    assert_trees_equal(sd.server, se.server, "server")
+    assert_trees_equal(md, me, "metrics")
+
+
+def test_duplicate_frames_deduped_bitwise(ctx):
+    eng = _arm(ctx.chaos, _TargetDuplicate(2))
+    sd, md, rd = eng.run_round(ctx.state, ctx.plan, ctx.batch)
+    assert rd.health.duplicates == 1 and rd.n_validated == 5
+    se, me, _ = ctx.full
+    assert_trees_equal(sd.peft, se.peft, "peft")
+    assert_trees_equal(md, me, "metrics")
+
+
+def test_all_poisoned_round_skips_server_step(ctx):
+    """Every payload NaN'd + quorum: the server step must be skipped and
+    the state carried forward untouched (except the round index)."""
+    eng = _arm(ctx.chaos, FaultConfig(nan_rate=1.0, seed=0), quorum=1.0)
+    s2, m2, r2 = eng.run_round(ctx.state, ctx.plan, ctx.batch)
+    assert r2.round_skipped and not r2.quorum_met
+    assert r2.quorum == 5                      # ceil(1.0 * n_requested)
+    assert r2.n_validated == 0 and r2.health.invalid == 5
+    assert_trees_equal(ctx.state.peft, s2.peft, "peft must be untouched")
+    assert_trees_equal(ctx.state.server, s2.server, "server untouched")
+    assert int(s2.round_idx) == int(ctx.state.round_idx) + 1
+    assert np.isnan(float(m2["loss"]))
+
+
+def test_total_loss_skips_round(ctx):
+    """loss_rate=1: every frame exhausts its retries; below quorum the
+    round is skipped and every attempt still burned uplink bytes."""
+    eng = _arm(ctx.chaos, FaultConfig(loss_rate=1.0, max_retries=2, seed=0),
+               quorum=1)
+    s2, m2, r2 = eng.run_round(ctx.state, ctx.plan, ctx.batch)
+    assert r2.round_skipped and r2.health.lost == 5
+    assert r2.health.transmissions == 10       # 5 clients x 2 attempts
+    assert r2.bytes_up > 0                     # lost frames still cost bytes
+    assert sorted(r2.dropped_frame_ids) == [0, 1, 2, 3, 4]
+    assert_trees_equal(ctx.state.peft, s2.peft, "peft")
+
+
+def test_chaos_replay_is_deterministic(ctx):
+    """Same chaos seed + same plan => identical chaotic round, including the
+    health tally (the crash-resume precondition)."""
+    fc = FaultConfig(crash_rate=0.3, corrupt_rate=0.4, loss_rate=0.3,
+                     nan_rate=0.2, seed=11)
+    runs = []
+    for _ in range(2):
+        eng = _arm(ctx.chaos, fc)
+        runs.append(eng.run_round(ctx.state, ctx.plan, ctx.batch))
+    (s1, m1, r1), (s2, m2, r2) = runs
+    assert_trees_equal(s1.peft, s2.peft, "peft")
+    assert_trees_equal(m1, m2, "metrics")
+    assert dataclasses.asdict(r1.health) == dataclasses.asdict(r2.health)
+    assert r1.bytes_up == r2.bytes_up
+    assert r1.dropped_frame_ids == r2.dropped_frame_ids
+
+
+# ---------------------------------------------------------------------------
+# quorum gate (clean path — no faults)
+# ---------------------------------------------------------------------------
+
+def test_clean_requorum_bitwise_equals_manual_extension(ctx):
+    """Below quorum, the clean path re-extends the survivor set from the
+    pool in latency order — bitwise the same round as a plan that simply
+    kept those clients."""
+    lat = np.array([1.0, 2.0, 3.0, 9.0, 4.0])
+    keep = np.array([True, True, False, False, False])
+    plan = _plan(0, 5, ctx.index.n_units, keep=keep, latencies=lat)
+    eng = _arm(ctx.ref, quorum=4)
+    sq, mq, rq = eng.run_round(ctx.state, plan, ctx.batch)
+    _arm(ctx.ref)
+    # pool latency order is [2 (3.0), 4 (4.0), 3 (9.0)] -> extend 2 then 4
+    manual = np.array([True, True, True, False, True])
+    sm, mm, rm = ctx.ref.run_round(
+        ctx.state, _plan(0, 5, ctx.index.n_units, keep=manual,
+                         latencies=lat), ctx.batch)
+    assert rq.health.requorumed == 2 and rq.quorum_met
+    assert rq.n_validated == 4 and not rq.round_skipped
+    assert_trees_equal(sq.peft, sm.peft, "peft")
+    assert_trees_equal(sq.server, sm.server, "server")
+    assert_trees_equal(mq, mm, "metrics")
+    assert rq.bytes_up == rm.bytes_up
+
+
+def test_clean_quorum_exhausted_skips_round(ctx):
+    """Quorum above cohort + pool: skip, state untouched, NaN metrics."""
+    eng = _arm(ctx.ref, quorum=6)
+    s2, m2, r2 = eng.run_round(ctx.state, ctx.plan, ctx.batch)
+    _arm(ctx.ref)
+    assert r2.round_skipped and not r2.quorum_met and r2.quorum == 6
+    assert r2.n_validated == 0 and r2.bytes_up == 0
+    assert_trees_equal(ctx.state.peft, s2.peft, "peft")
+    assert int(s2.round_idx) == int(ctx.state.round_idx) + 1
+    assert all(np.isnan(float(v)) for k, v in m2.items()
+               if k != "fused_route")
+
+
+def test_quorum_fraction_resolution(ctx):
+    """quorum=0.8 over 5 requested resolves to 4; a full cohort meets it
+    without re-extension and reports it."""
+    eng = _arm(ctx.ref, quorum=0.8)
+    _, _, r = eng.run_round(ctx.state, ctx.plan, ctx.batch)
+    _arm(ctx.ref)
+    assert r.quorum == 4 and r.quorum_met and not r.round_skipped
+    assert r.health.requorumed == 0 and r.health.validated == 5
+
+
+def test_device_tier_crash_scales_in_plan():
+    from repro.fl.runtime import ClientPopulation, CohortScheduler
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 50, size=(64, 16))
+    y = rng.integers(0, 2, size=(64,))
+    pop = ClientPopulation(x, y, n_clients=32, seed=0)
+    sched = CohortScheduler(pop, cohort_size=8, seed=0)
+    plan = sched.plan_round(0, n_units=4, spry_seed=0)
+    assert plan.crash_scales is not None
+    assert plan.crash_scales.shape == plan.client_ids.shape
+    tiers = {t.crash_scale for t in pop.tiers}
+    assert set(np.unique(plan.crash_scales)) <= tiers

@@ -1,0 +1,222 @@
+"""Wire integrity: fuzzed frames are DETECTED or decode bitwise-equal.
+
+The contract under test (messages.py wire schema v2): strict decode of a
+mutated ``TaskAssignment``/``ClientUpdate`` frame either raises a classified
+``WireError`` or — if the mutation happened to leave the frame intact, which
+the CRC makes essentially impossible — returns a value bitwise-equal to the
+original. There is NO silent third outcome.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from repro.fl.runtime.messages import (
+    FAILURE_KINDS,
+    MAGIC_ASSIGN,
+    MAGIC_UPDATE,
+    ClientUpdate,
+    TaskAssignment,
+    WireError,
+    decode_frame,
+)
+
+
+def _assignment(round_idx=3, client_id=17, seed_id=2):
+    return TaskAssignment(
+        round_idx=round_idx, client_id=client_id, seed_id=seed_id,
+        cohort_size=8, seed=42, n_units=16,
+        unit_ids=np.array([1, 5, 9], np.int32),
+        hparams={"local_lr": 5e-3, "local_iters": 2})
+
+
+def _update_delta():
+    rng = np.random.default_rng(0)
+    return ClientUpdate(
+        round_idx=3, client_id=17, seed_id=2, mode="delta", wire="fp32",
+        unit_payload={1: [rng.normal(size=(4, 3)).astype(np.float32),
+                          rng.normal(size=(3,)).astype(np.float32)],
+                      5: [rng.normal(size=(2, 2)).astype(np.float32)]},
+        head_payload=[rng.normal(size=(6,)).astype(np.float32)],
+        loss=0.731)
+
+
+def _update_jvp():
+    return ClientUpdate(
+        round_idx=3, client_id=17, seed_id=2, mode="jvp", wire="fp32",
+        jvps=np.array([0.1, -0.25, 3.5, -4.125], np.float32), loss=1.25)
+
+
+def _assert_equal_assignment(a, b):
+    assert (a.round_idx, a.client_id, a.seed_id, a.cohort_size, a.seed,
+            a.n_units) == (b.round_idx, b.client_id, b.seed_id,
+                           b.cohort_size, b.seed, b.n_units)
+    np.testing.assert_array_equal(a.unit_ids, b.unit_ids)
+    assert a.hparams == b.hparams
+
+
+def _assert_equal_update(a, b):
+    assert (a.round_idx, a.client_id, a.seed_id, a.mode, a.wire) == \
+        (b.round_idx, b.client_id, b.seed_id, b.mode, b.wire)
+    assert np.float32(a.loss).tobytes() == np.float32(b.loss).tobytes()
+    if a.mode == "delta":
+        assert sorted(a.unit_payload) == sorted(b.unit_payload)
+        for uid in a.unit_payload:
+            for x, y in zip(a.unit_payload[uid], b.unit_payload[uid]):
+                assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        if a.head_payload is None:
+            assert b.head_payload is None
+        else:
+            for x, y in zip(a.head_payload, b.head_payload):
+                assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+    else:
+        assert np.asarray(a.jvps).tobytes() == np.asarray(b.jvps).tobytes()
+
+
+_MESSAGES = {
+    "assign": (_assignment, _assert_equal_assignment),
+    "delta": (_update_delta, _assert_equal_update),
+    "jvp": (_update_jvp, _assert_equal_update),
+}
+
+
+def _check_no_silent_third_outcome(original, mutated_bytes, assert_equal):
+    """Decode mutated bytes: classified WireError OR bitwise-equal value."""
+    try:
+        out = decode_frame(mutated_bytes)
+    except WireError as e:
+        assert e.kind in FAILURE_KINDS
+        return "detected"
+    assert_equal(original, out)
+    return "equal"
+
+
+# ---------------------------------------------------------------------------
+# round trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", sorted(_MESSAGES))
+def test_roundtrip_bitwise(kind):
+    make, assert_equal = _MESSAGES[kind]
+    msg = make()
+    out = decode_frame(msg.to_bytes())
+    assert_equal(msg, out)
+    assert type(out) is type(msg)
+
+
+def test_decode_frame_dispatches_on_magic():
+    assert isinstance(decode_frame(_assignment().to_bytes()), TaskAssignment)
+    assert isinstance(decode_frame(_update_jvp().to_bytes()), ClientUpdate)
+
+
+# ---------------------------------------------------------------------------
+# classification of hand-built failures
+# ---------------------------------------------------------------------------
+
+def test_truncation_detected():
+    frame = _update_delta().to_bytes()
+    for cut in (0, 1, 4, 11, len(frame) // 2, len(frame) - 1):
+        with pytest.raises(WireError) as ei:
+            decode_frame(frame[:cut])
+        assert ei.value.kind in ("truncated", "corrupt", "shape_mismatch")
+
+
+def test_version_mismatch_classified():
+    frame = bytearray(_assignment().to_bytes())
+    assert frame[:4] == MAGIC_ASSIGN
+    frame[3] = ord("9")          # SPA2 -> SPA9: same family, other version
+    with pytest.raises(WireError) as ei:
+        decode_frame(bytes(frame))
+    assert ei.value.kind == "version_mismatch"
+
+
+def test_bad_magic_classified():
+    frame = b"NOPE" + _update_jvp().to_bytes()[4:]
+    with pytest.raises(WireError) as ei:
+        decode_frame(frame)
+    assert ei.value.kind == "bad_magic"
+
+
+def test_crc_catches_payload_bitflip():
+    frame = bytearray(_update_jvp().to_bytes())
+    frame[-10] ^= 0x40           # flip a payload bit, keep length
+    with pytest.raises(WireError) as ei:
+        decode_frame(bytes(frame))
+    assert ei.value.kind == "corrupt"
+
+
+def test_appended_bytes_detected():
+    frame = _update_delta().to_bytes() + b"\x00\x00"
+    with pytest.raises(WireError) as ei:
+        decode_frame(frame)
+    assert ei.value.kind in ("shape_mismatch", "corrupt")
+
+
+def test_cross_magic_confusion_detected():
+    """An update frame forced under the assignment magic must not decode."""
+    frame = bytearray(_update_jvp().to_bytes())
+    frame[:4] = MAGIC_ASSIGN
+    with pytest.raises(WireError):
+        decode_frame(bytes(frame))
+
+
+def test_wire_error_kind_is_closed_set():
+    with pytest.raises(AssertionError):
+        WireError("made_up_kind")
+
+
+# ---------------------------------------------------------------------------
+# fuzz: every mutation detected or bitwise-equal — no silent third outcome
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=120)
+@given(kind=st.sampled_from(sorted(_MESSAGES)),
+       mutation=st.sampled_from(["bitflip", "truncate", "dtype", "grow"]),
+       pos_frac=st.floats(min_value=0.0, max_value=0.999),
+       bit=st.integers(min_value=0, max_value=7),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_fuzzed_mutations_no_silent_outcome(kind, mutation, pos_frac, bit,
+                                            seed):
+    make, assert_equal = _MESSAGES[kind]
+    msg = make()
+    frame = bytearray(msg.to_bytes())
+    rnd = np.random.default_rng(seed)
+    if mutation == "bitflip":
+        pos = int(pos_frac * len(frame))
+        frame[pos] ^= 1 << bit
+    elif mutation == "truncate":
+        frame = frame[: int(pos_frac * len(frame))]
+    elif mutation == "grow":
+        frame = frame + bytes(rnd.integers(0, 256,
+                                           size=1 + int(pos_frac * 16),
+                                           dtype=np.uint8))
+    else:  # dtype: mutate the declared buffer dtype inside the header json
+        for old, new in ((b'"float32"', b'"float64"'),
+                         (b'"int32"', b'"int16"')):
+            i = bytes(frame).find(old)
+            if i >= 0:
+                frame = frame[:i] + new + frame[i + len(old):]
+                break
+    outcome = _check_no_silent_third_outcome(msg, bytes(frame), assert_equal)
+    if mutation in ("truncate", "dtype", "grow"):
+        # these always change the byte stream; CRC/length must catch them
+        assert outcome == "detected"
+
+
+@settings(max_examples=60)
+@given(kind=st.sampled_from(sorted(_MESSAGES)),
+       n_flips=st.integers(min_value=1, max_value=16),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_fuzzed_multi_bitflips_detected(kind, n_flips, seed):
+    """Any nonzero set of bit flips changes bytes -> the CRC must fire."""
+    make, assert_equal = _MESSAGES[kind]
+    msg = make()
+    frame = bytearray(msg.to_bytes())
+    rnd = np.random.default_rng(seed)
+    for _ in range(n_flips):
+        frame[int(rnd.integers(0, len(frame)))] ^= 1 << int(
+            rnd.integers(0, 8))
+    if bytes(frame) == msg.to_bytes():    # flips cancelled out: intact frame
+        assert_equal(msg, decode_frame(bytes(frame)))
+        return
+    outcome = _check_no_silent_third_outcome(msg, bytes(frame), assert_equal)
+    assert outcome == "detected"
