@@ -185,6 +185,67 @@ def check_roofline(doc) -> list:
     return errors
 
 
+_ASYNC_SYNC_ROW = {
+    "deadline_quantile", "utilization", "sim_wall_s",
+    "updates_per_sim_hour", "updates_applied", "updates_discarded",
+}
+
+_ASYNC_ROW = _ASYNC_SYNC_ROW - {"deadline_quantile"} | {
+    "staleness_mean", "staleness_max",
+}
+
+
+def check_async(doc) -> list:
+    """BENCH_async: async-vs-sync wall-clock + utilization artifact. The
+    useful-compute acceptance bar (>= 1.5x vs the baseline sync quantile at
+    10^6 clients) is enforced here so a regression in the staleness/buffer
+    policy fails the artifact check, not just a benchmark eyeball."""
+    errors = []
+    for key in ("schema", "quick", "wall_clock", "utilization"):
+        _require(key in doc, f"BENCH_async: missing top-level {key!r}",
+                 errors)
+    _require(doc.get("schema") == "repro.bench_async/v1",
+             f"BENCH_async: unknown schema {doc.get('schema')!r}", errors)
+    wall = doc.get("wall_clock", {})
+    for key in ("arch", "comm_mode", "sync", "async", "speedup"):
+        _require(key in wall, f"wall_clock: missing {key!r}", errors)
+    for arm, keys in (("sync", ("rounds", "wall_s", "final_loss")),
+                      ("async", ("versions", "wall_s", "final_loss",
+                                 "matched"))):
+        got = wall.get(arm, {})
+        missing = set(keys) - set(got)
+        _require(not missing,
+                 f"wall_clock.{arm}: missing keys {sorted(missing)}", errors)
+    _require(wall.get("async", {}).get("matched") is True,
+             "wall_clock: async arm never matched the sync loss", errors)
+    _require(isinstance(wall.get("speedup"), (int, float))
+             and wall.get("speedup", 0) > 1.0,
+             f"wall_clock: async not faster to matched loss "
+             f"(speedup={wall.get('speedup')!r})", errors)
+    util = doc.get("utilization", {})
+    for key in ("n_clients", "sync", "async", "baseline_quantile",
+                "utilization_ratio"):
+        _require(key in util, f"utilization: missing {key!r}", errors)
+    _require(util.get("n_clients", 0) >= 1_000_000,
+             f"utilization: scale sim below 10^6 clients "
+             f"({util.get('n_clients')!r})", errors)
+    _check_rows(util.get("sync", []), _ASYNC_SYNC_ROW, "utilization.sync",
+                errors)
+    quants = {r.get("deadline_quantile") for r in util.get("sync", [])}
+    _require(util.get("baseline_quantile") in quants,
+             f"utilization: baseline_quantile "
+             f"{util.get('baseline_quantile')!r} has no sync row", errors)
+    arow = util.get("async", {})
+    missing = _ASYNC_ROW - set(arow)
+    _require(not missing,
+             f"utilization.async: missing keys {sorted(missing)}", errors)
+    ratio = util.get("utilization_ratio")
+    _require(isinstance(ratio, (int, float)) and ratio >= 1.5,
+             f"utilization: useful-compute ratio {ratio!r} below the "
+             f"1.5x acceptance bar", errors)
+    return errors
+
+
 # telemetry JSONL run artifacts (repro.obs) — validated by the CI telemetry
 # smoke step rather than tracked in-repo
 _TELEMETRY_REQUIRED = {"ts", "kind", "run_id"}
@@ -257,15 +318,17 @@ def check_analysis(doc) -> list:
 
 def main(kernels_path="BENCH_kernels.json", round_path="BENCH_round.json",
          serve_path="BENCH_serve.json", analysis_path="ANALYSIS.json",
-         roofline_path="BENCH_roofline.json"):
+         roofline_path="BENCH_roofline.json",
+         async_path="BENCH_async.json"):
     errors = []
     paths = (kernels_path, round_path, serve_path, analysis_path,
-             roofline_path)
+             roofline_path, async_path)
     for path, check in ((kernels_path, check_kernels),
                         (round_path, check_round),
                         (serve_path, check_serve),
                         (analysis_path, check_analysis),
-                        (roofline_path, check_roofline)):
+                        (roofline_path, check_roofline),
+                        (async_path, check_async)):
         try:
             errors += check(json.load(open(path)))
         except (OSError, json.JSONDecodeError) as e:

@@ -24,18 +24,31 @@ def main():
     ap.add_argument("--arch", default="roberta-large-lora")
     ap.add_argument("--full-size", action="store_true",
                     help="full 355M config (slow on CPU)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="drive SPRY through the event-driven FedBuff "
+                         "engine (staleness-weighted buffered aggregation "
+                         "over simulated device tiers) instead of "
+                         "round-synchronous cohorts")
+    ap.add_argument("--buffer-size", type=int, default=4)
+    ap.add_argument("--staleness-decay", type=float, default=0.5)
     ap.add_argument("--out", default="experiments/federated_finetune.json")
     args = ap.parse_args()
 
+    if args.async_mode:
+        # async federation is a SPRY-runtime feature; baselines stay sync
+        args.methods = [m for m in args.methods if m == "spry"] or ["spry"]
+
     results = {}
     for method in args.methods:
-        print(f"=== {method} ===")
+        print(f"=== {method}{' (async)' if args.async_mode else ''} ===")
         hist = run_training(
             arch=args.arch, task=args.task, method=method,
             rounds=args.rounds, clients_per_round=8, total_clients=32,
             batch_size=8, dirichlet_alpha=0.1, eval_every=20,
             reduced=not args.full_size, seed=0,
-            local_lr=2e-2, server_lr=5e-2)
+            local_lr=2e-2, server_lr=5e-2,
+            async_mode=args.async_mode, buffer_size=args.buffer_size,
+            staleness_decay=args.staleness_decay)
         results[method] = hist
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

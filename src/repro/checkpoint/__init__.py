@@ -1,3 +1,7 @@
+from repro.checkpoint.async_state import (
+    decode_async_snapshot,
+    encode_async_snapshot,
+)
 from repro.checkpoint.io import CheckpointError, load_pytree, save_pytree
 from repro.checkpoint.manifest import (
     RunManifest,

@@ -2,11 +2,23 @@
 round engine). Import explicitly — ``from repro.fl.runtime import ...`` —
 rather than via ``repro.fl`` (which core.spry imports; keeping the runtime
 out of that __init__ avoids an import cycle)."""
+from repro.fl.runtime.async_engine import (
+    AsyncConfig,
+    AsyncFederationEngine,
+    AsyncRoundReport,
+)
 from repro.fl.runtime.engine import (
     FederationEngine,
     RoundReport,
     WireConfig,
     WireHealth,
+)
+from repro.fl.runtime.events import (
+    EventHeap,
+    UtilizationReport,
+    sample_available,
+    simulate_async_utilization,
+    simulate_sync_utilization,
 )
 from repro.fl.runtime.executor import (
     SerialExecutor,

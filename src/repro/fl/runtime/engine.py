@@ -132,6 +132,59 @@ class RoundReport:
             self.n_validated = self.n_survivors
 
 
+def update_payload_arrays(u: ClientUpdate) -> List[np.ndarray]:
+    """Flat list of a ClientUpdate's payload arrays in canonical order
+    (shared by the sync and async engines' defensive validation)."""
+    arrs = []
+    if u.mode == "delta":
+        for uid in sorted(u.unit_payload or {}):
+            arrs.extend(u.unit_payload[uid])
+        if u.head_payload is not None:
+            arrs.extend(u.head_payload)
+    elif u.jvps is not None:
+        arrs.append(u.jvps)
+    return arrs
+
+
+def poison_update(inj: FaultInjector, u: ClientUpdate, mode: str) -> None:
+    """Client-side numeric poisoning BEFORE framing: the frame's CRC is
+    valid — only defensive payload validation can catch these."""
+    if u.mode == "delta":
+        u.unit_payload = {
+            k: [inj.poison_array(np.asarray(a), mode) for a in v]
+            for k, v in (u.unit_payload or {}).items()}
+        if u.head_payload is not None:
+            u.head_payload = [inj.poison_array(np.asarray(a), mode)
+                              for a in u.head_payload]
+    else:
+        u.jvps = inj.poison_array(np.asarray(u.jvps), mode)
+    u.invalidate_encoding()
+
+
+def validate_updates(accepted: Dict[int, ClientUpdate],
+                     norm_outlier_mult: float) -> set:
+    """Defensive payload validation: reject NaN/Inf outright; with a
+    crowd (>= 4 finite updates) also reject norm outliers beyond
+    ``norm_outlier_mult`` x the median survivor norm."""
+    norms = {}
+    for pos, u in accepted.items():
+        sq, ok = 0.0, True
+        for a in update_payload_arrays(u):
+            a = np.asarray(a, np.float64)
+            if not np.all(np.isfinite(a)):
+                ok = False
+                break
+            sq += float(np.sum(a * a))
+        norms[pos] = math.sqrt(sq) if ok else None
+    valid = {p for p, n in norms.items() if n is not None}
+    if len(valid) >= 4:
+        med = float(np.median([norms[p] for p in valid]))
+        if med > 0.0:
+            valid = {p for p in valid
+                     if norms[p] <= norm_outlier_mult * med}
+    return valid
+
+
 def _ideal_plan(round_idx: int, M: int, n_units: int) -> CohortPlan:
     """Full participation, no over-selection, everyone on time."""
     mask = np.asarray(assignment_matrix(n_units, M, round_idx % M),
@@ -592,51 +645,13 @@ class FederationEngine:
     # -- chaos path -----------------------------------------------------
 
     def _update_arrays(self, u: ClientUpdate):
-        arrs = []
-        if u.mode == "delta":
-            for uid in sorted(u.unit_payload or {}):
-                arrs.extend(u.unit_payload[uid])
-            if u.head_payload is not None:
-                arrs.extend(u.head_payload)
-        elif u.jvps is not None:
-            arrs.append(u.jvps)
-        return arrs
+        return update_payload_arrays(u)
 
     def _poison_update(self, u: ClientUpdate, mode: str) -> None:
-        """Client-side numeric poisoning BEFORE framing: the frame's CRC is
-        valid — only defensive payload validation can catch these."""
-        inj = self.faults
-        if u.mode == "delta":
-            u.unit_payload = {
-                k: [inj.poison_array(np.asarray(a), mode) for a in v]
-                for k, v in (u.unit_payload or {}).items()}
-            if u.head_payload is not None:
-                u.head_payload = [inj.poison_array(np.asarray(a), mode)
-                                  for a in u.head_payload]
-        else:
-            u.jvps = inj.poison_array(np.asarray(u.jvps), mode)
+        poison_update(self.faults, u, mode)
 
     def _validate_updates(self, accepted) -> set:
-        """Defensive payload validation: reject NaN/Inf outright; with a
-        crowd (>= 4 finite updates) also reject norm outliers beyond
-        ``norm_outlier_mult`` x the median survivor norm."""
-        norms = {}
-        for pos, u in accepted.items():
-            sq, ok = 0.0, True
-            for a in self._update_arrays(u):
-                a = np.asarray(a, np.float64)
-                if not np.all(np.isfinite(a)):
-                    ok = False
-                    break
-                sq += float(np.sum(a * a))
-            norms[pos] = math.sqrt(sq) if ok else None
-        valid = {p for p, n in norms.items() if n is not None}
-        if len(valid) >= 4:
-            med = float(np.median([norms[p] for p in valid]))
-            if med > 0.0:
-                valid = {p for p in valid
-                         if norms[p] <= self.norm_outlier_mult * med}
-        return valid
+        return validate_updates(accepted, self.norm_outlier_mult)
 
     def _run_chaos(self, state, seed_ids, mask_rows, keep, batch, plan, C,
                    quorum_n):

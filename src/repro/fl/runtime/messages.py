@@ -34,6 +34,18 @@ is asserted in tests/test_messages.py. Scalar payloads are quantized on the
 wire with a configurable dtype (fp32 lossless / bf16 / fp16); fp32 framing
 round-trips bit-exactly, which is what keeps the runtime's ideal-network
 round bit-identical to the in-process round step.
+
+Frames are encoded ONCE per message: ``to_bytes()`` memoizes the sealed
+frame so ``byte_size()`` and the send path share a single serialization
+(``tests/test_messages.py`` asserts one ``_frame`` call per message), and
+``from_bytes`` seeds the cache with the received bytes (CRC-verified to be
+exactly what was sealed). Mutating a message after encoding requires
+``invalidate_encoding()`` — the engine's poison path does this.
+
+``ClientUpdate.base_version`` is the async engine's staleness round tag:
+the server model version the update was computed against. It is ``None``
+on synchronous frames and only serialized when set, so sync frames are
+byte-identical to wire schema v2 as shipped.
 """
 from __future__ import annotations
 
@@ -230,13 +242,15 @@ class TaskAssignment:
     n_units: int                 # U — so the mask row can be rebuilt
     unit_ids: np.ndarray         # (n_assigned,) int32
     hparams: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    _encoded: Optional[bytes] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def mask_row(self) -> np.ndarray:
         row = np.zeros((self.n_units,), np.float32)
         row[np.asarray(self.unit_ids, np.int64)] = 1.0
         return row
 
-    def to_bytes(self) -> bytes:
+    def _encode(self) -> bytes:
         meta, raw = _encode_buffers(
             [np.asarray(self.unit_ids, np.int32)])
         header = {
@@ -251,21 +265,34 @@ class TaskAssignment:
         }
         return _frame(MAGIC_ASSIGN, header, raw)
 
+    def to_bytes(self) -> bytes:
+        if self._encoded is None:
+            self._encoded = self._encode()
+        return self._encoded
+
+    def invalidate_encoding(self) -> None:
+        """Drop the memoized frame after mutating fields in place."""
+        self._encoded = None
+
     @classmethod
     def from_bytes(cls, data: bytes) -> "TaskAssignment":
         header, raw, _ = _unframe(MAGIC_ASSIGN, data)
         try:
             (unit_ids,) = _decode_buffers(header["buffers"], raw)
-            return cls(round_idx=int(header["round_idx"]),
-                       client_id=int(header["client_id"]),
-                       seed_id=int(header["seed_id"]),
-                       cohort_size=int(header["cohort_size"]),
-                       seed=int(header["seed"]),
-                       n_units=int(header["n_units"]),
-                       unit_ids=unit_ids.astype(np.int32),
-                       hparams=header["hparams"])
+            out = cls(round_idx=int(header["round_idx"]),
+                      client_id=int(header["client_id"]),
+                      seed_id=int(header["seed_id"]),
+                      cohort_size=int(header["cohort_size"]),
+                      seed=int(header["seed"]),
+                      n_units=int(header["n_units"]),
+                      unit_ids=unit_ids.astype(np.int32),
+                      hparams=header["hparams"])
         except (KeyError, TypeError, ValueError) as e:
             raise WireError("shape_mismatch", f"bad assignment header: {e}")
+        # CRC guarantees these bytes are exactly what was sealed, so the
+        # received frame IS a faithful encoding — seed the cache with it
+        out._encoded = bytes(data)
+        return out
 
     def byte_size(self) -> int:
         return len(self.to_bytes())
@@ -284,6 +311,10 @@ class ClientUpdate:
     ``head_payload`` carries the always-trained personalisation head.
     mode='jvp' (per-iteration): ``jvps`` carries the K scalars; the seed ref
     (round_idx, seed_id) is all the server needs to rebuild the gradient.
+
+    ``base_version`` is the async staleness tag: the server model version
+    this update was computed against (None on synchronous frames; the
+    header field is only written when set, keeping sync frames byte-stable).
     """
     round_idx: int
     client_id: int
@@ -294,6 +325,9 @@ class ClientUpdate:
     head_payload: Optional[list] = None             # [np arrays] or None
     jvps: Optional[np.ndarray] = None               # (K,) in wire dtype
     loss: float = float("nan")                      # telemetry, not payload
+    base_version: Optional[int] = None              # async round tag
+    _encoded: Optional[bytes] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     # -- construction from in-process trees ---------------------------------
 
@@ -378,7 +412,7 @@ class ClientUpdate:
             bufs.append(np.asarray(self.jvps))
         return bufs, layout
 
-    def to_bytes(self) -> bytes:
+    def _encode(self) -> bytes:
         bufs, layout = self._payload_buffers()
         meta, raw = _encode_buffers(bufs)
         header = {
@@ -390,6 +424,8 @@ class ClientUpdate:
             "layout": layout,
             "buffers": meta,
         }
+        if self.base_version is not None:
+            header["base_version"] = int(self.base_version)
         # loss telemetry rides as a FIXED 4-byte trailer (a json float field
         # would make the frame size value-dependent, breaking the shape-only
         # byte accounting the engine's streamed estimate relies on); the CRC
@@ -397,16 +433,28 @@ class ClientUpdate:
         trailer = np.float32(self.loss).tobytes()
         return _frame(MAGIC_UPDATE, header, raw, trailer)
 
+    def to_bytes(self) -> bytes:
+        if self._encoded is None:
+            self._encoded = self._encode()
+        return self._encoded
+
+    def invalidate_encoding(self) -> None:
+        """Drop the memoized frame after mutating fields in place (the
+        engine's poison path mutates payloads post-construction)."""
+        self._encoded = None
+
     @classmethod
     def from_bytes(cls, data: bytes) -> "ClientUpdate":
         header, raw, trailer = _unframe(MAGIC_UPDATE, data, trailer_len=4)
         loss = float(np.frombuffer(trailer, np.float32)[0])
         try:
             bufs = _decode_buffers(header["buffers"], raw)
+            bv = header.get("base_version")
             out = cls(round_idx=int(header["round_idx"]),
                       client_id=int(header["client_id"]),
                       seed_id=int(header["seed_id"]), mode=header["mode"],
-                      wire=header["wire"], loss=loss)
+                      wire=header["wire"], loss=loss,
+                      base_version=None if bv is None else int(bv))
             layout = header["layout"]
         except (KeyError, TypeError, ValueError) as e:
             raise WireError("shape_mismatch", f"bad update header: {e}")
@@ -430,6 +478,8 @@ class ClientUpdate:
                 raise WireError("shape_mismatch",
                                 f"jvp update carries {len(bufs)} buffers")
             out.jvps = bufs[0]
+        # CRC-verified: the received bytes are exactly the sealed frame
+        out._encoded = bytes(data)
         return out
 
     # -- accounting ---------------------------------------------------------

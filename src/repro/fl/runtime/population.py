@@ -132,6 +132,29 @@ class ClientPopulation:
             mean=0.0, sigma=0.5)
         return tier.base_latency * jitter
 
+    # two-part latency model for the event-driven async simulator: local
+    # compute time (tier flops scale + jitter) and uplink transit time are
+    # drawn SEPARATELY per (client, task) so the async engine can account
+    # useful-vs-wasted client compute. Seeded per (client, task_idx) —
+    # replay after a resume redraws identical values. The sync ``latency``
+    # stream above is untouched (different entropy tags).
+
+    def compute_seconds(self, client_id: int, task_idx: int,
+                        work_s: float = 60.0) -> float:
+        """Seconds of local compute for one dispatch: ``work_s`` is the
+        nominal local-epoch wall time on a flops_scale=1.0 device."""
+        tier = self.device_tier(client_id)
+        jitter = _rng(self.seed, 0xC0F0, client_id, task_idx).lognormal(
+            mean=0.0, sigma=0.35)
+        return work_s / tier.flops_scale * jitter
+
+    def uplink_seconds(self, client_id: int, task_idx: int) -> float:
+        """Seconds in flight for one dispatch's uplink frame."""
+        tier = self.device_tier(client_id)
+        jitter = _rng(self.seed, 0x0971, client_id, task_idx).lognormal(
+            mean=0.0, sigma=0.5)
+        return tier.base_latency * jitter
+
     def availability_rate(self, client_id: int, round_idx: int) -> float:
         phase = _rng(self.seed, 0xFA5E, client_id).random()
         wave = math.sin(2 * math.pi * (round_idx / self.avail_period + phase))

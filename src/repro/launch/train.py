@@ -111,10 +111,16 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                  runtime_microbatch=None, over_select=1.0, deadline=None,
                  dropout_rate=0.0, wire_dtype="fp32", wire_simulate=False,
                  telemetry=None, faults=None, quorum=None,
-                 checkpoint_dir=None, checkpoint_every=1, resume=False):
+                 checkpoint_dir=None, checkpoint_every=1, resume=False,
+                 async_mode=False, buffer_size=4, staleness_decay=0.5,
+                 async_concurrency=None, max_staleness=None):
     tel = telemetry if telemetry is not None else NULL
+    if async_mode:
+        # the async engine IS a runtime path (population + wire frames)
+        runtime = True
     # fault injection rides the simulated wire (frames must exist to be
     # corrupted), so --faults implies --wire-simulate on the runtime path
+    # (the async engine always frames its uplink)
     from repro.fl.runtime.faults import FaultConfig
     if isinstance(faults, str):
         faults = FaultConfig.parse(faults, seed=seed)
@@ -182,10 +188,12 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
     if runtime:
         # federation-runtime path: logical client population with lazy
         # Dirichlet shards + cohort scheduler + message-level round engine
+        # (or, with --async, the event-driven FedBuff engine)
         from repro.core.assignment import enumerate_units
         from repro.fl.runtime import (
-            ClientPopulation, CohortScheduler, FederationEngine,
-            SerialExecutor, ShardedExecutor, WireConfig)
+            AsyncConfig, AsyncFederationEngine, ClientPopulation,
+            CohortScheduler, FederationEngine, SerialExecutor,
+            ShardedExecutor, WireConfig)
         if method not in ("spry", "spry_periter"):
             raise ValueError(f"--runtime supports spry/spry_periter, "
                              f"not {method!r}")
@@ -193,17 +201,29 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
         population = ClientPopulation(
             x_tr, y_tr, n_clients=total_clients, alpha=dirichlet_alpha,
             seed=seed)
-        scheduler = CohortScheduler(
-            population, clients_per_round, over_select=over_select,
-            deadline=deadline, dropout_rate=dropout_rate, seed=seed)
-        executor = (ShardedExecutor(microbatch=runtime_microbatch)
-                    if runtime_executor == "sharded"
-                    else SerialExecutor(microbatch=runtime_microbatch))
-        engine = FederationEngine(
-            cfg, sc, task="cls", comm_mode=comm_mode, executor=executor,
-            wire=WireConfig(dtype=wire_dtype, simulate=wire_simulate),
-            telemetry=tel, faults=faults, quorum=quorum)
-        n_units = enumerate_units(state.peft).n_units
+        if async_mode:
+            engine = AsyncFederationEngine(
+                cfg, sc, population, task="cls", comm_mode=comm_mode,
+                async_cfg=AsyncConfig(
+                    buffer_size=buffer_size,
+                    staleness_decay=staleness_decay,
+                    concurrency=(async_concurrency if async_concurrency
+                                 else max(clients_per_round, buffer_size)),
+                    max_staleness=max_staleness, seed=seed),
+                wire=WireConfig(dtype=wire_dtype, simulate=True),
+                telemetry=tel, faults=faults)
+        else:
+            scheduler = CohortScheduler(
+                population, clients_per_round, over_select=over_select,
+                deadline=deadline, dropout_rate=dropout_rate, seed=seed)
+            executor = (ShardedExecutor(microbatch=runtime_microbatch)
+                        if runtime_executor == "sharded"
+                        else SerialExecutor(microbatch=runtime_microbatch))
+            engine = FederationEngine(
+                cfg, sc, task="cls", comm_mode=comm_mode, executor=executor,
+                wire=WireConfig(dtype=wire_dtype, simulate=wire_simulate),
+                telemetry=tel, faults=faults, quorum=quorum)
+            n_units = enumerate_units(state.peft).n_units
         client_data = [ClientDataset(x_tr, y_tr, population.shard(c))
                        for c in range(min(total_clients, 8))]
     else:
@@ -251,6 +271,16 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
         bytes_down_total = int(man.extra.get("bytes_down_total", 0))
         if man.rng_state is not None:
             rng.bit_generator.state = man.rng_state
+        if async_mode:
+            # async determinism rides on the virtual-time snapshot: the
+            # event heap (in-flight frames byte-for-byte), the staleness
+            # buffer, the clock, and the dispatch counter
+            from repro.checkpoint import decode_async_snapshot
+            if "async" not in man.extra:
+                raise ValueError("--async --resume needs a checkpoint "
+                                 "written by an async run (no snapshot in "
+                                 "the manifest)")
+            engine.restore(decode_async_snapshot(man.extra["async"]))
         log(f"[{method}] resumed from {checkpoint_dir} at round "
             f"{start_round}")
 
@@ -259,12 +289,15 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
             return
         if (r + 1) % max(1, checkpoint_every) != 0 and r != rounds - 1:
             return
-        from repro.checkpoint import save_checkpoint
+        from repro.checkpoint import encode_async_snapshot, save_checkpoint
+        extra = {"bytes_up_total": bytes_up_total,
+                 "bytes_down_total": bytes_down_total}
+        if async_mode:
+            extra["async"] = encode_async_snapshot(engine.snapshot())
         save_checkpoint(
             checkpoint_dir, state, round_idx=r + 1, algo_seed=seed,
             rng_state=rng.bit_generator.state, history=history,
-            extra={"bytes_up_total": bytes_up_total,
-                   "bytes_down_total": bytes_down_total})
+            extra=extra)
 
     probe = MemoryProbe(tel) if tel.enabled else None
     t0 = time.time()
@@ -278,7 +311,13 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
         return history
     for r in range(start_round, rounds):
         t_round = time.perf_counter()
-        if engine is not None:
+        if engine is not None and async_mode:
+            state, metrics, report = engine.run_version(state, batch_size)
+            # async reports carry ENGINE-LIFETIME byte totals (restored
+            # across resume by the snapshot) — assign, don't accumulate
+            bytes_up_total = report.bytes_up
+            bytes_down_total = report.bytes_down
+        elif engine is not None:
             plan = scheduler.plan_round(r, n_units, sc.seed)
             bx, by = scheduler.round_batch(plan, batch_size)
             state, metrics, report = engine.run_round(
@@ -323,7 +362,14 @@ def run_training(arch="roberta-large-lora", task="sst2", method="spry",
                 entry["route"] = ("fused" if float(metrics["fused_route"])
                                   else "standard")
             extra = ""
-            if engine is not None:
+            if engine is not None and async_mode:
+                entry["bytes_up"] = bytes_up_total
+                entry["bytes_down"] = bytes_down_total
+                extra = (f" up={bytes_up_total/1e6:.2f}MB "
+                         f"sim_t={report.sim_time_s:.0f}s "
+                         f"staleness={np.mean(report.staleness):.1f} "
+                         f"util={report.utilization:.2f}")
+            elif engine is not None:
                 entry["bytes_up"] = bytes_up_total
                 entry["bytes_down"] = bytes_down_total
                 extra = (f" up={bytes_up_total/1e6:.2f}MB "
@@ -382,6 +428,22 @@ def main():
     ap.add_argument("--runtime-microbatch", type=int, default=None,
                     help="clients per executor vmap chunk (None = whole "
                          "cohort; finite = streaming aggregation)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="event-driven FedBuff engine: clients stream "
+                         "updates as they finish; the server aggregates "
+                         "the first --buffer-size validated arrivals with "
+                         "staleness-weighted combination (implies "
+                         "--runtime)")
+    ap.add_argument("--buffer-size", type=int, default=4,
+                    help="async: validated arrivals per server step (B)")
+    ap.add_argument("--staleness-decay", type=float, default=0.5,
+                    help="async: a in w = 1/(1+s)^a (0 = ignore staleness)")
+    ap.add_argument("--async-concurrency", type=int, default=None,
+                    help="async: clients kept in flight (default: "
+                         "max(--clients, --buffer-size))")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="async: drop updates staler than this many "
+                         "versions (None = never)")
     ap.add_argument("--over-select", type=float, default=1.0)
     ap.add_argument("--deadline", type=float, default=None,
                     help="straggler cutoff seconds (None = 90%% quantile)")
@@ -441,7 +503,12 @@ def main():
                         quorum=args.quorum,
                         checkpoint_dir=args.checkpoint_dir,
                         checkpoint_every=args.checkpoint_every,
-                        resume=args.resume)
+                        resume=args.resume,
+                        async_mode=args.async_mode,
+                        buffer_size=args.buffer_size,
+                        staleness_decay=args.staleness_decay,
+                        async_concurrency=args.async_concurrency,
+                        max_staleness=args.max_staleness)
     if tel.enabled:
         if args.trace_out:
             tel.export_chrome_trace(args.trace_out)

@@ -6,6 +6,9 @@ Detects what the run contained and renders the matching sections:
 
 * ``round`` events  -> federation/training round table (loss, bytes
   up/down, survivors/cohort, stragglers, estimator route)
+* ``async_round`` events -> async federation table (loss, staleness,
+  buffer occupancy, useful-vs-discarded compute, utilization) plus the
+  staleness histogram from the final ``metrics`` snapshot
 * ``request`` events -> serving table (TTFT, latency, tok/s per request)
   plus aggregate percentiles and the adapter-cache hit rate from the
   final ``metrics`` snapshot
@@ -86,6 +89,38 @@ def round_summary(events: List[Dict]) -> Optional[str]:
     return "\n".join(lines)
 
 
+def async_summary(events: List[Dict]) -> Optional[str]:
+    rounds = [e for e in events if e.get("kind") == "async_round"]
+    if not rounds:
+        return None
+    rows = [[e.get("version"), e.get("sim_time_s"), e.get("loss"),
+             e.get("staleness_mean"), e.get("buffer_occupancy"),
+             e.get("in_flight"), e.get("bytes_up"),
+             e.get("utilization")] for e in rounds]
+    header = ["version", "sim_t", "loss", "stale_mean", "buffer",
+              "in_flight", "bytes_up", "util"]
+    last = rounds[-1]
+    lines = [f"versions: {len(rounds)}  "
+             f"sim_wall={_fmt(last.get('sim_time_s'))}s  "
+             f"useful_compute={_fmt(last.get('useful_compute_s'))}s  "
+             f"discarded={_fmt(last.get('discarded_compute_s'))}s  "
+             f"utilization={_fmt(last.get('utilization'))}",
+             _table(header, rows)]
+    m = _last_metrics(events)
+    h = m.get("histograms", {}).get("fl.async.staleness")
+    if h and h.get("count"):
+        lines.append(f"staleness: mean={_fmt(h['mean'])} "
+                     f"p50={_fmt(h['p50'])} p95={_fmt(h['p95'])} "
+                     f"max={_fmt(h.get('max'))}")
+    counters = m.get("counters", {})
+    used = counters.get("fl.async.updates_used")
+    if used is not None:
+        lines.append(f"updates: {int(used)} used / "
+                     f"{int(counters.get('fl.async.updates_discarded', 0))} "
+                     f"discarded")
+    return "\n\n".join(lines)
+
+
 def serving_summary(events: List[Dict]) -> Optional[str]:
     reqs = [e for e in events if e.get("kind") == "request"]
     if not reqs:
@@ -145,6 +180,7 @@ def render(path: str) -> str:
         sections[0] += "\n" + "  ".join(f"{k}={v}"
                                         for k, v in sorted(fields.items()))
     for title, body in (("rounds", round_summary(events)),
+                        ("async federation", async_summary(events)),
                         ("serving", serving_summary(events)),
                         ("memory", memory_summary(events))):
         if body:

@@ -1,0 +1,265 @@
+"""Async (FedBuff-style) federation engine: event-clock determinism,
+staleness-weighted buffering, kill-and-resume bitwise replay under chaos,
+and the deterministic event simulator it is driven by."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    decode_async_snapshot,
+    encode_async_snapshot,
+    tree_content_hash,
+)
+from repro.configs import SpryConfig, get_config, reduce_config
+from repro.core import init_state
+from repro.fl.runtime import (
+    AsyncConfig,
+    AsyncFederationEngine,
+    ClientPopulation,
+    EventHeap,
+    FaultConfig,
+    FaultInjector,
+    WireConfig,
+    sample_available,
+    simulate_async_utilization,
+    simulate_sync_utilization,
+)
+from repro.models import get_model
+from repro.peft import init_peft
+
+ARCH = "roberta-large-lora"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config(ARCH))
+    sc = SpryConfig(n_clients_per_round=4, local_iters=1, local_lr=1e-2,
+                    server_lr=1e-2, k_perturbations=2)
+    key = jax.random.PRNGKey(0)
+    model = get_model(cfg)
+    base = model.init_base(cfg, key)
+    peft = init_peft(cfg, key, sc)
+    state = init_state(base, peft)
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, cfg.vocab, size=(256, 16), dtype=np.int64)
+    y = rng.integers(0, cfg.n_classes, size=(256,), dtype=np.int64)
+    return cfg, sc, state, x, y
+
+
+def _engine(setup, mode="per_epoch", faults=None, **overrides):
+    cfg, sc, _, x, y = setup
+    pop = ClientPopulation(x, y, n_clients=1000, seed=7)
+    kw = dict(buffer_size=2, staleness_decay=0.5, concurrency=4, seed=11)
+    kw.update(overrides)
+    inj = FaultInjector(faults) if faults is not None else None
+    return AsyncFederationEngine(cfg, sc, pop, task="cls", comm_mode=mode,
+                                 async_cfg=AsyncConfig(**kw),
+                                 wire=WireConfig(simulate=True), faults=inj)
+
+
+_CHAOS = FaultConfig(crash_rate=0.1, loss_rate=0.1, corrupt_rate=0.05,
+                     nan_rate=0.05, blowup_rate=0.05, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# determinism & buffer semantics
+# ---------------------------------------------------------------------------
+
+def test_async_replay_is_bitwise(setup):
+    """Two fresh engines over the same population produce bit-identical
+    model states, metrics, and virtual clocks."""
+    _, _, state, _, _ = setup
+    runs = []
+    for _ in range(2):
+        eng = _engine(setup)
+        s, losses, clocks = state, [], []
+        for _ in range(3):
+            s, m, rep = eng.run_version(s, batch_size=2)
+            losses.append(float(m["loss"]))
+            clocks.append(rep.sim_time_s)
+        runs.append((tree_content_hash(s.peft), losses, clocks))
+    assert runs[0] == runs[1]
+
+
+def test_async_staleness_weighting_and_late_arrivals(setup):
+    """Late round-r updates land in a later buffer with staleness > 0, and
+    the staleness histogram reaches the report."""
+    _, _, state, _, _ = setup
+    eng = _engine(setup)
+    s, stale = state, []
+    for _ in range(4):
+        s, _, rep = eng.run_version(s, batch_size=2)
+        stale.extend(rep.staleness)
+        assert rep.n_aggregated == 2          # buffer_size arrivals each
+        assert rep.in_flight >= 0
+    assert any(st > 0 for st in stale)        # some update aggregated late
+    assert all(st >= 0 for st in stale)
+    assert int(s.round_idx) == 4 == eng.version
+
+
+def test_async_max_staleness_discards(setup):
+    """max_staleness=0 forces every stale buffered update to be dropped and
+    accounted as discarded compute."""
+    _, _, state, _, _ = setup
+    eng = _engine(setup, max_staleness=0)
+    s = state
+    for _ in range(4):
+        s, _, rep = eng.run_version(s, batch_size=2)
+    assert all(st == 0 for st in rep.staleness)
+    strict = rep.discarded_compute_s
+    loose_eng = _engine(setup)
+    s2 = state
+    for _ in range(4):
+        s2, _, rep2 = loose_eng.run_version(s2, batch_size=2)
+    assert strict > rep2.discarded_compute_s  # strictness wasted compute
+
+
+def test_async_fresh_buffer_reduces_to_unit_average(setup):
+    """staleness_decay=0 weights everything equally — an all-fresh buffer
+    aggregation must agree with decay>0 (weights only differ when stale)."""
+    _, _, state, _, _ = setup
+    a = _engine(setup, staleness_decay=0.0)
+    b = _engine(setup, staleness_decay=0.9)
+    sa, _, ra = a.run_version(state, batch_size=2)
+    sb, _, rb = b.run_version(state, batch_size=2)
+    # first version: nothing can be stale yet in either engine
+    assert ra.staleness == rb.staleness == [0, 0]
+    assert tree_content_hash(sa.peft) == tree_content_hash(sb.peft)
+
+
+def test_async_version_mismatch_raises(setup):
+    """A fresh engine adopts the state's round (resume-from-sync is legal),
+    but an engine mid-run must reject a state from a different version."""
+    _, _, state, _, _ = setup
+    eng = _engine(setup)
+    eng.run_version(state, batch_size=2)      # engine now at version 1
+    with pytest.raises(ValueError):
+        eng.run_version(state, batch_size=2)  # stale round-0 state again
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume (crash-safe replay) under chaos
+# ---------------------------------------------------------------------------
+
+def test_async_kill_and_resume_bitwise_under_chaos(setup):
+    """Snapshot mid-run (through JSON, as the manifest stores it), restore
+    into a FRESH engine, and the continuation is bit-identical to an
+    uninterrupted run — with the full fault schedule active."""
+    _, _, state, _, _ = setup
+    ref = _engine(setup, faults=_CHAOS)
+    s, ref_losses = state, []
+    for _ in range(4):
+        s, m, _ = ref.run_version(s, batch_size=2)
+        ref_losses.append(float(m["loss"]))
+    ref_hash = tree_content_hash(s.peft)
+
+    a = _engine(setup, faults=_CHAOS)
+    s2 = state
+    for _ in range(2):
+        s2, _, _ = a.run_version(s2, batch_size=2)
+    doc = json.loads(json.dumps(encode_async_snapshot(a.snapshot())))
+    b = _engine(setup, faults=_CHAOS)
+    b.restore(decode_async_snapshot(doc))
+    losses = []
+    for _ in range(2):
+        s2, m, _ = b.run_version(s2, batch_size=2)
+        losses.append(float(m["loss"]))
+    assert tree_content_hash(s2.peft) == ref_hash
+    assert losses == ref_losses[2:]
+
+
+@pytest.mark.slow
+def test_async_kill_and_resume_bitwise_per_iteration(setup):
+    _, _, state, _, _ = setup
+    ref = _engine(setup, mode="per_iteration", faults=_CHAOS)
+    s, ref_losses = state, []
+    for _ in range(3):
+        s, m, _ = ref.run_version(s, batch_size=2)
+        ref_losses.append(float(m["loss"]))
+    ref_hash = tree_content_hash(s.peft)
+
+    a = _engine(setup, mode="per_iteration", faults=_CHAOS)
+    s2 = state
+    s2, _, _ = a.run_version(s2, batch_size=2)
+    doc = json.loads(json.dumps(encode_async_snapshot(a.snapshot())))
+    b = _engine(setup, mode="per_iteration", faults=_CHAOS)
+    b.restore(decode_async_snapshot(doc))
+    losses = []
+    for _ in range(2):
+        s2, m, _ = b.run_version(s2, batch_size=2)
+        losses.append(float(m["loss"]))
+    assert tree_content_hash(s2.peft) == ref_hash
+    assert losses == ref_losses[1:]
+
+
+# ---------------------------------------------------------------------------
+# event heap & simulators
+# ---------------------------------------------------------------------------
+
+def test_event_heap_snapshot_restores_ordering():
+    h = EventHeap()
+    h.push(5.0, {"id": "late"})
+    h.push(1.0, {"id": "early"})
+    h.push(1.0, {"id": "early-tie"})   # FIFO tie-break via seq
+    snap = h.snapshot()
+    h2 = EventHeap.restore(json.loads(json.dumps(snap)))
+    order = [h2.pop()[2]["id"] for _ in range(3)]
+    assert order == ["early", "early-tie", "late"]
+    h2.push(0.5, {"id": "new"})        # next_seq survives the round-trip
+    t, seq, p = h2.pop()
+    assert p["id"] == "new" and seq == 3
+
+
+def test_sample_available_deterministic():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 100, size=(64, 16), dtype=np.int64)
+    y = rng.integers(0, 4, size=(64,), dtype=np.int64)
+    pop = ClientPopulation(x, y, n_clients=100_000, seed=7)
+    picks = [sample_available(pop, tick=3, draw=d, seed=5) for d in range(8)]
+    again = [sample_available(pop, tick=3, draw=d, seed=5) for d in range(8)]
+    assert picks == again
+    assert all(0 <= c < pop.n_clients for c in picks)
+
+
+def test_async_sim_beats_sync_utilization_small():
+    """Fast-gate scale check at 10k clients: the async policy wastes less
+    of the fleet's compute than deadline-cut sync."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 100, size=(128, 16), dtype=np.int64)
+    y = rng.integers(0, 4, size=(128,), dtype=np.int64)
+    pop = ClientPopulation(x, y, n_clients=10_000, seed=7)
+    sync = simulate_sync_utilization(pop, cohort=16, rounds=8,
+                                     deadline_quantile=0.75,
+                                     dropout_rate=0.1, seed=5)
+    asy = simulate_async_utilization(pop, concurrency=16, buffer_size=4,
+                                     server_steps=32, dropout_rate=0.1,
+                                     seed=5)
+    assert 0.0 < sync.utilization < 1.0
+    assert asy.utilization > sync.utilization
+    assert asy.updates_applied == 32 * 4
+    # replays are bitwise: same seeds, same report
+    again = simulate_async_utilization(pop, concurrency=16, buffer_size=4,
+                                       server_steps=32, dropout_rate=0.1,
+                                       seed=5)
+    assert again.to_doc() == asy.to_doc()
+
+
+@pytest.mark.slow
+def test_async_sim_million_client_sweep():
+    """The full 10^6-client sweep behind BENCH_async.json's acceptance bar:
+    async must clear 1.5x useful-compute vs the q0.75 sync baseline."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 100, size=(256, 16), dtype=np.int64)
+    y = rng.integers(0, 4, size=(256,), dtype=np.int64)
+    pop = ClientPopulation(x, y, n_clients=1_000_000, seed=7)
+    sync = simulate_sync_utilization(pop, cohort=64, rounds=40,
+                                     deadline_quantile=0.75,
+                                     dropout_rate=0.1, seed=5)
+    asy = simulate_async_utilization(pop, concurrency=64, buffer_size=16,
+                                     server_steps=160, dropout_rate=0.1,
+                                     seed=5)
+    assert asy.utilization / sync.utilization >= 1.5
+    assert asy.staleness_mean > 0.0

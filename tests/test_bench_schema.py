@@ -6,6 +6,7 @@ import pathlib
 
 from benchmarks.check_schemas import (
     check_analysis,
+    check_async,
     check_kernels,
     check_roofline,
     check_round,
@@ -57,6 +58,35 @@ def test_checked_in_analysis_conforms():
     assert doc["summary"]["warnings"] == 0
     # and every kernel in the residency table fits its budget
     assert all(row["ok"] for row in doc["vmem_kernels"])
+
+
+def test_checked_in_bench_async_conforms():
+    doc = json.load(open(REPO / "BENCH_async.json"))
+    assert check_async(doc) == []
+    # acceptance: >= 1.5x useful-compute utilization at 10^6 clients...
+    util = doc["utilization"]
+    assert util["n_clients"] >= 1_000_000
+    assert util["utilization_ratio"] >= 1.5
+    # ...and async reaches the sync run's loss in less simulated wall time
+    assert doc["wall_clock"]["async"]["matched"]
+    assert doc["wall_clock"]["speedup"] > 1.0
+    # the sweep reports the stricter deadline quantiles transparently
+    assert {r["deadline_quantile"] for r in util["sync"]} >= {0.5, 0.75, 0.9}
+
+
+def test_async_checker_rejects_broken_docs():
+    doc = json.load(open(REPO / "BENCH_async.json"))
+    doc["utilization"]["utilization_ratio"] = 1.2
+    assert check_async(doc)
+    doc2 = json.load(open(REPO / "BENCH_async.json"))
+    doc2["wall_clock"]["async"]["matched"] = False
+    assert check_async(doc2)
+    doc3 = json.load(open(REPO / "BENCH_async.json"))
+    doc3["utilization"]["n_clients"] = 10_000
+    assert check_async(doc3)
+    doc4 = json.load(open(REPO / "BENCH_async.json"))
+    doc4["utilization"]["async"].pop("staleness_mean")
+    assert check_async(doc4)
 
 
 def test_analysis_checker_rejects_broken_docs():

@@ -186,3 +186,88 @@ def test_engine_uplink_accounting_matches_messages(peft_setup):
     _, _, rep_sim = sim.run_round(state, plan, batch)
     _, _, rep_est = est.run_round(state, plan, batch)
     assert rep_sim.bytes_up == rep_est.bytes_up > 0
+
+
+# ---------------------------------------------------------------------------
+# encode-once caching (ISSUE 10 satellite): byte_size()/to_bytes() must not
+# re-serialize; mutation goes through invalidate_encoding()
+# ---------------------------------------------------------------------------
+
+def _count_frames(monkeypatch):
+    """Count calls to the low-level framer (one call == one serialization)."""
+    from repro.fl.runtime import messages as msg
+    calls = {"n": 0}
+    real = msg._frame
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(msg, "_frame", counting)
+    return calls
+
+
+def test_update_encodes_exactly_once(monkeypatch):
+    calls = _count_frames(monkeypatch)
+    jvps = np.array([0.5, -1.0], np.float32)
+    u = ClientUpdate.from_jvps(jvps, round_idx=0, client_id=1, seed_id=0,
+                               wire="fp32", loss=0.1)
+    n = u.byte_size()
+    assert calls["n"] == 1
+    assert u.byte_size() == n          # cached: no second encode
+    frame = u.to_bytes()               # same bytes, same single encode
+    assert calls["n"] == 1
+    assert len(frame) == n
+    assert u.to_bytes() is frame       # identity: the send path reuses it
+
+
+def test_assignment_encodes_exactly_once(monkeypatch):
+    calls = _count_frames(monkeypatch)
+    a = TaskAssignment(round_idx=1, client_id=7, seed_id=0, cohort_size=4,
+                       seed=3, n_units=4, unit_ids=np.array([0], np.int32))
+    a.byte_size(), a.byte_size(), a.to_bytes()
+    assert calls["n"] == 1
+
+
+def test_from_bytes_seeds_cache_with_received_frame():
+    """Decode -> re-encode must reproduce the received bytes verbatim (the
+    async snapshot stores in-flight frames through this path)."""
+    jvps = np.array([1.25, -2.5, 3.0], np.float32)
+    u = ClientUpdate.from_jvps(jvps, round_idx=2, client_id=3, seed_id=1,
+                               wire="bf16", loss=0.7)
+    u.base_version = 5
+    frame = u.to_bytes()
+    u2 = ClientUpdate.from_bytes(frame)
+    assert u2.base_version == 5
+    assert u2.to_bytes() == frame
+
+
+def test_invalidate_encoding_reencodes(monkeypatch):
+    calls = _count_frames(monkeypatch)
+    jvps = np.array([0.5], np.float32)
+    u = ClientUpdate.from_jvps(jvps, round_idx=0, client_id=1, seed_id=0,
+                               wire="fp32", loss=0.1)
+    before = u.to_bytes()
+    assert calls["n"] == 1
+    u.jvps = np.array([9.0], np.float32)
+    u.invalidate_encoding()
+    after = u.to_bytes()
+    assert calls["n"] == 2
+    assert after != before
+    np.testing.assert_array_equal(
+        ClientUpdate.from_bytes(after).jvps, [9.0])
+
+
+def test_base_version_absent_keeps_sync_frames_byte_identical():
+    """Sync frames never carry the staleness tag — adding the async field
+    must not change a single byte of the existing wire format."""
+    jvps = np.array([0.5, 1.5], np.float32)
+    mk = lambda: ClientUpdate.from_jvps(jvps, round_idx=3, client_id=2,
+                                        seed_id=0, wire="fp32", loss=0.2)
+    u, v = mk(), mk()
+    v.base_version = 0
+    v.invalidate_encoding()
+    assert ClientUpdate.from_bytes(u.to_bytes()).base_version is None
+    assert u.to_bytes() != v.to_bytes()
+    w = mk()
+    assert u.to_bytes() == w.to_bytes()

@@ -421,3 +421,88 @@ def test_engine_scheduled_round_end_to_end():
         assert report.n_devices == 8
         assert report.agg_bytes_streaming < report.agg_bytes_stacked
     assert int(state.round_idx) == 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler edge cases (ISSUE 10 satellite): diurnal wraparound, empty
+# availability windows, pool exhaustion during quorum re-extension
+# ---------------------------------------------------------------------------
+
+def test_diurnal_availability_wraps_at_period_boundary():
+    """The sinusoidal trace is periodic: rates at round r and r + period
+    agree, including across the 'midnight' boundary where the round index
+    crosses a period multiple."""
+    x, y = _tiny_data()
+    pop = ClientPopulation(x, y, 1000, seed=3, avail_period=48)
+    for cid in (0, 7, 999):
+        for r in (0, 13, 47):            # 47 -> 95 crosses the boundary
+            assert pop.availability_rate(cid, r) == pytest.approx(
+                pop.availability_rate(cid, r + pop.avail_period), abs=1e-12)
+    # planning at rounds period-1, period, period+1 stays well-formed
+    sched = CohortScheduler(pop, cohort_size=4, seed=9)
+    for r in (47, 48, 49):
+        plan = sched.plan_round(r, n_units=4, spry_seed=0)
+        assert len(plan.client_ids) == len(set(plan.client_ids.tolist()))
+        assert plan.keep.any()
+
+
+def test_empty_availability_window_falls_back_to_sequential_fill():
+    """When every probe comes back unavailable (a dead window), selection
+    must still return a full, duplicate-free cohort instead of spinning or
+    under-filling."""
+    x, y = _tiny_data()
+    pop = ClientPopulation(x, y, 64, seed=3)
+    pop.available = lambda cid, r: False        # dead window
+    sched = CohortScheduler(pop, cohort_size=4, over_select=1.25, seed=9,
+                            max_probe=32)
+    plan = sched.plan_round(0, n_units=4, spry_seed=0)
+    assert len(plan.client_ids) == 5            # ceil(4 * 1.25)
+    assert len(set(plan.client_ids.tolist())) == 5
+    assert plan.keep.any()                      # never lose a whole round
+
+
+def test_requorum_pool_exhausted_skips_round():
+    """Quorum above what the cohort can ever supply: re-extension drains
+    the whole pool, the round is skipped (NaN metrics), the model is
+    untouched, and the round index still advances."""
+    cfg, sc, state, batch = _setup("roberta-large-lora", M=4)
+    x, y = _tiny_data(n=512)
+    x, y = x % cfg.vocab, y % cfg.n_classes
+    pop = ClientPopulation(x, y, 1000, seed=0)
+    sched = CohortScheduler(pop, cohort_size=4, over_select=1.0,
+                            deadline=1e-9, seed=0)
+    eng = FederationEngine(cfg, sc, comm_mode="per_epoch", quorum=9)
+    plan = sched.plan_round(0, enumerate_units(state.peft).n_units, sc.seed)
+    keep, requorumed, met = eng._requorum_prejit(plan, 9)
+    assert keep.all() and not met        # every pool client activated
+    assert requorumed == 4 - int(plan.keep.sum())
+    bx, by = sched.round_batch(plan, 2)
+    new_state, metrics, report = eng.run_round(
+        state, plan, {"tokens": jnp.asarray(bx), "labels": jnp.asarray(by)})
+    assert report.round_skipped and not report.quorum_met
+    assert np.isnan(float(metrics["loss"]))
+    assert_trees_equal(new_state.peft, state.peft, "skip must not update")
+    assert int(new_state.round_idx) == int(state.round_idx) + 1
+
+
+def test_requorum_partial_reextension_meets_quorum():
+    """Quorum reachable only by re-activating deadline-cut stragglers: the
+    re-extension activates exactly the fastest stragglers, in latency
+    order, and the round proceeds."""
+    cfg, sc, state, _ = _setup("roberta-large-lora", M=4)
+    x, y = _tiny_data(n=512)
+    x, y = x % cfg.vocab, y % cfg.n_classes
+    pop = ClientPopulation(x, y, 1000, seed=0)
+    sched = CohortScheduler(pop, cohort_size=4, over_select=1.0,
+                            deadline=1e-9, seed=0)
+    eng = FederationEngine(cfg, sc, comm_mode="per_epoch", quorum=3)
+    plan = sched.plan_round(0, enumerate_units(state.peft).n_units, sc.seed)
+    survivors = int(plan.keep.sum())
+    keep, requorumed, met = eng._requorum_prejit(plan, 3)
+    assert met and int(keep.sum()) == 3
+    assert requorumed == 3 - survivors
+    # re-extension picked the FASTEST cut stragglers
+    cut = np.flatnonzero(~plan.keep)
+    activated = np.flatnonzero(keep & ~plan.keep)
+    fastest = cut[np.argsort(plan.latencies[cut], kind="stable")][:requorumed]
+    np.testing.assert_array_equal(np.sort(activated), np.sort(fastest))
